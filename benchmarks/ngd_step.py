@@ -1,0 +1,50 @@
+"""End-to-end optimizer-step benchmark: NGD (Algorithm 1, per solver) vs
+AdamW on a reduced LM config — the trainer-level view of the paper's claim
+that the solve is cheap enough to use every step."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.launch.trainer import build_trainer
+
+
+def _bench_loop(step_fn, state, steps=5):
+    state, _ = step_fn(state, 0)                     # compile
+    jax.block_until_ready(jax.tree_util.tree_leaves(state["params"])[0])
+    t0 = time.perf_counter()
+    for s in range(1, steps + 1):
+        state, _ = step_fn(state, s)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state["params"])[0])
+    return (time.perf_counter() - t0) / steps
+
+
+def run(emit=print, batch=16, seq=64):
+    cfg = configs.get_smoke("llama3.2-3b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    times = {}
+    for name, solver in [("adamw", None), ("ngd_chol", "chol"),
+                         ("ngd_eigh", "eigh"), ("ngd_svd", "svd"),
+                         ("ngd_cg", "cg")]:
+        init_state, step_fn, *_ = build_trainer(
+            cfg, mesh=mesh,
+            optimizer_name="adamw" if solver is None else "ngd",
+            lr=1e-3, damping=1e-3, batch=batch, seq=seq, total_steps=10,
+            solver=solver or "chol")
+        t = _bench_loop(step_fn, init_state())
+        times[name] = t
+        emit(f"ngd_step/{name}_b{batch}_s{seq},{t * 1e6:.0f},")
+    emit(f"ngd_step/ngd_overhead_vs_adamw,,"
+         f"{times['ngd_chol'] / times['adamw']:.2f}x")
+    emit(f"ngd_step/chol_vs_eigh,,"
+         f"{times['ngd_eigh'] / times['ngd_chol']:.2f}x")
+    return times
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,116 @@
+"""Roofline report: reads the dry-run artifacts (artifacts/dryrun/*.json)
+and derives, per (arch × shape × mesh) cell:
+
+  compute    = HLO_FLOPs(per-dev) / peak_FLOP/s
+  memory     = HLO_bytes(per-dev) / HBM_bw
+  collective = collective_wire_bytes(per-dev) / link_bw
+  + dominant term, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), and the
+    MFU the step would reach if it ran exactly at its roofline bound.
+
+This is the §Roofline harness; EXPERIMENTS.md embeds its output.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import pathlib
+
+ART = pathlib.Path(os.environ.get("REPRO_ART", "artifacts")) / "dryrun"
+
+
+import re as _re
+
+_BASELINE = _re.compile(
+    r"__(?:single|multi)(?:__ngd)?\.json$")
+
+
+def load_cells(pattern="*.json", include_tagged=False):
+    """Baseline cells by default; hillclimb/tuned variants (``__hN`` /
+    ``__tuned`` tags) are reported in EXPERIMENTS.md §Perf, not here."""
+    cells = []
+    for f in sorted(glob.glob(str(ART / pattern))):
+        if not include_tagged and not _BASELINE.search(f):
+            continue
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def row(rec) -> dict:
+    r = rec["roofline"]
+    return {
+        "cell": f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+                + ("/ngd" if rec.get("optimizer") == "ngd" else ""),
+        "kind": rec["kind"],
+        "chips": rec["chips"],
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "t_compute": r["t_compute_s"],
+        "t_memory": r["t_memory_s"],
+        "t_collective": r["t_collective_s"],
+        "dominant": r["dominant"],
+        "bound_s": r["bound_s"],
+        "useful_ratio": r.get("useful_flops_ratio", float("nan")),
+        "mfu_at_bound": r.get("mfu_at_bound", float("nan")),
+    }
+
+
+def run(emit=print, pattern="*.json"):
+    """Emits ``name,us_per_call,derived`` CSV (us = roofline bound)."""
+    cells = load_cells(pattern)
+    if not cells:
+        emit("roofline/no_artifacts,,run `python -m repro.launch.dryrun "
+             "--all --mesh both` first")
+        return []
+    rows = [row(c) for c in cells]
+    for r in rows:
+        emit(f"roofline/{r['cell']},{r['bound_s'] * 1e6:.0f},"
+             f"dom={r['dominant']} mem={r['peak_gib']:.2f}GiB "
+             f"useful={r['useful_ratio']:.3f} mfu@bound={r['mfu_at_bound']:.3f}")
+    worst = max((r for r in rows if r["kind"] == "train"),
+                key=lambda r: r["bound_s"], default=None)
+    if worst:
+        emit(f"roofline/worst_train_cell,,{worst['cell']} "
+             f"bound={worst['bound_s']:.2f}s")
+    over = [r for r in rows if r["peak_gib"] > 16.0]
+    emit(f"roofline/cells_over_16GiB_baseline,,{len(over)}"
+         + (" (" + "; ".join(r["cell"] for r in over) + ")" if over else ""))
+
+    # tuned (beyond-paper) variant summary — EXPERIMENTS.md §Perf
+    tuned = load_cells("*__tuned.json", include_tagged=True)
+    if tuned:
+        base = {(c["arch"], c["shape"], c["mesh"], c["optimizer"]):
+                c["roofline"]["bound_s"] for c in cells}
+        gains = []
+        for t in tuned:
+            k = (t["arch"], t["shape"], t["mesh"], t["optimizer"])
+            if k in base and t["roofline"]["bound_s"] > 0:
+                gains.append(base[k] / t["roofline"]["bound_s"])
+        if gains:
+            import statistics
+            over_t = [t for t in tuned
+                      if t["memory"]["peak_bytes"] > 16 * 2**30]
+            emit(f"roofline/tuned_geomean_gain,,"
+                 f"{statistics.geometric_mean(gains):.2f}x over "
+                 f"{len(gains)} cells")
+            emit(f"roofline/cells_over_16GiB_tuned,,{len(over_t)}")
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| cell | chips | peak GiB | compute s | memory s | collective s "
+           "| dominant | useful ratio | MFU@bound |\n|" + "---|" * 9)
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['cell']} | {r['chips']} | {r['peak_gib']:.2f} "
+            f"| {r['t_compute']:.4f} | {r['t_memory']:.4f} "
+            f"| {r['t_collective']:.4f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.3f} | {r['mfu_at_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print()
+    print(markdown_table(rows))

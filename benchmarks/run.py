@@ -1,0 +1,24 @@
+"""Benchmark orchestrator. One section per paper table/figure plus the
+framework-level harnesses. Prints ``name,us_per_call,derived`` CSV."""
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    print("name,us_per_call,derived")
+
+    from benchmarks import table1_solvers
+    table1_solvers.run(full=full)
+
+    from benchmarks import kernels
+    kernels.run()
+
+    from benchmarks import ngd_step
+    ngd_step.run()
+
+    from benchmarks import roofline
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

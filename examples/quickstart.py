@@ -1,0 +1,30 @@
+"""Quickstart: the paper's Algorithm 1 in five lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Solves (SᵀS + λI)x = v for m ≫ n without ever forming the m×m Fisher
+matrix, checks the residual, and compares against the two SVD baselines.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chol_solve, eigh_solve, svd_solve, residual
+
+n, m, lam = 512, 100_000, 1e-2   # κ(F) ≈ ‖S‖²/λ ≈ 2e4 → fp32 residual ~1e-3
+rng = np.random.default_rng(0)
+S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(n), jnp.float32)
+v = jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+
+for name, solver in [("chol (Algorithm 1)", chol_solve),
+                     ("eigh (Appendix C)", eigh_solve),
+                     ("svd  (Appendix C)", svd_solve)]:
+    fn = jax.jit(lambda S, v, _f=solver: _f(S, v, lam))
+    x = jax.block_until_ready(fn(S, v))          # compile + run
+    t0 = time.perf_counter()
+    x = jax.block_until_ready(fn(S, v))
+    dt = time.perf_counter() - t0
+    print(f"{name:20s} {dt * 1e3:8.1f} ms   "
+          f"relative residual {float(residual(S, v, x, lam)):.2e}")

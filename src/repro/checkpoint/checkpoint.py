@@ -1,0 +1,125 @@
+"""Checkpointing: atomic, resumable, elastic.
+
+Layout (one directory per step)::
+
+    <dir>/step_000120/
+        MANIFEST.json        # treedef, leaf paths, shapes/dtypes, metadata
+        leaf_00000.npy ...   # one .npy per leaf
+    <dir>/step_000120.tmp/   # staging dir — renamed atomically when complete
+
+* **Atomicity** — writes go to ``.tmp`` and are renamed only after fsync;
+  a crash mid-write never corrupts the latest checkpoint.
+* **Keep-last-k** — older steps are pruned after a successful save.
+* **Elastic reshard** — ``restore`` takes target shardings; leaves are
+  ``device_put`` with the *new* mesh's NamedShardings, so a checkpoint
+  saved on mesh A restores onto mesh B (different device count/topology)
+  with no extra machinery. (At 1000+ nodes each host would write its own
+  shard files; the manifest format already records per-leaf shapes so that
+  extension is additive.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "all_steps"]
+
+
+def _leaf_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir, step: int, tree, *, metadata: Optional[dict] = None,
+         keep: int = 3) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:09d}"
+    tmp = ckpt_dir / f"step_{step:09d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves, treedef = _leaf_paths(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "metadata": metadata or {},
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_str = str(arr.dtype)
+        if dtype_str == "bfloat16":      # numpy can't round-trip ml_dtypes
+            np.save(tmp / f"leaf_{i:05d}.npy", arr.view(np.uint16))
+        else:
+            np.save(tmp / f"leaf_{i:05d}.npy", arr)
+        manifest["leaves"].append(
+            {"shape": list(arr.shape), "dtype": dtype_str})
+    with open(tmp / "MANIFEST.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+
+    # prune
+    steps = all_steps(ckpt_dir)
+    for old in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{old:09d}", ignore_errors=True)
+    return final
+
+
+def all_steps(ckpt_dir) -> list[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    out = []
+    for p in ckpt_dir.iterdir():
+        if p.is_dir() and p.name.startswith("step_") \
+                and not p.name.endswith(".tmp") \
+                and (p / "MANIFEST.json").exists():
+            out.append(int(p.name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, step: int, like, *, shardings=None):
+    """Restore into the structure of ``like`` (pytree of arrays or SDS).
+
+    ``shardings``: optional pytree of NamedShardings (same structure) — the
+    elastic-reshard path: leaves are placed directly with the target mesh's
+    shardings regardless of the mesh the checkpoint was saved under.
+    Returns (tree, metadata).
+    """
+    path = pathlib.Path(ckpt_dir) / f"step_{step:09d}"
+    manifest = json.loads((path / "MANIFEST.json").read_text())
+    leaves_like, treedef = _leaf_paths(like)
+    assert manifest["n_leaves"] == len(leaves_like), \
+        (manifest["n_leaves"], len(leaves_like))
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_like))
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves_like, shard_leaves)):
+        arr = np.load(path / f"leaf_{i:05d}.npy")
+        expect = manifest["leaves"][i]
+        if expect["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        assert list(arr.shape) == expect["shape"], (arr.shape, expect)
+        arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]

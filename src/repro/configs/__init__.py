@@ -1,0 +1,61 @@
+"""Per-architecture configs (--arch <id>) + the paper's own workloads."""
+import importlib
+
+ARCHS = {
+    "whisper-base": "repro.configs.whisper_base",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "llama3.2-3b": "repro.configs.llama32_3b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b",
+    "jamba-v0.1-52b": "repro.configs.jamba_52b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+}
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def get_config(name: str):
+    return importlib.import_module(ARCHS[name]).CONFIG
+
+
+def get_smoke(name: str):
+    return importlib.import_module(ARCHS[name]).SMOKE
+
+
+def get_tuned(name: str, kind: str = "train"):
+    """CONFIG + the §Perf-confirmed beyond-paper levers (EXPERIMENTS.md),
+    per workload ``kind`` (production deploys separate train/serve configs):
+
+    * attention archs: context-parallel attention + bf16 QK/PV — confirmed
+      for train/prefill on dense archs; REGRESSES MoE prefill (the seq
+      reshard fights the global dispatch), so MoE serve kinds keep the
+      baseline attention path
+    * SSM/hybrid archs: factored+bf16 SSD with DP/TP-pinned working set
+    * qwen3-moe-235b: remat=full (16 GiB fit with donated buffers)
+    * jamba: EP-over-data (E=16 == data-axis size)
+
+    Levers refuted during the hillclimb (fsdp_gather_weights,
+    moe_shard_constraints, gather_unembed, ep-over-data for 128-expert
+    models) are intentionally absent.
+    """
+    import dataclasses
+    cfg = get_config(name)
+    kw = {}
+    attn_ok = kind == "train" or cfg.family != "moe"
+    if attn_ok and (any(s.kind == "attn" for s in cfg.slots)
+                    or cfg.family in ("encdec", "audio")):
+        kw.update(attn_seq_shard=True, attn_bf16=True)
+    if any(s.kind == "mamba" for s in cfg.slots):
+        kw.update(ssd_factored=True, ssd_bf16=True, ssd_shard=True)
+    if name == "qwen3-moe-235b-a22b":
+        kw.update(remat="full")
+    if name == "jamba-v0.1-52b":
+        # E=16 experts == data-axis size: EP-over-data confirmed (§Perf);
+        # refuted for qwen's 128 experts.
+        kw.update(moe_ep_over_data=True)
+    return dataclasses.replace(cfg, **kw)

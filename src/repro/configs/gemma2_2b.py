@@ -1,0 +1,20 @@
+"""gemma2-2b [dense]: local/global alternating, logit softcaps.
+
+26L, d=2304, 8H (GQA kv=4, head_dim=256), d_ff=9216, vocab=256000
+[arXiv:2408.00118].
+"""
+from repro.models.config import BlockSlot, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b", family="dense",
+    n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=9216, vocab=256_000,
+    slots=(BlockSlot(window=4096), BlockSlot()),
+    rope_theta=10_000.0, attn_softcap=50.0, logit_softcap=30.0,
+    use_post_norm=True, scale_embed=True, tie_embeddings=True,
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+    vocab=128, slots=(BlockSlot(window=8), BlockSlot()),
+    dtype="float32", remat="none")

@@ -1,0 +1,34 @@
+"""The paper's own benchmark workloads (Table 1 / Fig. 1).
+
+(n, m) solver shapes with damping λ; these drive benchmarks/table1_solvers
+and the paper-scale solver dry-run in launch/dryrun.py.
+"""
+
+# (n, m) exactly as in Table 1
+TABLE1_SHAPES = [
+    (256, 100_000),
+    (512, 100_000),
+    (1024, 100_000),
+    (2048, 100_000),
+    (4096, 100_000),
+    (2048, 10_000),
+    (2048, 20_000),
+    (2048, 50_000),
+    (2048, 200_000),
+]
+
+# A100 milliseconds from Table 1 (chol / eigh / svda) — the reference the
+# scaling reproduction is checked against.
+TABLE1_TIMES_MS = {
+    (256, 100_000): (1.69, 5.18, 13.14),
+    (512, 100_000): (5.15, 14.64, 35.82),
+    (1024, 100_000): (17.28, 45.51, 126.65),
+    (2048, 100_000): (71.25, 178.27, 588.04),
+    (4096, 100_000): (295.20, 745.17, None),
+    (2048, 10_000): (11.27, 55.69, 453.27),
+    (2048, 20_000): (17.63, 69.49, 472.67),
+    (2048, 50_000): (37.67, 110.99, 519.34),
+    (2048, 200_000): (140.79, 314.47, 734.84),
+}
+
+DAMPING = 1e-3

@@ -1,0 +1,33 @@
+"""Core solver library — the paper's contribution (damped-NGD dual solve)."""
+from repro.core.solvers import (
+    SOLVERS,
+    center_scores,
+    chol_solve,
+    cg_solve,
+    direct_solve,
+    eigh_solve,
+    get_solver,
+    gram,
+    gram_chunked,
+    minsr_solve,
+    residual,
+    svd_solve,
+)
+from repro.core.distributed import (
+    make_sharded_solver,
+    sharded_chol_solve,
+    sharded_chol_solve_2d,
+)
+from repro.core.damping import (
+    ConstantDamping,
+    DampingState,
+    LevenbergMarquardtDamping,
+)
+
+__all__ = [
+    "SOLVERS", "center_scores", "chol_solve", "cg_solve", "direct_solve",
+    "eigh_solve", "get_solver", "gram", "gram_chunked", "minsr_solve",
+    "residual", "svd_solve", "make_sharded_solver", "sharded_chol_solve",
+    "sharded_chol_solve_2d", "ConstantDamping", "DampingState",
+    "LevenbergMarquardtDamping",
+]

@@ -1,0 +1,67 @@
+"""Damping (λ) schedules for natural-gradient descent.
+
+Two production policies:
+
+* ``ConstantDamping`` — the paper's setting (λ fixed per solve).
+* ``LevenbergMarquardtDamping`` — the classic trust-region adaptation
+  (paper §3 relates Eq. 1 to damped least squares / LM): grow λ when the
+  step fails to reduce the loss as predicted, shrink it when the quadratic
+  model is accurate. State is a single scalar carried through the train
+  step, so it jit-compiles cleanly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ConstantDamping", "LevenbergMarquardtDamping", "DampingState"]
+
+
+class DampingState(NamedTuple):
+    lam: jax.Array            # current λ
+    last_ratio: jax.Array     # last actual/predicted reduction ratio
+
+
+class ConstantDamping:
+    def __init__(self, lam: float):
+        self.lam0 = float(lam)
+
+    def init(self) -> DampingState:
+        return DampingState(jnp.asarray(self.lam0, jnp.float32),
+                            jnp.asarray(1.0, jnp.float32))
+
+    def update(self, state: DampingState, *, actual_reduction,
+               predicted_reduction) -> DampingState:
+        del actual_reduction, predicted_reduction
+        return state
+
+
+class LevenbergMarquardtDamping:
+    """λ ← λ·grow if ρ < ρ_bad;  λ ← λ·shrink if ρ > ρ_good.
+
+    ρ = actual_reduction / predicted_reduction, the trust-region gain ratio.
+    Clamped to [lam_min, lam_max]. All branches are ``jnp.where`` so the
+    policy is jit/scan-safe.
+    """
+
+    def __init__(self, lam: float, *, grow: float = 1.5, shrink: float = 0.9,
+                 rho_bad: float = 0.25, rho_good: float = 0.75,
+                 lam_min: float = 1e-8, lam_max: float = 1e4):
+        self.lam0, self.grow, self.shrink = float(lam), float(grow), float(shrink)
+        self.rho_bad, self.rho_good = float(rho_bad), float(rho_good)
+        self.lam_min, self.lam_max = float(lam_min), float(lam_max)
+
+    def init(self) -> DampingState:
+        return DampingState(jnp.asarray(self.lam0, jnp.float32),
+                            jnp.asarray(1.0, jnp.float32))
+
+    def update(self, state: DampingState, *, actual_reduction,
+               predicted_reduction) -> DampingState:
+        rho = actual_reduction / jnp.maximum(predicted_reduction, 1e-30)
+        lam = state.lam
+        lam = jnp.where(rho < self.rho_bad, lam * self.grow, lam)
+        lam = jnp.where(rho > self.rho_good, lam * self.shrink, lam)
+        lam = jnp.clip(lam, self.lam_min, self.lam_max)
+        return DampingState(lam, rho.astype(jnp.float32))

@@ -1,0 +1,343 @@
+"""Solvers for the damped natural-gradient linear system  (SᵀS + λI) x = v.
+
+This module is the paper's core contribution (Algorithm 1) plus every
+baseline it benchmarks against:
+
+* ``chol_solve``   — Algorithm 1 (Cholesky in the n-dimensional dual space).
+* ``eigh_solve``   — Appendix C "eigh": eigendecomposition of S·Sᵀ.
+* ``svd_solve``    — Appendix C "svda": thin SVD of S (XLA SVD on TPU).
+* ``cg_solve``     — matrix-free conjugate gradient (the iterative baseline
+  discussed in §3).
+* ``direct_solve`` — naive O(m³) solve of the m×m system (small-m oracle).
+* ``minsr_solve``  — RVB+23 ``x = Sᵀ(SSᵀ+λĨ)⁻¹f`` for the restricted case
+  ``v = Sᵀf`` (Appendix B equivalence).
+
+All solvers share the signature ``solve(S, v, damping, **kw) -> x`` where
+``S`` is the (n, m) score matrix with m ≫ n, ``v`` is an (m,) or (m, k)
+right-hand side. Complex stochastic-reconfiguration variants are handled
+per the paper's §3:
+
+* ``mode="complex"``   — Hermitian Fisher F = S†S; transposes become
+  conjugate-transposes throughout; x may be complex.
+* ``mode="real_part"`` — F = Re[S†S]; S is replaced by
+  ``concat([Re S, Im S])`` along the sample axis and the real algorithm
+  runs unchanged.
+* ``mode="real"``      — plain real algorithm (default for real S).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Literal, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+Mode = Literal["auto", "real", "complex", "real_part"]
+
+__all__ = [
+    "chol_solve",
+    "eigh_solve",
+    "svd_solve",
+    "cg_solve",
+    "direct_solve",
+    "minsr_solve",
+    "center_scores",
+    "gram",
+    "gram_chunked",
+    "SOLVERS",
+    "get_solver",
+    "SolverStats",
+]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _resolve_mode(S: jax.Array, mode: Mode) -> str:
+    if mode == "auto":
+        return "complex" if jnp.iscomplexobj(S) else "real"
+    return mode
+
+
+def _realify(S: jax.Array, v: jax.Array, mode: str):
+    """Apply the paper's real-part SR transform: S ← [Re S; Im S]."""
+    if mode == "real_part" and jnp.iscomplexobj(S):
+        S = jnp.concatenate([jnp.real(S), jnp.imag(S)], axis=0)
+        v = jnp.real(v) if jnp.iscomplexobj(v) else v
+        return S, v, "real"
+    return S, v, mode
+
+
+def _ct(A: jax.Array, mode: str) -> jax.Array:
+    """Transpose, or conjugate-transpose in complex mode."""
+    return A.conj().T if mode == "complex" else A.T
+
+
+def _promote(S: jax.Array, v: jax.Array):
+    """Upcast sub-fp32 inputs for the dual-space math (Cholesky/eigh/SVD
+    have no bf16 kernels; the convert fuses into the Gram matmul, so S's
+    HBM traffic stays bf16)."""
+    tgt = jnp.promote_types(S.dtype, jnp.float32)
+    return S.astype(tgt), v.astype(jnp.promote_types(v.dtype, tgt))
+
+
+def center_scores(O: jax.Array, *, weights: Optional[jax.Array] = None) -> jax.Array:
+    """SR centering: S = (O − Ō)/√n  (paper §3).
+
+    ``O[i, j] = ∂ log ψ(x_i)/∂θ_j``; optional per-sample probability weights
+    (must sum to 1) for weighted estimators.
+    """
+    n = O.shape[0]
+    if weights is None:
+        mean = jnp.mean(O, axis=0, keepdims=True)
+        return (O - mean) / jnp.sqrt(n).astype(O.real.dtype)
+    mean = jnp.sum(weights[:, None] * O, axis=0, keepdims=True)
+    return jnp.sqrt(weights)[:, None] * (O - mean)
+
+
+def gram(S: jax.Array, *, mode: str = "real",
+         precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """W = S·Sᵀ (or S·S† in complex mode), fp32/fp64 accumulation."""
+    return jnp.matmul(S, _ct(S, mode), precision=precision)
+
+
+def gram_chunked(S: jax.Array, chunk: int, *, mode: str = "real",
+                 precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """W = S·Sᵀ accumulated over parameter-axis chunks of width ``chunk``.
+
+    Bounds the transient memory of mixed-precision upcasts when S is stored
+    in bf16 but accumulated in fp32: peak extra memory is O(n·chunk), not
+    O(n·m). The loop is a ``lax.scan`` so the HLO stays O(1) in m.
+    """
+    n, m = S.shape
+    nchunks = -(-m // chunk)
+    pad = nchunks * chunk - m
+    if pad:
+        S = jnp.pad(S, ((0, 0), (0, pad)))
+    Sb = S.reshape(n, nchunks, chunk).transpose(1, 0, 2)  # (nchunks, n, chunk)
+
+    acc_dtype = jnp.promote_types(S.dtype, jnp.float32)
+
+    def body(acc, Sc):
+        Sc = Sc.astype(acc_dtype)
+        return acc + jnp.matmul(Sc, _ct(Sc, mode), precision=precision), None
+
+    W0 = jnp.zeros((n, n), dtype=acc_dtype if mode != "complex"
+                   else jnp.promote_types(S.dtype, jnp.complex64))
+    W, _ = jax.lax.scan(body, W0, Sb)
+    return W
+
+
+class SolverStats(NamedTuple):
+    """Optional diagnostics returned by solvers with ``return_stats=True``."""
+    residual_norm: jax.Array      # ‖(SᵀS+λI)x − v‖ / ‖v‖
+    gram_cond_proxy: jax.Array    # max/min diagonal of W (cheap cond proxy)
+
+
+def residual(S: jax.Array, v: jax.Array, x: jax.Array, damping,
+             *, mode: str = "real") -> jax.Array:
+    """Relative residual of the damped system — used by tests & benchmarks."""
+    Ax = _ct(S, mode) @ (S @ x) + damping * x
+    return jnp.linalg.norm(Ax - v) / jnp.linalg.norm(v)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — the paper's contribution
+# ---------------------------------------------------------------------------
+
+def chol_solve(S: jax.Array, v: jax.Array, damping, *,
+               mode: Mode = "auto",
+               gram_chunk: Optional[int] = None,
+               gram_fn: Optional[Callable] = None,
+               jitter: float = 0.0,
+               precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """Algorithm 1: solve (SᵀS + λI) x = v via Cholesky of the n×n Gram.
+
+    Steps (with the paper's line-4 inlining note applied — Q = L⁻¹S is never
+    materialized; the apply is two triangular solves on n-vectors):
+
+        W = S Sᵀ + λ Ĩ
+        L = chol(W)
+        u = S v
+        w = L⁻ᵀ (L⁻¹ u)
+        x = (v − Sᵀ w) / λ
+
+    Args:
+      S: (n, m) score matrix, real or complex.
+      v: (m,) or (m, k) right-hand side(s).
+      damping: λ > 0.
+      mode: "auto" | "real" | "complex" | "real_part" (see module docstring).
+      gram_chunk: if set, accumulate the Gram matrix in parameter chunks.
+      gram_fn: optional override (e.g. the Pallas ``gram`` kernel).
+      jitter: extra diagonal added to W for numerical safety (0 = faithful).
+    """
+    mode = _resolve_mode(S, mode)
+    S, v, mode = _realify(S, v, mode)
+    S, v = _promote(S, v)
+    lam = jnp.asarray(damping, dtype=S.real.dtype)
+
+    n = S.shape[0]
+    if gram_fn is not None:
+        W = gram_fn(S)
+    elif gram_chunk is not None:
+        W = gram_chunked(S, gram_chunk, mode=mode, precision=precision)
+    else:
+        W = gram(S, mode=mode, precision=precision)
+    W = W + (lam + jitter) * jnp.eye(n, dtype=W.dtype)
+
+    L = jnp.linalg.cholesky(W)
+    u = jnp.matmul(S, v, precision=precision)                # (n,) or (n,k)
+    w = solve_triangular(L, u, lower=True)
+    w = solve_triangular(_ct(L, mode), w, lower=False)
+    x = (v - jnp.matmul(_ct(S, mode), w, precision=precision)) / lam
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Appendix C baselines
+# ---------------------------------------------------------------------------
+
+def eigh_solve(S: jax.Array, v: jax.Array, damping, *,
+               mode: Mode = "auto",
+               eps: float = 1e-12,
+               precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """Appendix C "eigh": SVD of S via eigendecomposition of S·Sᵀ.
+
+        S Sᵀ = U Σ² Uᵀ ;  V = Sᵀ U Σ⁻¹
+        x = V (Σ² + λ)⁻¹ Vᵀ v + (v − V Vᵀ v)/λ
+
+    Previously the fastest method in the authors' experience; our reference
+    competitor. Small/negative eigenvalues are clamped at ``eps`` before the
+    inverse square root (rank-deficiency guard), matching standard practice.
+    """
+    mode = _resolve_mode(S, mode)
+    S, v, mode = _realify(S, v, mode)
+    S, v = _promote(S, v)
+    lam = jnp.asarray(damping, dtype=S.real.dtype)
+
+    W = gram(S, mode=mode, precision=precision)
+    sig2, U = jnp.linalg.eigh(W)                       # ascending eigenvalues
+    sig2 = jnp.maximum(sig2, eps)
+    # Vᵀ v = Σ⁻¹ Uᵀ S v  — computed right-to-left, never forming V (n×m… m×n).
+    u = jnp.matmul(S, v, precision=precision)          # (n,) or (n,k)
+    Utu = _ct(U, mode) @ u
+    Vt_v = Utu / _bcast(jnp.sqrt(sig2), Utu)
+    core = Vt_v / _bcast(sig2 + lam, Vt_v)
+    # x = Sᵀ U Σ⁻¹ core + (v − Sᵀ U Σ⁻¹ Vt_v)/λ
+    def back(y):
+        return jnp.matmul(_ct(S, mode), U @ (y / _bcast(jnp.sqrt(sig2), y)),
+                          precision=precision)
+    return back(core) + (v - back(Vt_v)) / lam
+
+
+def _bcast(d: jax.Array, like: jax.Array) -> jax.Array:
+    """Broadcast an (n,) vector against (n,) or (n, k) operands."""
+    return d if like.ndim == 1 else d[:, None]
+
+
+def svd_solve(S: jax.Array, v: jax.Array, damping, *,
+              mode: Mode = "auto",
+              precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """Appendix C "svda": direct thin SVD of S (Eq. 5).
+
+    The CUDA ``gesvda`` kernel has no TPU analogue; XLA's SVD is used. This
+    is the slowest method in the paper's Table 1 and serves as the
+    correctness-anchor baseline.
+    """
+    mode = _resolve_mode(S, mode)
+    S, v, mode = _realify(S, v, mode)
+    S, v = _promote(S, v)
+    lam = jnp.asarray(damping, dtype=S.real.dtype)
+
+    # S = U Σ Vᵀ, thin: U (n,n), s (n,), Vt (n,m)
+    U, s, Vt = jnp.linalg.svd(S, full_matrices=False)
+    Vt_v = jnp.matmul(Vt, v, precision=precision)
+    core = Vt_v / _bcast(s * s + lam, Vt_v)
+    V = _ct(Vt, mode)
+    return jnp.matmul(V, core, precision=precision) + \
+        (v - jnp.matmul(V, Vt_v, precision=precision)) / lam
+
+
+# ---------------------------------------------------------------------------
+# iterative + naive baselines (paper §3 discussion)
+# ---------------------------------------------------------------------------
+
+def cg_solve(S: jax.Array, v: jax.Array, damping, *,
+             mode: Mode = "auto",
+             tol: float = 1e-8,
+             maxiter: Optional[int] = None,
+             precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """Matrix-free CG on (SᵀS + λI)x = v.
+
+    O(nm) per iteration; iteration count blows up with conditioning — the
+    paper's §3 argument for preferring the direct dual solve.
+    """
+    mode = _resolve_mode(S, mode)
+    S, v, mode = _realify(S, v, mode)
+    S, v = _promote(S, v)
+    lam = jnp.asarray(damping, dtype=S.real.dtype)
+
+    def matvec(p):
+        return jnp.matmul(_ct(S, mode), jnp.matmul(S, p, precision=precision),
+                          precision=precision) + lam * p
+
+    x, _ = jax.scipy.sparse.linalg.cg(matvec, v, tol=tol, maxiter=maxiter)
+    return x
+
+
+def direct_solve(S: jax.Array, v: jax.Array, damping, *,
+                 mode: Mode = "auto",
+                 precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """Naive O(m³): form the m×m damped Fisher and solve. Oracle for tests."""
+    mode = _resolve_mode(S, mode)
+    S, v, mode = _realify(S, v, mode)
+    S, v = _promote(S, v)
+    lam = jnp.asarray(damping, dtype=S.real.dtype)
+    m = S.shape[1]
+    F = jnp.matmul(_ct(S, mode), S, precision=precision) \
+        + lam * jnp.eye(m, dtype=S.dtype)
+    return jnp.linalg.solve(F, v)
+
+
+def minsr_solve(S: jax.Array, f: jax.Array, damping, *,
+                mode: Mode = "auto",
+                precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """RVB+23 minSR:  x = Sᵀ (SSᵀ + λĨ)⁻¹ f,  valid only when v = Sᵀ f.
+
+    Appendix B proves this equals ``chol_solve(S, Sᵀf, λ)``; the test suite
+    checks that identity. Note the *restriction*: f lives in sample space, so
+    regularized losses (v ∉ row-space offsets) are not expressible — the
+    paper's motivating generality argument.
+    """
+    mode = _resolve_mode(S, mode)
+    S, f, mode = _realify(S, f, mode)
+    S, f = _promote(S, f)
+    lam = jnp.asarray(damping, dtype=S.real.dtype)
+    n = S.shape[0]
+    W = gram(S, mode=mode, precision=precision) + lam * jnp.eye(n, dtype=S.dtype)
+    L = jnp.linalg.cholesky(W)
+    w = solve_triangular(L, f, lower=True)
+    w = solve_triangular(_ct(L, mode), w, lower=False)
+    return jnp.matmul(_ct(S, mode), w, precision=precision)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+SOLVERS: dict[str, Callable] = {
+    "chol": chol_solve,
+    "eigh": eigh_solve,
+    "svd": svd_solve,
+    "cg": cg_solve,
+    "direct": direct_solve,
+}
+
+
+def get_solver(name: str) -> Callable:
+    try:
+        return SOLVERS[name]
+    except KeyError:
+        raise KeyError(f"unknown solver '{name}'; have {sorted(SOLVERS)}") from None

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, place, prefetch
+
+__all__ = ["SyntheticLM", "place", "prefetch"]

@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Kernels (each `<name>.py` has a ``pl.pallas_call`` with explicit BlockSpec
+VMEM tiling; ``ops.py`` holds the jit'd wrappers; ``ref.py`` the pure-jnp
+oracles):
+
+* ``gram``      — tall-skinny W = S·Sᵀ, the O(n²m) dominant term.
+* ``gram_sv``   — beyond-paper fusion (W, u) = (S·Sᵀ, S·v) in one pass.
+* ``ngd_apply`` — fused x = (v − Sᵀw)/λ second pass.
+* ``cholesky``  — blocked in-VMEM factorization (the paper's "chol" step).
+* ``flash_attention`` — causal/windowed GQA attention forward (the model
+  zoo's dominant compute op; online softmax in VMEM scratch).
+"""
+from repro.kernels.ops import (
+    chol_solve_fused,
+    cholesky,
+    flash_attention,
+    gram,
+    gram_sv,
+    ngd_apply,
+    on_tpu,
+)
+
+__all__ = ["chol_solve_fused", "cholesky", "flash_attention", "gram",
+           "gram_sv", "ngd_apply", "on_tpu"]

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: tall-skinny Gram matrix  W = S · Sᵀ.
+
+This is the paper's dominant cost term — O(n²·m) out of the total
+O(n²·m + n³) — and the op the A100 implementation hands to cuBLAS. On TPU
+we tile it for the MXU explicitly:
+
+* grid = (n/bn, n/bn, m/bk); the K-reduction (parameter axis, the ~10⁶-long
+  one) is the innermost, *sequential* grid dimension, so the (bn, bn) fp32
+  accumulator tile is revisited in VMEM across the whole reduction and HBM
+  sees exactly one read of S per output row-band and one write of W.
+* both operands are row-bands of the *same* matrix S (blocks (i,k) and
+  (j,k)) — the contraction is `dot_general` over the lane axis with
+  ``preferred_element_type=float32``, the MXU's native bf16×bf16→fp32 mode.
+* block sizes default to (bn=128 sublane-aligned, bk=512 lane-aligned);
+  callers may tune. Inputs are padded in ``ops.py`` so every block is full.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gram_pallas"]
+
+
+def _gram_kernel(s_i_ref, s_j_ref, w_ref):
+    """One (bn, bn) output tile; accumulates over the k (parameter) axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    a = s_i_ref[...]
+    b = s_j_ref[...]
+    w_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def gram_pallas(S: jax.Array, *, bn: int = 128, bk: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """W = S @ S.T with fp32 accumulation. S must be padded to (bn, bk) tiles.
+
+    Returns (n, n) float32.
+    """
+    n, m = S.shape
+    assert n % bn == 0 and m % bk == 0, (n, m, bn, bk)
+    grid = (n // bn, n // bn, m // bk)
+
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="gram_ssT",
+    )(S, S)

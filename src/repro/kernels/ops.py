@@ -1,0 +1,163 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+* pad inputs to tile multiples (zero-padding is exact for all these ops),
+* pick block sizes,
+* route to the kernel on TPU, to ``interpret=True`` Pallas on CPU when
+  explicitly requested (tests), and to the jnp reference otherwise,
+* compose the kernels into the full Algorithm-1 solver
+  (``chol_solve_fused``), the production entry point used by the NGD
+  optimizer when kernels are enabled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+from repro.kernels import ref
+from repro.kernels.cholesky import MAX_SINGLE_BLOCK_N, cholesky_pallas
+from repro.kernels.gram import gram_pallas
+from repro.kernels.gram_sv import gram_sv_pallas
+from repro.kernels.ngd_apply import ngd_apply_pallas
+
+__all__ = ["gram", "gram_sv", "ngd_apply", "cholesky", "chol_solve_fused",
+           "flash_attention", "on_tpu", "pad_to"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_kernels(mode: Optional[str]) -> bool:
+    """mode: None → auto (TPU only); 'interpret' → yes via interpreter;
+    'kernel' → yes (compiled); 'ref' → no."""
+    if mode == "ref":
+        return False
+    if mode in ("interpret", "kernel"):
+        return True
+    return on_tpu()
+
+
+def pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    """Zero-pad trailing dims of x up to multiples of ``mults``."""
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        pads.append((0, (-dim) % mult))
+    if not any(p[1] for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def _pick_blocks(n: int, m: int) -> tuple[int, int]:
+    bn = min(128, max(8, n))            # sublane-aligned output tile
+    bk = 512 if m >= 512 else max(128, m)
+    return bn, bk
+
+
+def gram(S: jax.Array, *, mode: Optional[str] = None) -> jax.Array:
+    """W = S@S.T (fp32) via the Pallas kernel (padded), else the reference."""
+    if not _use_kernels(mode):
+        return ref.gram_ref(S)
+    n, m = S.shape
+    bn, bk = _pick_blocks(n, m)
+    Sp = pad_to(S, (bn, bk))
+    W = gram_pallas(Sp, bn=bn, bk=bk, interpret=(mode == "interpret"))
+    return W[:n, :n]
+
+
+def gram_sv(S: jax.Array, v: jax.Array, *, mode: Optional[str] = None):
+    """(W, u) = (S@S.T, S@v) fused single pass."""
+    if not _use_kernels(mode):
+        return ref.gram_sv_ref(S, v)
+    n, m = S.shape
+    bn, bk = _pick_blocks(n, m)
+    Sp = pad_to(S, (bn, bk))
+    vp = pad_to(v.reshape(m), (bk,))
+    W, u = gram_sv_pallas(Sp, vp, bn=bn, bk=bk,
+                          interpret=(mode == "interpret"))
+    return W[:n, :n], u[:n]
+
+
+def ngd_apply(S: jax.Array, w: jax.Array, v: jax.Array, lam,
+              *, mode: Optional[str] = None) -> jax.Array:
+    """x = (v - S.T@w)/lam."""
+    if not _use_kernels(mode):
+        return ref.ngd_apply_ref(S, w, v, lam)
+    n, m = S.shape
+    _, bk = _pick_blocks(n, m)
+    Sp = pad_to(S, (1, bk))
+    vp = pad_to(v.reshape(m), (bk,))
+    x = ngd_apply_pallas(Sp, w, vp, lam, bk=bk,
+                         interpret=(mode == "interpret"))
+    return x[:m]
+
+
+def cholesky(W: jax.Array, *, mode: Optional[str] = None,
+             panel: int = 16) -> jax.Array:
+    """L = chol(W). Pallas single-block kernel for n ≤ MAX_SINGLE_BLOCK_N
+    (padded with an identity diagonal to a panel multiple), XLA beyond."""
+    n = W.shape[0]
+    if not _use_kernels(mode) or n > MAX_SINGLE_BLOCK_N:
+        return ref.cholesky_ref(W)
+    npad = (-n) % panel
+    if npad:
+        Wp = jnp.zeros((n + npad, n + npad), W.dtype)
+        Wp = Wp.at[:n, :n].set(W)
+        Wp = Wp.at[jnp.arange(n, n + npad), jnp.arange(n, n + npad)].set(1.0)
+    else:
+        Wp = W
+    L = cholesky_pallas(Wp, panel=panel, interpret=(mode == "interpret"))
+    return L[:n, :n]
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    mode: Optional[str] = None, bq=128, bk=128):
+    """Model-layout adapter for the Pallas flash-attention kernel.
+
+    q: (B, Tq, H, hd); k, v: (B, Tk, KH, hd), H % KH == 0. Routes to the
+    kernel on TPU (or interpret mode); otherwise to the pure-jnp blockwise
+    implementation in models/layers (identical math).
+    """
+    B, Tq, H, hd = q.shape
+    _, Tk, KH, _ = k.shape
+    if not _use_kernels(mode):
+        from repro.models.layers import flash_attention as ref_attn
+        return ref_attn(q, k, v, causal=causal, window=window, scale=scale)
+
+    from repro.kernels.flash_attention import flash_attention_pallas
+    g = H // KH
+    bq_, bk_ = min(bq, Tq), min(bk, Tk)
+    pad_q = (-Tq) % bq_
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, hd)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    assert Tk % bk_ == 0, (Tk, bk_)      # KV padding would pollute softmax
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KH, Tk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KH, Tk, hd)
+    o = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                               scale=scale, group=g, bq=bq_, bk=bk_,
+                               interpret=(mode == "interpret"))
+    o = o[:, :Tq].reshape(B, H, Tq, hd).transpose(0, 2, 1, 3)
+    return o
+
+
+def chol_solve_fused(S: jax.Array, v: jax.Array, damping,
+                     *, mode: Optional[str] = None) -> jax.Array:
+    """Algorithm 1 composed entirely from the Pallas kernels:
+
+        (W, u) = gram_sv(S, v)          # fused single pass over S
+        L      = cholesky(W + λĨ)       # in-VMEM blocked factorization
+        w      = L⁻ᵀ L⁻¹ u              # XLA triangular solves (n×n, tiny)
+        x      = ngd_apply(S, w, v, λ)  # fused second pass over S
+    """
+    n = S.shape[0]
+    lam = jnp.asarray(damping, jnp.float32)
+    W, u = gram_sv(S, v, mode=mode)
+    L = cholesky(W + lam * jnp.eye(n, dtype=W.dtype), mode=mode)
+    w = solve_triangular(L, u, lower=True)
+    w = solve_triangular(L.T, w, lower=False)
+    return ngd_apply(S, w, v, lam, mode=mode)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Used by tests (``assert_allclose`` sweeps over shapes/dtypes) and as the
+CPU execution path of ``ops.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gram_ref", "gram_sv_ref", "ngd_apply_ref", "cholesky_ref",
+           "chol_solve_ref"]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+def gram_ref(S: jax.Array) -> jax.Array:
+    """W = S @ S.T in fp32."""
+    S32 = S.astype(jnp.float32)
+    return jnp.matmul(S32, S32.T, precision=_HI)
+
+
+def gram_sv_ref(S: jax.Array, v: jax.Array):
+    """(W, u) = (S@S.T, S@v) in fp32."""
+    S32 = S.astype(jnp.float32)
+    return (jnp.matmul(S32, S32.T, precision=_HI),
+            jnp.matmul(S32, v.astype(jnp.float32), precision=_HI))
+
+
+def ngd_apply_ref(S: jax.Array, w: jax.Array, v: jax.Array, lam) -> jax.Array:
+    """x = (v - S.T @ w) / lam in fp32."""
+    S32 = S.astype(jnp.float32)
+    return (v.astype(jnp.float32)
+            - jnp.matmul(S32.T, w.astype(jnp.float32), precision=_HI)
+            ) / jnp.asarray(lam, jnp.float32)
+
+
+def cholesky_ref(W: jax.Array) -> jax.Array:
+    return jnp.linalg.cholesky(W.astype(jnp.float32))
+
+
+def chol_solve_ref(S: jax.Array, v: jax.Array, lam) -> jax.Array:
+    """Full Algorithm 1 in fp32 — oracle for the kernel-composed solver."""
+    from jax.scipy.linalg import solve_triangular
+    W, u = gram_sv_ref(S, v)
+    n = W.shape[0]
+    L = jnp.linalg.cholesky(W + jnp.asarray(lam, jnp.float32) * jnp.eye(n))
+    w = solve_triangular(L, u, lower=True)
+    w = solve_triangular(L.T, w, lower=False)
+    return ngd_apply_ref(S, w, v, lam)

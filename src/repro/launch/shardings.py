@@ -1,0 +1,187 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs (MaxText-style
+logical rules, expressed as path-pattern matching over the param pytree).
+
+Layout summary (mesh axes: optional "pod", "data", "model"):
+
+* batch           → ("pod", "data")        (DP across pods composes with DP)
+* attn heads / mlp hidden / experts / vocab → "model"   (TP / EP)
+* d_model dim of big weights → "data"      (FSDP / ZeRO-3, opt-in)
+* decode KV cache → batch over DP, head_dim over "model" (kv-head counts
+  are below the model-axis size on every assigned arch, so head_dim is the
+  clean TP axis for cache tensors)
+* norms / scalars → replicated
+
+FSDP is enabled per-arch ("auto": on when the param count exceeds 1B —
+below that the all-gather latency isn't worth the memory).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import DATA, MODEL, dp_axes
+
+__all__ = ["param_shardings", "input_shardings", "cache_shardings",
+           "opt_state_shardings", "batch_spec", "tree_size"]
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def _key_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+# (regex over path, spec builder taking (shape, fsdp_axis) -> P)
+# Stacked block leaves carry a leading repeat axis (never sharded).
+_PARAM_RULES = [
+    # attention projections
+    (r"(wq|wk|wv|xq|xk|xv)$", lambda s, f: P(*_lead(s, 2), f, MODEL)),
+    (r"(wo|xo)$",             lambda s, f: P(*_lead(s, 2), MODEL, f)),
+    # dense mlp
+    (r"w_(gate|up)$",         lambda s, f:
+        P(*_lead(s, 2), f, MODEL) if len(s) <= 3 else
+        P(*_lead(s, 3), MODEL, f, None)),          # (R,E,D,F): experts→model
+    (r"w_down$",              lambda s, f:
+        P(*_lead(s, 2), MODEL, f) if len(s) <= 3 else
+        P(*_lead(s, 3), MODEL, None, f)),          # (R,E,F,D)
+    (r"router$",              lambda s, f: P(*_lead(s, 2), f, None)),
+    # mamba
+    (r"in_proj$",             lambda s, f: P(*_lead(s, 2), f, MODEL)),
+    (r"out_proj$",            lambda s, f: P(*_lead(s, 2), MODEL, f)),
+    (r"conv_w$",              lambda s, f: P(*_lead(s, 2), None, MODEL)),
+    (r"(A_log|D|dt_bias)$",   lambda s, f: P(*_lead(s, 1), MODEL)),
+    (r"norm_g$",              lambda s, f: P(*_lead(s, 1), MODEL)),
+    # embeddings
+    (r"pos_embed$",           lambda s, f: P()),
+    (r"(^|/)embed$",          lambda s, f: P(MODEL, f)),
+    (r"head$",                lambda s, f: P(f, MODEL)),
+]
+
+
+def _lead(shape, trailing: int):
+    """None specs for leading (stacked-repeat) axes."""
+    return (None,) * (len(shape) - trailing)
+
+
+def param_pspec(path: str, shape, *, fsdp: bool,
+                ep_over_data: bool = False) -> P:
+    f = DATA if fsdp else None
+    if ep_over_data and len(shape) == 4 and re.search(r"w_(gate|up|down)$",
+                                                      path):
+        # EP-over-data expert layout (§Perf): expert axis → data,
+        # per-expert hidden → model, d_model unsharded. Expert einsums then
+        # contract locally (no per-layer activation all-reduce over data —
+        # the failure mode of FSDP-on-the-contracting-dim); dispatch
+        # becomes a true all-to-all over the data axis.
+        return P(None, DATA, None, MODEL) if path.endswith(("gate", "up")) \
+            else P(None, DATA, None, MODEL)
+    for pat, rule in _PARAM_RULES:
+        if re.search(pat, path):
+            return rule(shape, f)
+    return P()          # norms, biases, scalars → replicated
+
+
+def param_shardings(param_tree, mesh: Mesh, *, fsdp="auto",
+                    ep_over_data: bool = False):
+    """NamedSharding pytree for a parameter pytree (arrays or SDS)."""
+    if fsdp == "auto":
+        fsdp = tree_size(param_tree) > 1_000_000_000
+    def one(kp, x):
+        spec = param_pspec(_key_str(kp), x.shape, fsdp=fsdp,
+                           ep_over_data=ep_over_data)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    return P(dp if len(dp) > 1 else dp[0])
+
+
+def input_shardings(batch_tree, mesh: Mesh):
+    """Inputs: leading batch axis over DP (replicated when batch == 1)."""
+    dp = batch_spec(mesh)
+
+    def one(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        if x.shape[0] == 1:     # long-context single stream: replicate batch
+            return NamedSharding(mesh, P(*(None,) * x.ndim))
+        return NamedSharding(mesh, P(*dp, *(None,) * (x.ndim - 1)))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """Decode caches. Leaves are stacked (R, B, ...):
+
+    * attn k/v (R,B,S,KH,hd):   B → DP, hd → model
+    * cross ck/cv:              same
+    * mamba conv (R,B,K-1,ch):  B → DP, ch → model
+    * mamba ssm (R,B,nh,ds,hp): B → DP, nh → model
+    """
+    dp = batch_spec(mesh)
+
+    def one(kp, x):
+        key = _key_str(kp)
+        b = dp if x.shape[1] > 1 else (None,)
+        if re.search(r"(k|v|ck|cv)$", key) and x.ndim == 5:
+            spec = P(None, *b, None, None, MODEL)
+        elif key.endswith("conv"):
+            spec = P(None, *b, None, MODEL)
+        elif key.endswith("ssm"):
+            spec = P(None, *b, MODEL, None, None)
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def opt_state_shardings(opt_state, param_shard_tree, mesh: Mesh):
+    """Optimizer state: moments follow their parameter's sharding; scalars
+    and flat NGD buffers get their own rules."""
+    flat_params = jax.tree_util.tree_leaves(param_shard_tree)
+
+    def one(kp, x):
+        key = _key_str(kp)
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        if re.search(r"momentum$", key) and x.ndim == 1:
+            return NamedSharding(mesh, P(MODEL))   # flat natural-grad buffer
+        return None   # resolved structurally below
+
+    # AdamW mu/nu mirror the param tree structure; map pairwise when the
+    # subtree structure matches, else fall back to the path rules.
+    def resolve(state_subtree, shard_subtree):
+        return jax.tree.map(lambda _, s: s, state_subtree, shard_subtree)
+
+    try:
+        # AdamWState(step, mu, nu)
+        from repro.optim.adamw import AdamWState
+        if isinstance(opt_state, AdamWState):
+            return AdamWState(
+                NamedSharding(mesh, P()),
+                resolve(opt_state.mu, param_shard_tree),
+                resolve(opt_state.nu, param_shard_tree))
+    except Exception:
+        pass
+    from repro.optim.ngd import NGDState
+    if isinstance(opt_state, NGDState):
+        # the flat momentum buffer's length is the raveled param count,
+        # generally not divisible by the model-axis size → replicated at
+        # the jit boundary (GSPMD re-shards it internally as needed).
+        return NGDState(
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+            jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                         opt_state.damping))
+    # generic fallback: replicate
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), opt_state)

@@ -1,0 +1,205 @@
+"""Train-step factories: the production AdamW path and the paper's NGD path.
+
+Both are pure jit functions; gradient reduction over the DP axes and the
+NGD Gram psum over the model axis are inserted by GSPMD from the in/out
+shardings — no hand-written collectives in the step (the shard_map solver
+in ``repro.core.distributed`` is the explicit-collective equivalent, used
+by tests to cross-check the partitioner).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import MODEL
+from repro.launch.shardings import (
+    batch_spec,
+    cache_shardings,
+    input_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.optim.scores import per_sample_scores
+
+__all__ = ["make_train_step", "make_ngd_train_step", "jit_train_step",
+           "jit_ngd_train_step", "jit_prefill", "jit_serve_step"]
+
+
+def _apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def make_train_step(api, optimizer, *, microbatches: int = 1):
+    """Standard step: value_and_grad → optimizer → apply.
+
+    ``microbatches > 1`` runs gradient accumulation as a ``lax.scan`` over
+    batch slices — the scan carries the accumulated gradient, letting XLA
+    overlap each microbatch's reduction with the next one's compute.
+    """
+    def grads_of(params, batch):
+        return jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def slice_mb(i, x):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def body(acc, i):
+                g_acc, l_acc = acc
+                (l, _), g = grads_of(
+                    params, jax.tree.map(functools.partial(slice_mb, i), batch))
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {}
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = _apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_ngd_train_step(api, optimizer, mesh, *, score_chunk=None,
+                        score_dtype=None, score_sharding: str = "1d",
+                        flat_scores: bool = False):
+    """The paper's optimizer as a production train step.
+
+    1. mean gradient v  (one backward pass)
+    2. score matrix S via vmap(grad) of per-sample log P (chunked)
+    3. S laid out (n, m): m sharded over the model axis — chol_solve inside
+       optimizer.update then partitions exactly like the paper §3 / RVB+23
+       strategy: local Gram + psum(n²) + replicated Cholesky + local apply.
+
+    ``score_sharding``: "1d" replicates the sample axis (the paper layout);
+    "2d" additionally shards samples over the DP axes — per-sample grads
+    are *produced* DP-sharded by vmap over the DP-sharded batch, so "2d"
+    skips the sample-axis all-gather entirely (§Perf, whisper NGD cell).
+    """
+    from repro.launch.mesh import dp_axes
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            api.loss, has_aux=True)(params, batch)
+        S = per_sample_scores(api.sample_logp, params, batch,
+                              chunk=score_chunk, dtype=score_dtype)
+        if flat_scores:
+            # Sample-parallel score computation over the FULL chip grid
+            # (samples → pod×data×model): with the network replicated over
+            # the model axis, every chip computes distinct per-sample
+            # gradients; the solver reshard below is one cheap all-to-all
+            # of S (n·m/|chips| bytes per device). §Perf, whisper NGD cell.
+            all_axes = dp_axes(mesh) + (MODEL,)
+            S = jax.lax.with_sharding_constraint(
+                S, NamedSharding(mesh, P(all_axes, None)))
+        if score_sharding == "2d":
+            dp = dp_axes(mesh)
+            spec = P(dp if len(dp) > 1 else dp[0], MODEL)
+        else:
+            spec = P(None, MODEL)
+        S = jax.lax.with_sharding_constraint(S, NamedSharding(mesh, spec))
+        updates, opt_state = optimizer.update(grads, opt_state, params,
+                                              scores=S)
+        params = _apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# jit wrappers with explicit shardings (used by the trainer and the dry-run)
+# ---------------------------------------------------------------------------
+
+def jit_train_step(api, optimizer, mesh, *, param_specs, input_specs,
+                   fsdp="auto", ep_over_data=False, microbatches: int = 1,
+                   donate=True):
+    """Returns (jitted_fn, (pshard, oshard, ishard))."""
+    step = make_train_step(api, optimizer, microbatches=microbatches)
+    pshard = param_shardings(param_specs, mesh, fsdp=fsdp,
+                             ep_over_data=ep_over_data)
+    opt_specs = jax.eval_shape(optimizer.init, param_specs)
+    oshard = opt_state_shardings(opt_specs, pshard, mesh)
+    ishard = input_shardings(input_specs, mesh)
+    fn = jax.jit(step,
+                 in_shardings=(pshard, oshard, ishard),
+                 out_shardings=(pshard, oshard, None),
+                 donate_argnums=(0, 1) if donate else ())
+    return fn, (pshard, oshard, ishard)
+
+
+def jit_ngd_train_step(api, optimizer, mesh, *, param_specs, input_specs,
+                       fsdp="auto", score_chunk=None, score_dtype=None,
+                       score_sharding="1d", replicate_model=False,
+                       donate=True):
+    """``replicate_model``: pure-DP layout for the network (params
+    replicated, batch over DP) with the solver still model-parallel over S —
+    the right layout for the paper's m ≫ n regime where the model is small
+    relative to the mesh and TP all-reduces dominate (§Perf, whisper cell).
+    """
+    step = make_ngd_train_step(api, optimizer, mesh, score_chunk=score_chunk,
+                               score_dtype=score_dtype,
+                               score_sharding=score_sharding,
+                               flat_scores=replicate_model)
+    if replicate_model:
+        pshard = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), param_specs)
+    else:
+        pshard = param_shardings(param_specs, mesh, fsdp=fsdp)
+    opt_specs = jax.eval_shape(optimizer.init, param_specs)
+    oshard = opt_state_shardings(opt_specs, pshard, mesh)
+    ishard = input_shardings(input_specs, mesh)
+    fn = jax.jit(step,
+                 in_shardings=(pshard, oshard, ishard),
+                 out_shardings=(pshard, oshard, None),
+                 donate_argnums=(0, 1) if donate else ())
+    return fn, (pshard, oshard, ishard)
+
+
+def jit_prefill(api, mesh, *, param_specs, input_specs, fsdp="auto"):
+    """Prefill: prompt batch in, (last-position logits, cache, index) out."""
+    pshard = param_shardings(param_specs, mesh, fsdp=fsdp)
+    ishard = input_shardings(input_specs, mesh)
+
+    def fn(params, batch):
+        return api.prefill(params, batch)
+
+    out_specs = jax.eval_shape(fn, param_specs, input_specs)
+    _, cache_specs, _ = out_specs
+    cshard = cache_shardings(cache_specs, mesh)
+    lshard = input_shardings(out_specs[0], mesh)
+    jfn = jax.jit(fn, in_shardings=(pshard, ishard),
+                  out_shardings=(lshard, cshard, None))
+    return jfn, (pshard, ishard, cshard)
+
+
+def jit_serve_step(api, mesh, *, param_specs, input_specs, fsdp="auto",
+                   donate=True):
+    """One-token decode: cache is donated (updated in place on-device)."""
+    pshard = param_shardings(param_specs, mesh, fsdp=fsdp)
+    cshard = cache_shardings(input_specs["cache"], mesh)
+    tshard = input_shardings(input_specs["tokens"], mesh)
+
+    def fn(params, cache, cache_index, tokens):
+        logits, new_cache = api.decode_step(params, cache, cache_index,
+                                            tokens)
+        # greedy next token — the serving loop feeds this back
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), new_cache
+
+    jfn = jax.jit(fn,
+                  in_shardings=(pshard, cshard, NamedSharding(mesh, P()),
+                                tshard),
+                  out_shardings=(None, cshard),
+                  donate_argnums=(1,) if donate else ())
+    return jfn, (pshard, cshard, tshard)

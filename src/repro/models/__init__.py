@@ -1,0 +1,4 @@
+"""Model zoo: composable LM trunk + enc-dec, covering all assigned archs."""
+from repro.models.config import BlockSlot, ModelConfig
+
+__all__ = ["BlockSlot", "ModelConfig"]

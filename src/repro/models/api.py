@@ -1,0 +1,135 @@
+"""Uniform model API across families (dense / moe / ssm / hybrid / encdec /
+vlm / audio) — the layer the trainer, server, and dry-run talk to.
+
+``get_api(cfg)`` returns a ``ModelAPI`` whose members close over the family
+dispatch, and ``make_input_specs`` produces ShapeDtypeStruct stand-ins for
+every model input of a given workload shape (the dry-run path: weak-type
+correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable
+    param_specs: Callable
+    loss: Callable                  # loss(params, batch) -> (scalar, metrics)
+    prefill: Callable               # prefill(params, batch) -> (logits, cache, idx)
+    decode_step: Callable           # decode(params, cache, idx, tokens) -> (logits, cache)
+    init_cache: Callable            # init_cache(batch, max_len) -> cache
+    sample_logp: Callable           # logp(params, ex) -> scalar (score-matrix rows)
+
+
+def _is_encdec(cfg):
+    return cfg.family in ("encdec", "audio")
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    if _is_encdec(cfg):
+        def loss(params, batch):
+            return encdec.loss(params, cfg, batch)
+
+        def prefill(params, batch):
+            logits, cache, idx, _ = encdec.prefill(
+                params, cfg, batch["frames"], batch["tokens"],
+                max_len=batch.get("max_len", cfg.max_target_positions))
+            return logits, cache, idx
+
+        def decode_step(params, cache, idx, tokens):
+            return encdec.decode_step(params, cfg, cache, idx, tokens)
+
+        def init_cache(batch, max_len):
+            return lm.init_cache(cfg, batch, max_len, enc_len=cfg.enc_seq)
+
+        def sample_logp(params, ex):
+            enc_out = encdec.encode(
+                params, cfg, ex["frames"][None])
+            ex2 = {k: v for k, v in ex.items() if k != "frames"}
+            return lm.sample_logp(params["dec"], cfg,
+                                  {**ex2, "enc_out": enc_out[0]})
+
+        return ModelAPI(cfg, lambda key: encdec.init_params(key, cfg),
+                        lambda: encdec.param_specs(cfg),
+                        loss, prefill, decode_step, init_cache, sample_logp)
+
+    def loss(params, batch):
+        return lm.lm_loss(params, cfg, batch)
+
+    def prefill(params, batch):
+        return lm.prefill(params, cfg, batch["tokens"],
+                          max_len=batch.get("max_len",
+                                            batch["tokens"].shape[1] + 1),
+                          prefix_embeds=batch.get("prefix_embeds"))
+
+    def decode_step(params, cache, idx, tokens):
+        return lm.decode_step(params, cfg, cache, idx, tokens)
+
+    def init_cache(batch, max_len):
+        return lm.init_cache(cfg, batch, max_len)
+
+    def sample_logp(params, ex):
+        return lm.sample_logp(params, cfg, ex)
+
+    return ModelAPI(cfg, lambda key: lm.init_params(key, cfg),
+                    lambda: lm.param_specs(cfg),
+                    loss, prefill, decode_step, init_cache, sample_logp)
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_input_specs(cfg: ModelConfig, *, kind: str, seq: int, batch: int):
+    """ShapeDtypeStructs for one workload cell.
+
+    kind: "train" → loss batch; "prefill" → prompt batch;
+    "decode" → one-token step with a seq-length KV cache.
+
+    Whisper's decoder is architecturally capped at
+    ``cfg.max_target_positions`` learned positions — its cells run at that
+    cap (batch retained), documented in DESIGN.md.
+    """
+    i32, dt = jnp.int32, cfg.param_dtype
+    if _is_encdec(cfg):
+        T = min(seq, cfg.max_target_positions)
+        if kind == "train":
+            return {"frames": _sds((batch, cfg.enc_seq, cfg.enc_d_model), dt),
+                    "inputs": _sds((batch, T - 1), i32),
+                    "labels": _sds((batch, T - 1), i32)}
+        if kind == "prefill":
+            return {"frames": _sds((batch, cfg.enc_seq, cfg.enc_d_model), dt),
+                    "tokens": _sds((batch, T - 1), i32)}
+        cache = jax.eval_shape(
+            lambda: lm.init_cache(cfg, batch, T, enc_len=cfg.enc_seq))
+        return {"tokens": _sds((batch, 1), i32),
+                "cache": cache,
+                "cache_index": _sds((), i32)}
+
+    extra = {}
+    if cfg.family == "vlm":
+        extra["prefix_embeds"] = _sds((batch, cfg.n_patches, cfg.d_model), dt)
+
+    if kind == "train":
+        return {**extra,
+                "inputs": _sds((batch, seq), i32),
+                "labels": _sds((batch, seq), i32)}
+    if kind == "prefill":
+        return {**extra, "tokens": _sds((batch, seq), i32)}
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, batch, seq))
+    return {"tokens": _sds((batch, 1), i32),
+            "cache": cache,
+            "cache_index": _sds((), i32)}

@@ -1,0 +1,87 @@
+"""Encoder-decoder trunk (whisper-family).
+
+The modality frontend is a STUB per the brief: ``input_specs()`` supplies
+precomputed mel-frame embeddings (B, enc_seq, d_model) — the conv frontend
+that would produce them is out of scope. Encoder: bidirectional attention
+stack with sinusoidal positions. Decoder: the shared LM trunk with learned
+positions, causal self-attention and cross-attention into the encoder
+output.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import BlockSlot, ModelConfig
+
+F32 = jnp.float32
+
+
+def encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-enc",
+        n_layers=cfg.enc_layers,
+        d_model=cfg.enc_d_model or cfg.d_model,
+        n_heads=cfg.enc_n_heads or cfg.n_heads,
+        n_kv_heads=cfg.enc_n_heads or cfg.n_kv_heads,
+        head_dim=None,
+        d_ff=cfg.enc_d_ff or cfg.d_ff,
+        slots=(BlockSlot(bidirectional=True),),
+        pos_embed="sinusoidal",
+    )
+
+
+def sinusoidal_pos(T: int, d: int, dtype=F32):
+    pos = jnp.arange(T, dtype=F32)[:, None]
+    dim = jnp.arange(d // 2, dtype=F32)[None, :]
+    ang = pos / (10000.0 ** (dim / (d // 2 - 1 + 1e-9)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def init_params(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    ecfg = encoder_cfg(cfg)
+    return {
+        "enc_blocks": lm.init_blocks(k1, ecfg),
+        "enc_final_norm": lm._norm_p(k2, ecfg, ecfg.d_model),
+        "dec": lm.init_params(k3, cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, Te, D) precomputed frame embeddings (stub frontend)."""
+    ecfg = encoder_cfg(cfg)
+    x = frames.astype(ecfg.param_dtype)
+    x = x + sinusoidal_pos(x.shape[1], x.shape[2], x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, _ = lm.run_stack(params["enc_blocks"], x, ecfg, positions=positions)
+    return lm._apply_norm(x, params["enc_final_norm"], ecfg)
+
+
+def loss(params, cfg: ModelConfig, batch):
+    """batch: {"frames": (B, Te, D), "inputs": (B, T), "labels": (B, T)}."""
+    enc_out = encode(params, cfg, batch["frames"])
+    return lm.lm_loss(params["dec"], cfg, {**batch, "enc_out": enc_out})
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, *, max_len: int):
+    enc_out = encode(params, cfg, frames)
+    logits, cache, idx = lm.prefill(params["dec"], cfg, tokens,
+                                    max_len=max_len, enc_out=enc_out)
+    return logits, cache, idx, enc_out
+
+
+def decode_step(params, cfg: ModelConfig, cache, cache_index, tokens,
+                *, enc_out=None):
+    # cross-KV is cached at prefill; enc_out is unused in decode but kept in
+    # the signature for cacheless scoring paths.
+    return lm.decode_step(params["dec"], cfg, cache, cache_index, tokens,
+                          enc_out=enc_out)

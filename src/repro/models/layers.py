@@ -1,0 +1,451 @@
+"""Neural-net layers shared by every assigned architecture.
+
+Pure functions over explicit parameter pytrees (no flax — the framework
+owns its parameter layout so the sharding rules in ``repro.launch.shardings``
+can address leaves by path).
+
+Contents:
+* RMSNorm / LayerNorm
+* RoPE
+* blockwise (flash-style) attention — online softmax over KV blocks, GQA,
+  sliding window, logit softcap, causal/bidirectional, decode path
+* SwiGLU MLP
+* sort-based capacity MoE (dropless-style dispatch, EP-shardable)
+* Mamba2 SSD block — chunked state-space-duality form for train/prefill,
+  O(1) recurrent form for decode
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, *, eps=1e-6):
+    x32 = x.astype(F32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(F32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, *, eps=1e-5):
+    x32 = x.astype(F32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * gamma.astype(F32) \
+        + beta.astype(F32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, *, theta: float):
+    """x: (..., T, H, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freqs          # (..., T, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _softcap(scores, cap: Optional[float]):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    q_offset=0,
+                    kv_len: Optional[jax.Array] = None,
+                    k_positions: Optional[jax.Array] = None,
+                    kv_block: int = 512,
+                    seq_shard: bool = False,
+                    bf16_operands: bool = False):
+    """Blockwise attention with online softmax (memory O(Tq·bk), not O(Tq·Tk)).
+
+    q: (B, Tq, H, hd);  k, v: (B, Tk, KH, hd) with H % KH == 0 (GQA).
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``kv_len``: number of valid cache positions (decode); None = all valid.
+    ``k_positions``: explicit absolute positions of each cache slot (ring
+    buffers); entries < 0 are invalid. Overrides the default arange.
+    Returns (B, Tq, H, hd) in q.dtype.
+    """
+    B, Tq, H, hd = q.shape
+    _, Tk, KH, _ = k.shape
+    g = H // KH
+    scale = scale if scale is not None else hd ** -0.5
+
+    qg = q.reshape(B, Tq, KH, g, hd)
+    if seq_shard and Tq > 1:
+        # Perf lever (§Perf): context-parallel attention. The q projection
+        # leaves sharded on the fused H·hd axis; reshaping to (KH, g, hd)
+        # is unshardable for GQA head counts below the model-axis size, so
+        # GSPMD replicates the whole inner loop (verified on the baseline
+        # HLO). Pinning the query *sequence* axis to the model axis keeps
+        # every score/softmax tensor 1/|model| sized; two reshards (in/out)
+        # replace per-block full replication.
+        qg = _mesh_constraint(
+            qg, lambda dp, m: jax.sharding.PartitionSpec(
+                dp, m, None, None, None) if m else None)
+    nblk = -(-Tk // kv_block)
+    pad = nblk * kv_block - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, kv_block, KH, hd)
+    vb = v.reshape(B, nblk, kv_block, KH, hd)
+    if k_positions is not None:
+        kpb = jnp.pad(k_positions, (0, pad), constant_values=-1
+                      ).reshape(nblk, kv_block)
+    else:
+        kpb = None
+
+    q_pos = q_offset + jnp.arange(Tq)
+
+    # bf16 lever (§Perf): QK and PV contractions take bf16 operands with
+    # fp32 MXU accumulation; the softmax statistics (m, l) and the running
+    # accumulator stay fp32 — the numerically-safe flash-attention recipe.
+    cdt = jnp.bfloat16 if bf16_operands else F32
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_j, v_j, j, kp_j = blk
+        k_pos = (j * kv_block + jnp.arange(kv_block)) if kp_j is None else kp_j
+        s = jnp.einsum("btkgd,bskd->btkgs",
+                       (qg.astype(F32) * scale).astype(cdt),
+                       k_j.astype(cdt),
+                       preferred_element_type=F32)          # (B,Tq,KH,g,bk)
+        s = _softcap(s, softcap)
+        mask = jnp.ones((Tq, kv_block), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= (k_pos < kv_len)[None, :]
+        if kp_j is None:
+            mask &= (k_pos < Tk)[None, :]                   # padding blocks
+        else:
+            mask &= (k_pos >= 0)[None, :]                   # ring validity
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("btkgs,bskd->btkgd", p.astype(cdt), v_j.astype(cdt),
+                        preferred_element_type=F32)
+        acc_new = corr[..., None] * acc + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Tq, KH, g), NEG_INF, F32)
+    l0 = jnp.zeros((B, Tq, KH, g), F32)
+    a0 = jnp.zeros((B, Tq, KH, g, hd), F32)
+    xs = (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+          jnp.arange(nblk), kpb)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    if seq_shard and Tq > 1:
+        out = _mesh_constraint(
+            out, lambda dp, m: jax.sharding.PartitionSpec(
+                dp, m, None, None, None) if m else None)
+    return out.reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def attn_qkv(x, p, cfg, *, positions, rope_on=True):
+    """Project to q, k, v. x: (B, T, D). Returns (q, k, v)."""
+    B, T, _ = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].reshape(-1, H, hd))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].reshape(-1, KH, hd))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].reshape(-1, KH, hd))
+    if rope_on:
+        q = rope(q, positions, theta=cfg.rope_theta)
+        k = rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(x, p):
+    gate = jax.nn.silu(jnp.einsum("btd,df->btf", x, p["w_gate"]))
+    up = jnp.einsum("btd,df->btf", x, p["w_up"])
+    return jnp.einsum("btf,fd->btd", gate * up, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE — sort-based capacity dispatch (dropless-style), EP-shardable
+# ---------------------------------------------------------------------------
+
+def _mesh_constraint(x, spec_fn):
+    """Opt-in sharding constraint: applies only when tracing under an
+    explicit mesh (jax.sharding.set_mesh). ``spec_fn(dp, model) -> P|None``
+    receives the DP axis tuple and the model axis name (None if absent)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    names = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    model = "model" if "model" in names else None
+    spec = spec_fn(dp if dp else None, model)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+_moe_constraint = _mesh_constraint      # back-compat alias
+
+
+def moe_block(x, p, cfg):
+    """x: (B, T, D) → (B, T, D), plus router aux loss.
+
+    Dispatch: flatten tokens, route top-k, sort slots by expert, place each
+    slot at its rank within the expert's capacity buffer (overflow slots are
+    dropped — capacity_factor controls the drop rate), run the expert FFNs
+    as one batched einsum over the expert axis (sharded over 'model' = EP),
+    combine with gate weights.
+    """
+    from jax.sharding import PartitionSpec as P
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(B * T, D)
+    n_tok = B * T
+
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                      # (T, K)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=F32), axis=1), axis=0) / K
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    slots_e = idx.reshape(-1)                                # (n_tok*K,)
+    slots_t = jnp.repeat(jnp.arange(n_tok), K)
+    slots_g = gate.reshape(-1)
+    order = jnp.argsort(slots_e)
+    se, st, sg = slots_e[order], slots_t[order], slots_g[order]
+
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts                     # exclusive
+    pos = jnp.arange(n_tok * K) - starts[se]
+    cap = int(cfg.capacity_factor * n_tok * K / E) or 1
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    src = jnp.where(keep[:, None], xf[st], 0)
+    buf = buf.at[se, pos_c].add(src, mode="drop")
+
+    if cfg.moe_shard_constraints:
+        # Perf lever (§Perf): pin the dispatch buffer to EP layout and the
+        # token-major tensors to DP so the partitioner doesn't replicate
+        # the scatter/gather operands.
+        buf = _moe_constraint(buf, lambda dp, m: P(m, None, None) if m else None)
+
+    # expert FFN (SwiGLU), batched over E — EP shards this einsum
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    if cfg.moe_shard_constraints:
+        out_buf = _moe_constraint(
+            out_buf, lambda dp, m: P(m, None, None) if m else None)
+
+    gathered = out_buf[se, pos_c] * sg[:, None].astype(x.dtype)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = jnp.zeros((n_tok, D), x.dtype).at[st].add(gathered, mode="drop")
+    return y.reshape(B, T, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 — SSD (state-space duality), chunked scan
+# ---------------------------------------------------------------------------
+
+def _ssd_inner(xh, dt, A, Bm, Cm, cfg, *, h0=None):
+    """Chunked SSD core.
+
+    xh: (B, T, nh, hp); dt: (B, T, nh) (post-softplus);
+    A: (nh,) negative reals; Bm/Cm: (B, T, g, ds).
+    Returns y (B, T, nh, hp) and final state (B, nh, ds, hp).
+    """
+    Bsz, T, nh, hp = xh.shape
+    g, ds = Bm.shape[2], Bm.shape[3]
+    Q = min(cfg.ssd_chunk, T)
+    Tp = -(-T // Q) * Q
+    if Tp != T:
+        # zero-pad the tail: dt = 0 ⇒ identity decay and zero state update,
+        # so both y[:T] and the final state are exact.
+        padw = ((0, 0), (0, Tp - T))
+        xh = jnp.pad(xh, padw + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, padw + ((0, 0),))
+        Bm = jnp.pad(Bm, padw + ((0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, padw + ((0, 0), (0, 0)))
+    T_out, T = T, Tp
+    nc = T // Q
+    rep = nh // g
+
+    xc = xh.reshape(Bsz, nc, Q, nh, hp).astype(F32)
+    dtc = dt.reshape(Bsz, nc, Q, nh).astype(F32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, Q, g, ds), rep, axis=3).astype(F32)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, Q, g, ds), rep, axis=3).astype(F32)
+
+    if cfg.ssd_shard:
+        # Perf lever (§Perf): pin the SSD working set to batch→DP and
+        # heads→model so the Q×Q intra-chunk tensors partition instead of
+        # replicating (same failure mode as attention; the head count is
+        # model-axis divisible on every SSM/hybrid arch).
+        from jax.sharding import PartitionSpec as P
+        pin5 = lambda t: _mesh_constraint(
+            t, lambda dp, m: P(dp, None, None, m, None) if m else None)
+        xc, Bc, Cc = pin5(xc), pin5(Bc), pin5(Cc)
+        dtc = _mesh_constraint(
+            dtc, lambda dp, m: P(dp, None, None, m) if m else None)
+
+    dA = dtc * A.astype(F32)                                  # (B,nc,Q,nh)
+    cum = jnp.cumsum(dA, axis=2)
+    cdt = jnp.bfloat16 if cfg.ssd_bf16 else F32
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+
+    # --- intra-chunk (attention-like, masked by causal decay) -------------
+    if cfg.ssd_factored:
+        # Perf lever (§Perf): factor exp(cum_i − cum_j) = exp(cum_i)·
+        # exp(−cum_j) into the (Q, ds)-sized operands, so the Q×Q decay /
+        # seg tensors are never materialized. cum is clamped at −20 per
+        # chunk (decay < e⁻²⁰ ≈ 0) to keep exp(−cum) finite.
+        cum_cl = jnp.maximum(cum, -20.0)
+        Ce = (Cc * jnp.exp(cum_cl)[..., None]).astype(cdt)    # (B,nc,Q,nh,ds)
+        Bw = (Bc * (dtc * jnp.exp(-cum_cl))[..., None]).astype(cdt)
+        cb = jnp.einsum("bcqhd,bckhd->bcqkh", Ce, Bw,
+                        preferred_element_type=F32)           # (B,nc,Q,Q,nh)
+        M = jnp.where(causal, cb, 0.0).astype(cdt)
+    else:
+        seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,nh)
+        # mask BEFORE exp: upper-triangle seg is positive and can overflow;
+        # an inf forward value poisons the where() gradient with inf·0=nan.
+        decay = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+        cb = jnp.einsum("bcqhd,bckhd->bcqkh", Cc.astype(cdt), Bc.astype(cdt),
+                        preferred_element_type=F32)           # (B,nc,Q,Q,nh)
+        M = (cb * decay * dtc[:, :, None, :, :]).astype(cdt)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xc.astype(cdt),
+                         preferred_element_type=F32)
+
+    # --- chunk summary states ---------------------------------------------
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dtc                # (B,nc,Q,nh)
+    S = jnp.einsum("bcqh,bcqhd,bcqhp->bchdp", w.astype(cdt),
+                   Bc.astype(cdt), xc.astype(cdt),
+                   preferred_element_type=F32)                # (B,nc,nh,ds,hp)
+
+    # --- inter-chunk recurrence (scan over nc chunks) ----------------------
+    a_chunk = jnp.exp(cum[:, :, -1, :])                       # (B,nc,nh)
+    h_init = jnp.zeros((Bsz, nh, ds, hp), F32) if h0 is None \
+        else h0.astype(F32)
+
+    def body(h, inp):
+        a_c, S_c = inp                                        # (B,nh),(B,nh,ds,hp)
+        h_next = a_c[:, :, None, None] * h + S_c
+        return h_next, h                                      # emit state at chunk START
+
+    hT, h_starts = jax.lax.scan(
+        body, h_init,
+        (a_chunk.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)              # (B,nc,nh,ds,hp)
+
+    y_inter = jnp.einsum("bcqhd,bchdp->bcqhp",
+                         (Cc * jnp.exp(cum)[..., None]).astype(cdt),
+                         h_starts.astype(cdt),
+                         preferred_element_type=F32)
+    y = (y_intra + y_inter).reshape(Bsz, T, nh, hp)[:, :T_out]
+    return y.astype(xh.dtype), hT
+
+
+def _causal_conv(x, w, *, state=None):
+    """Depthwise causal conv1d. x: (B, T, C); w: (K, C).
+
+    Train: left-pad K-1 zeros. Decode (T==1): ``state`` is (B, K-1, C) of the
+    last K-1 inputs; returns (y, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    if state is None:
+        return y, None
+    return y, xp[:, -(K - 1):, :]
+
+
+def mamba_block(x, p, cfg, *, cache=None):
+    """Mamba2 block. x: (B, T, D).
+
+    cache (decode): {"conv": (B, K-1, conv_ch), "ssm": (B, nh, ds, hp)}.
+    Returns (y, new_cache) — new_cache is None in train mode.
+    """
+    B, T, D = x.shape
+    di, nh, hp = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, ds = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = di + 2 * g * ds
+
+    zxbcdt = jnp.einsum("btd,dp->btp", x, p["in_proj"])
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + conv_ch], axis=-1)
+
+    conv_state = None if cache is None else cache["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], state=conv_state)
+    xBC = jax.nn.silu(xBC)
+    xh, Bm, Cm = jnp.split(xBC, [di, di + g * ds], axis=-1)
+    xh = xh.reshape(B, T, nh, hp)
+    Bm = Bm.reshape(B, T, g, ds)
+    Cm = Cm.reshape(B, T, g, ds)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))                      # (nh,)
+
+    if cache is None:
+        y, _ = _ssd_inner(xh, dt, A, Bm, Cm, cfg)
+        new_cache = None
+    else:
+        # O(1) recurrent decode: h ← exp(A·dt)·h + dt·B⊗x ;  y = C·h + D·x
+        h = cache["ssm"].astype(F32)                          # (B,nh,ds,hp)
+        rep = nh // g
+        B1 = jnp.repeat(Bm[:, 0], rep, axis=1)                # (B,nh,ds)
+        C1 = jnp.repeat(Cm[:, 0], rep, axis=1)
+        dt1 = dt[:, 0]                                        # (B,nh)
+        x1 = xh[:, 0].astype(F32)                             # (B,nh,hp)
+        decay = jnp.exp(dt1 * A[None, :])                     # (B,nh)
+        h = decay[:, :, None, None] * h \
+            + jnp.einsum("bh,bhd,bhp->bhdp", dt1, B1, x1)
+        y = jnp.einsum("bhd,bhdp->bhp", C1, h)[:, None]       # (B,1,nh,hp)
+        new_cache = {"conv": new_conv, "ssm": h.astype(cache["ssm"].dtype)}
+
+    y = y + p["D"].astype(F32)[None, None, :, None] * xh.astype(F32)
+    y = y.reshape(B, T, di)
+    # gated RMSNorm (mamba2)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_g"],
+                 eps=cfg.norm_eps)
+    return jnp.einsum("bti,id->btd", y, p["out_proj"]), new_cache

@@ -1,0 +1,637 @@
+"""Decoder-only LM trunk (used directly by 8/10 assigned archs; the enc-dec
+and VLM archs compose it).
+
+Parameters are explicit pytrees. The layer stack is a ``lax.scan`` over
+``cfg.repeats`` copies of the super-block (``cfg.slots``), so HLO size is
+O(period) regardless of depth. Three scan drivers share one block body:
+
+* ``forward``      — train / eval logits (optionally with remat).
+* ``prefill``      — forward that also emits per-layer KV / SSM cache rows.
+* ``decode_step``  — one token in, cache updated in place (functionally).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import BlockSlot, ModelConfig
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_p(key, cfg, d):
+    if cfg.norm_type == "layer":
+        return {"g": jnp.ones((d,), cfg.param_dtype),
+                "b": jnp.zeros((d,), cfg.param_dtype)}
+    return {"g": jnp.zeros((d,), cfg.param_dtype)}   # rms: (1+g) form
+
+
+def _apply_norm(x, p, cfg):
+    if cfg.norm_type == "layer":
+        return L.layer_norm(x, p["g"], p["b"], eps=cfg.norm_eps)
+    return L.rms_norm(x, p["g"], eps=cfg.norm_eps)
+
+
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def _init_attn(key, cfg, d, *, cross=False):
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "norm": _norm_p(ks[0], cfg, d),
+        "wq": _dense(ks[1], (d, H * hd), cfg.param_dtype),
+        "wk": _dense(ks[2], (d, KH * hd), cfg.param_dtype),
+        "wv": _dense(ks[3], (d, KH * hd), cfg.param_dtype),
+        "wo": _dense(ks[4], (H * hd, d), cfg.param_dtype),
+    }
+    if cross:
+        p.update({
+            "xnorm": _norm_p(ks[5], cfg, d),
+            "xq": _dense(ks[6], (d, H * hd), cfg.param_dtype),
+            "xk": _dense(ks[7], (d, KH * hd), cfg.param_dtype),
+            "xv": _dense(ks[5], (d, KH * hd), cfg.param_dtype),
+            "xo": _dense(ks[6], (H * hd, d), cfg.param_dtype),
+        })
+    if cfg.use_post_norm:
+        p["post_norm"] = _norm_p(ks[7], cfg, d)
+    return p
+
+
+def _init_ffn(key, cfg, d, *, moe: bool):
+    ks = jax.random.split(key, 5)
+    if moe:
+        E, f = cfg.n_experts, cfg.d_ff
+        p = {"router": _dense(ks[0], (d, E), cfg.param_dtype),
+             "w_gate": (jax.random.normal(ks[1], (E, d, f), F32) * d ** -0.5
+                        ).astype(cfg.param_dtype),
+             "w_up": (jax.random.normal(ks[2], (E, d, f), F32) * d ** -0.5
+                      ).astype(cfg.param_dtype),
+             "w_down": (jax.random.normal(ks[3], (E, f, d), F32) * f ** -0.5
+                        ).astype(cfg.param_dtype)}
+    elif cfg.mlp_type == "gelu":
+        p = {"w_up": _dense(ks[1], (d, cfg.d_ff), cfg.param_dtype),
+             "w_down": _dense(ks[2], (cfg.d_ff, d), cfg.param_dtype)}
+    else:
+        p = {"w_gate": _dense(ks[1], (d, cfg.d_ff), cfg.param_dtype),
+             "w_up": _dense(ks[2], (d, cfg.d_ff), cfg.param_dtype),
+             "w_down": _dense(ks[3], (cfg.d_ff, d), cfg.param_dtype)}
+    p["ffn_norm"] = _norm_p(ks[4], cfg, d)
+    if cfg.use_post_norm:
+        p["ffn_post_norm"] = _norm_p(ks[0], cfg, d)
+    return p
+
+
+def _init_mamba(key, cfg, d):
+    di, nh = cfg.d_inner, cfg.ssm_heads
+    g, ds, K = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    conv_ch = di + 2 * g * ds
+    proj_out = 2 * di + 2 * g * ds + nh
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": _norm_p(ks[0], cfg, d),
+        "in_proj": _dense(ks[1], (d, proj_out), cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[2], (K, conv_ch), F32) * 0.1
+                   ).astype(cfg.param_dtype),
+        "dt_bias": jnp.zeros((nh,), F32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(F32)),
+        "D": jnp.ones((nh,), F32),
+        "norm_g": jnp.zeros((di,), cfg.param_dtype),
+        "out_proj": _dense(ks[3], (di, d), cfg.param_dtype),
+    }
+
+
+def init_slot(key, slot: BlockSlot, cfg: ModelConfig, d):
+    """Params for one slot position (un-stacked).
+
+    Pure-SSM archs (mamba2: d_ff == 0, no MoE) have no FFN sublayer — the
+    mamba mixer IS the whole block.
+    """
+    k1, k2 = jax.random.split(key)
+    if slot.kind == "mamba":
+        p = _init_mamba(k1, cfg, d)
+        if cfg.d_ff == 0 and not slot.moe:
+            return p
+    else:
+        p = _init_attn(k1, cfg, d, cross=slot.cross_attn)
+    p.update(_init_ffn(k2, cfg, d, moe=slot.moe))
+    return p
+
+
+def init_blocks(key, cfg: ModelConfig, d=None):
+    """List of per-slot trees, each leaf stacked over cfg.repeats."""
+    d = d or cfg.d_model
+    blocks = []
+    for si, slot in enumerate(cfg.slots):
+        keys = jax.random.split(jax.random.fold_in(key, si), cfg.repeats)
+        rows = [init_slot(k, slot, cfg, d) for k in keys]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *rows))
+    return blocks
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                    F32) * 0.02).astype(cfg.param_dtype),
+        "final_norm": _norm_p(ks[1], cfg, cfg.d_model),
+        "blocks": init_blocks(ks[2], cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = _dense(ks[3], (cfg.d_model, cfg.padded_vocab),
+                                cfg.param_dtype)
+    if cfg.pos_embed == "learned":
+        params["pos_embed"] = (jax.random.normal(
+            ks[3], (cfg.max_target_positions or 2048, cfg.d_model), F32)
+            * 0.02).astype(cfg.param_dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — zero allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# block body (shared by all three drivers)
+# ---------------------------------------------------------------------------
+
+def _self_attn(slot, p, x, cfg, *, positions, mode, cache=None,
+               cache_index=None):
+    """Returns (attn_out, cache_out).
+
+    Decode-mode windowed slots use a **ring-buffer** cache of size
+    S = window: slot j holds the most recent absolute position p ≡ j (mod S)
+    with p ≤ cache_index; absolute positions are reconstructed for the mask
+    and negative (not-yet-written) slots are invalid. This caps the local
+    layers' cache at the window instead of the full sequence (the gemma2 /
+    jamba long-context memory win).
+    """
+    h = _apply_norm(x, p["norm"], cfg)
+    rope_on = cfg.pos_embed == "rope"
+    q, k, v = L.attn_qkv(h, p, cfg, positions=positions, rope_on=rope_on)
+
+    if mode == "decode":
+        S = cache["k"].shape[1]
+        is_ring = slot.window is not None and slot.window <= S + 1
+        write_at = cache_index % S if is_ring else cache_index
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, write_at, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, write_at, 0, 0))
+        if is_ring:
+            j = jnp.arange(S)
+            k_positions = cache_index - (cache_index - j) % S
+            out = L.flash_attention(
+                q, k_all, v_all, causal=True, window=slot.window,
+                softcap=cfg.attn_softcap, scale=cfg.query_scale,
+                q_offset=cache_index, k_positions=k_positions,
+                kv_block=min(512, S))
+        else:
+            out = L.flash_attention(
+                q, k_all, v_all, causal=True, window=slot.window,
+                softcap=cfg.attn_softcap, scale=cfg.query_scale,
+                q_offset=cache_index, kv_len=cache_index + 1,
+                kv_block=min(512, S))
+        cache_out = {"k": k_all, "v": v_all}
+    else:
+        out = L.flash_attention(
+            q, k, v, causal=not slot.bidirectional,
+            window=slot.window, softcap=cfg.attn_softcap,
+            scale=cfg.query_scale, kv_block=min(512, k.shape[1]),
+            seq_shard=cfg.attn_seq_shard, bf16_operands=cfg.attn_bf16)
+        cache_out = {"k": k, "v": v} if mode == "prefill" else None
+
+    out = jnp.einsum("btk,kD->btD", out.reshape(*out.shape[:2], -1), p["wo"])
+    if cfg.use_post_norm:
+        out = _apply_norm(out, p["post_norm"], cfg)
+    return out, cache_out
+
+
+def _cross_attn(p, x, enc_out, cfg, *, cached_kv=None):
+    h = _apply_norm(x, p["xnorm"], cfg)
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dk->btk", h, p["xq"]).reshape(
+        *h.shape[:2], H, hd)
+    if cached_kv is None:
+        k = jnp.einsum("btd,dk->btk", enc_out, p["xk"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], KH, hd)
+        v = jnp.einsum("btd,dk->btk", enc_out, p["xv"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], KH, hd)
+    else:
+        k, v = cached_kv["ck"], cached_kv["cv"]
+    out = L.flash_attention(q, k, v, causal=False, scale=cfg.query_scale,
+                            kv_block=min(512, k.shape[1]))
+    out = jnp.einsum("btk,kD->btD", out.reshape(*out.shape[:2], -1), p["xo"])
+    return out, {"ck": k, "cv": v}
+
+
+def _ffn(slot, p, x, cfg):
+    h = _apply_norm(x, p["ffn_norm"], cfg)
+    if slot.moe:
+        out, aux = L.moe_block(h, p, cfg)
+    elif cfg.mlp_type == "gelu":
+        out = jnp.einsum(
+            "btf,fd->btd",
+            jax.nn.gelu(jnp.einsum("btd,df->btf", h, p["w_up"])),
+            p["w_down"])
+        aux = 0.0
+    else:
+        out = L.swiglu_mlp(h, p)
+        aux = 0.0
+    if cfg.use_post_norm:
+        out = _apply_norm(out, p["ffn_post_norm"], cfg)
+    return out, aux
+
+
+def _gather_fsdp_weights(p, cfg):
+    """ZeRO-3 lever (§Perf): re-constrain every block weight to its rule
+    spec with the FSDP axis removed. GSPMD then all-gathers each weight
+    shard just-in-time (Σ ≈ params/|model| bytes per step) instead of
+    all-reducing activation partial sums per layer (orders of magnitude
+    more traffic for long sequences)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in (mesh.axis_names or ()):
+        return p
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.shardings import param_pspec, _key_str
+
+    def one(kp, x):
+        # scan-body leaves are SLICED (no stacked repeat axis) — evaluate
+        # the path rule on a (1, ...) shape and strip the lead entry, so
+        # the per-dim mapping lines up with the storage layout.
+        spec = param_pspec(_key_str(kp), (1,) + tuple(x.shape), fsdp=False)
+        entries = list(spec) + [None] * (x.ndim + 1 - len(spec))
+        return jax.lax.with_sharding_constraint(x, P(*entries[1:]))
+    return jax.tree_util.tree_map_with_path(one, p)
+
+
+def block_apply(slot: BlockSlot, p, x, cfg, *, positions, mode,
+                cache=None, cache_index=None, enc_out=None):
+    """One layer. Returns (x, cache_out, aux_loss)."""
+    if cfg.fsdp_gather_weights and mode == "train":
+        p = _gather_fsdp_weights(p, cfg)
+    cache_out = {}
+    if slot.kind == "mamba":
+        h = _apply_norm(x, p["norm"], cfg)
+        y, mcache = L.mamba_block(
+            h, p, cfg, cache=cache if mode == "decode" else None)
+        x = x + y
+        if mode == "decode":
+            cache_out = mcache
+        elif mode == "prefill":
+            # recompute final state for the cache (cheap second pass reuses
+            # no activations; acceptable at prefill)
+            cache_out = mamba_prefill_cache(h, p, cfg)
+    else:
+        attn_out, c = _self_attn(slot, p, x, cfg, positions=positions,
+                                 mode=mode, cache=cache,
+                                 cache_index=cache_index)
+        if c:
+            cache_out.update(c)
+        x = x + attn_out
+        if slot.cross_attn:
+            xo, ckv = _cross_attn(
+                p, x, enc_out, cfg,
+                cached_kv=cache if mode == "decode" else None)
+            x = x + xo
+            if mode == "prefill":
+                cache_out.update(ckv)
+            elif mode == "decode":
+                cache_out.update({"ck": cache["ck"], "cv": cache["cv"]})
+    if "ffn_norm" not in p:          # pure-SSM block: no FFN sublayer
+        return x, cache_out, jnp.zeros((), F32)
+    ffn_out, aux = _ffn(slot, p, x, cfg)
+    return x + ffn_out, cache_out, aux
+
+
+def mamba_prefill_cache(h, p, cfg):
+    """Recompute conv + SSM final states for the decode cache."""
+    B, T, _ = h.shape
+    di, nh, hp = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, ds, K = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    conv_ch = di + 2 * g * ds
+    zxbcdt = jnp.einsum("btd,dp->btp", h, p["in_proj"])
+    _, xBC, dt = jnp.split(zxbcdt, [di, di + conv_ch], axis=-1)
+    conv_state = xBC[:, -(K - 1):, :]
+    xBC_c, _ = L._causal_conv(xBC, p["conv_w"])
+    xBC_c = jax.nn.silu(xBC_c)
+    xh, Bm, Cm = jnp.split(xBC_c, [di, di + g * ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))
+    _, hT = L._ssd_inner(xh.reshape(B, T, nh, hp), dt, A,
+                         Bm.reshape(B, T, g, ds), Cm.reshape(B, T, g, ds),
+                         cfg)
+    return {"conv": conv_state, "ssm": hT.astype(cfg.param_dtype)}
+
+
+# ---------------------------------------------------------------------------
+# stack drivers
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def run_stack(blocks, x, cfg, *, positions, enc_out=None, mode="train"):
+    """Scan the super-block over cfg.repeats. Returns (x, aux)."""
+    slots = tuple(cfg.slots)
+
+    def body(carry, p_rows):
+        h, aux = carry
+        for slot, p in zip(slots, p_rows):
+            h, _, a = block_apply(slot, p, h, cfg, positions=positions,
+                                  mode="train", enc_out=enc_out)
+            aux = aux + a
+        return (h, aux), None
+
+    body = _maybe_remat(body, cfg) if mode == "train" else body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), F32)), tuple(blocks))
+    return x, aux
+
+
+def run_stack_prefill(blocks, x, cfg, *, positions, enc_out=None):
+    """Scan emitting cache rows. Returns (x, cache_list, aux)."""
+    slots = tuple(cfg.slots)
+
+    def body(carry, p_rows):
+        h, aux = carry
+        outs = []
+        for slot, p in zip(slots, p_rows):
+            h, c, a = block_apply(slot, p, h, cfg, positions=positions,
+                                  mode="prefill", enc_out=enc_out)
+            outs.append(c)
+            aux = aux + a
+        return (h, aux), tuple(outs)
+
+    (x, aux), cache = jax.lax.scan(
+        body, (x, jnp.zeros((), F32)), tuple(blocks))
+    return x, list(cache), aux
+
+
+def run_stack_decode(blocks, cache, x, cfg, *, cache_index, enc_out=None):
+    """Scan over (params, cache) rows. Returns (x, new_cache_list)."""
+    slots = tuple(cfg.slots)
+    positions = jnp.full((x.shape[0], 1), cache_index)
+
+    def body(h, rows):
+        p_rows, c_rows = rows
+        new_c = []
+        for slot, p, c in zip(slots, p_rows, c_rows):
+            h, cout, _ = block_apply(slot, p, h, cfg, positions=positions,
+                                     mode="decode", cache=c,
+                                     cache_index=cache_index,
+                                     enc_out=enc_out)
+            new_c.append(cout)
+        return h, tuple(new_c)
+
+    x, new_cache = jax.lax.scan(body, x, (tuple(blocks), tuple(cache)))
+    return x, list(new_cache)
+
+
+# ---------------------------------------------------------------------------
+# full model: embed → stack → logits
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg, tokens):
+    x = params["embed"][tokens].astype(cfg.param_dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.param_dtype)
+    return x
+
+
+def unembed(params, cfg, x):
+    W = params["embed"] if cfg.tie_embeddings else params["head"]
+    if cfg.gather_unembed:
+        # Perf lever (§Perf): all-gather the FSDP (d_model) axis of the
+        # unembedding ONCE instead of psum-ing an (B, chunk, V) fp32
+        # partial-logit tensor per CE chunk.
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and "model" in (mesh.axis_names or ()):
+            spec = P("model", None) if cfg.tie_embeddings else P(None, "model")
+            W = jax.lax.with_sharding_constraint(W, spec)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, W)
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, W)
+    logits = logits.astype(F32)
+    if cfg.logit_softcap:
+        logits = L._softcap(logits, cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:      # mask vocab-padding slots
+        mask = (jnp.arange(cfg.padded_vocab) < cfg.vocab)
+        logits = jnp.where(mask, logits, L.NEG_INF)
+    return logits
+
+
+def _positions_like(tokens, offset=0):
+    B, T = tokens.shape[:2]
+    return jnp.broadcast_to(jnp.arange(T) + offset, (B, T))
+
+
+def forward(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+            enc_out=None, mode="train"):
+    """tokens: (B, T) int32. prefix_embeds: (B, P, D) multimodal prefix.
+    Returns (logits (B, T[+P], V) fp32, aux)."""
+    x = embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if cfg.pos_embed == "learned":
+        T = x.shape[1]
+        x = x + params["pos_embed"][:T][None].astype(x.dtype)
+    positions = _positions_like(x[..., 0])
+    x, aux = run_stack(params["blocks"], x, cfg, positions=positions,
+                       enc_out=enc_out, mode=mode)
+    x = _apply_norm(x, params["final_norm"], cfg)
+    return unembed(params, cfg, x), aux
+
+
+def chunked_ce(params, cfg: ModelConfig, x, labels, *, mask=None,
+               chunk: int = 1024):
+    """Cross-entropy without materializing (B, T, V) logits.
+
+    Production trick for 256k vocabularies: unembed + log-softmax + gather
+    run per T-chunk inside a scan, so peak memory is (B, chunk, V_shard)
+    instead of (B, T, V_shard). Returns (mean_nll, token_count).
+    """
+    B, T, D = x.shape
+    chunk = min(chunk, T)
+    nck = -(-T // chunk)
+    Tp = nck * chunk
+    if Tp != T:
+        x = jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, Tp - T)))
+        pad_mask = jnp.pad(
+            jnp.ones((B, T), F32) if mask is None else mask.astype(F32),
+            ((0, 0), (0, Tp - T)))
+    else:
+        pad_mask = jnp.ones((B, T), F32) if mask is None \
+            else mask.astype(F32)
+
+    xc = x.reshape(B, nck, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nck, chunk).transpose(1, 0, 2)
+    mc = pad_mask.reshape(B, nck, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xi, li, mi = inp
+        logits = unembed(params, cfg, xi)                 # (B, chunk, V) f32
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, li[..., None], axis=-1)[..., 0]
+        return (tot + jnp.sum(nll * mi), cnt + jnp.sum(mi)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), F32), jnp.zeros((), F32)), (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def sample_logp(params, cfg: ModelConfig, ex):
+    """log P_θ(x) of ONE example (no leading batch axis, no aux losses) —
+    the quantity whose per-sample gradients form the score matrix S."""
+    batch1 = jax.tree.map(lambda x: x[None], ex)
+    tokens = batch1["inputs"]
+    x = embed_tokens(params, cfg, tokens)
+    prefix = batch1.get("prefix_embeds")
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_embed"][:x.shape[1]][None].astype(x.dtype)
+    positions = _positions_like(x[..., 0])
+    x, _ = run_stack(params["blocks"], x, cfg, positions=positions,
+                     enc_out=batch1.get("enc_out"), mode="train")
+    x = _apply_norm(x, params["final_norm"], cfg)
+    P = x.shape[1] - batch1["labels"].shape[1]
+    if P > 0:
+        x = x[:, P:]
+    mean_nll, cnt = chunked_ce(params, cfg, x, batch1["labels"],
+                               mask=batch1.get("mask"))
+    return -mean_nll * cnt
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    """batch: {"inputs": (B,T), "labels": (B,T), optional "mask",
+    optional "prefix_embeds"}."""
+    tokens = batch["inputs"]
+    x = embed_tokens(params, cfg, tokens)
+    prefix = batch.get("prefix_embeds")
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_embed"][:x.shape[1]][None].astype(x.dtype)
+    positions = _positions_like(x[..., 0])
+    x, aux = run_stack(params["blocks"], x, cfg, positions=positions,
+                       enc_out=batch.get("enc_out"), mode="train")
+    x = _apply_norm(x, params["final_norm"], cfg)
+    P = x.shape[1] - batch["labels"].shape[1]
+    if P > 0:
+        x = x[:, P:]
+    loss, _ = chunked_ce(params, cfg, x, batch["labels"],
+                         mask=batch.get("mask"))
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, enc_len=0):
+    """Zero cache pytree (list per slot of stacked (R, ...) leaves)."""
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    R = cfg.repeats
+    dt = cfg.param_dtype
+    cache = []
+    for slot in cfg.slots:
+        if slot.kind == "mamba":
+            ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            c = {"conv": jnp.zeros((R, batch, cfg.ssm_conv - 1, ch), dt),
+                 "ssm": jnp.zeros((R, batch, cfg.ssm_heads, cfg.ssm_state,
+                                   cfg.ssm_head_dim), dt)}
+        else:
+            S = min(max_len, slot.window) if slot.window else max_len
+            c = {"k": jnp.zeros((R, batch, S, KH, hd), dt),
+                 "v": jnp.zeros((R, batch, S, KH, hd), dt)}
+            if slot.cross_attn:
+                c["ck"] = jnp.zeros((R, batch, enc_len, KH, hd), dt)
+                c["cv"] = jnp.zeros((R, batch, enc_len, KH, hd), dt)
+        cache.append(c)
+    return cache
+
+
+def cache_specs(cfg, batch, max_len, *, enc_len=0):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, enc_len=enc_len))
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, max_len: int,
+            prefix_embeds=None, enc_out=None):
+    """Forward pass that also builds the decode cache.
+
+    Returns (logits (B, T, V), cache, next_index). Windowed slots get their
+    last ``window`` keys laid out in ring-buffer order (see ``_self_attn``).
+    """
+    import numpy as np
+
+    x = embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_embed"][:x.shape[1]][None].astype(x.dtype)
+    positions = _positions_like(x[..., 0])
+    T = x.shape[1]
+
+    x, cache_rows, _ = run_stack_prefill(params["blocks"], x, cfg,
+                                         positions=positions, enc_out=enc_out)
+    x = _apply_norm(x, params["final_norm"], cfg)
+    # serving only needs the last position's logits — never materialize the
+    # (B, T, V) tensor (32k × 256k vocab would dominate prefill memory).
+    logits = unembed(params, cfg, x[:, -1:])
+
+    cache = []
+    for slot, c in zip(cfg.slots, cache_rows):
+        if slot.kind == "mamba":
+            cache.append(c)
+            continue
+        S = min(max_len, slot.window) if slot.window else max_len
+        k, v = c["k"], c["v"]                   # (R, B, T, KH, hd)
+        if T > S:                               # ring layout of last S keys
+            p = np.arange(T - S, T)
+            order = np.argsort(p % S)           # ring slot j ← key at p[order[j]]
+            k = k[:, :, T - S:][:, :, order]
+            v = v[:, :, T - S:][:, :, order]
+        elif T < S:
+            padw = ((0, 0), (0, 0), (0, S - T), (0, 0), (0, 0))
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        out = {"k": k, "v": v}
+        if slot.cross_attn:
+            out["ck"], out["cv"] = c["ck"], c["cv"]
+        cache.append(out)
+    return logits, cache, jnp.asarray(T, jnp.int32)
+
+
+def decode_step(params, cfg: ModelConfig, cache, cache_index, tokens,
+                *, enc_out=None):
+    """tokens: (B, 1). Returns (logits (B, 1, V), new_cache)."""
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_embed"][cache_index][None, None].astype(x.dtype)
+    x, new_cache = run_stack_decode(params["blocks"], cache, x, cfg,
+                                    cache_index=cache_index, enc_out=enc_out)
+    x = _apply_norm(x, params["final_norm"], cfg)
+    return unembed(params, cfg, x), new_cache

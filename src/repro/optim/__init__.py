@@ -1,0 +1,25 @@
+"""Optimizers: damped NGD (the paper), AdamW, hybrid, compression."""
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.compress import EFState, Int8ErrorFeedback, bf16_allreduce
+from repro.optim.hybrid import (
+    HybridNGD,
+    HybridState,
+    merge_params,
+    partition_params,
+    path_of,
+)
+from repro.optim.ngd import NaturalGradient, NGDState
+from repro.optim.schedules import constant, warmup_cosine, warmup_linear
+from repro.optim.scores import (
+    flatten_like,
+    make_fisher_matvec,
+    per_sample_scores,
+)
+
+__all__ = [
+    "AdamW", "AdamWState", "EFState", "Int8ErrorFeedback", "bf16_allreduce",
+    "HybridNGD", "HybridState", "merge_params", "partition_params", "path_of",
+    "NaturalGradient", "NGDState", "constant", "warmup_cosine",
+    "warmup_linear", "flatten_like", "make_fisher_matvec",
+    "per_sample_scores",
+]

@@ -1,0 +1,67 @@
+"""AdamW — the production default optimizer for the assigned architectures.
+
+Implemented in-tree (optax is not vendored in this environment). Matches
+the decoupled-weight-decay formulation; fp32 moments regardless of the
+parameter dtype (bf16-safe mixed precision).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "AdamW"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: any       # first moments (pytree, fp32)
+    nu: any       # second moments (pytree, fp32)
+
+
+class AdamW:
+    requires_scores = False
+
+    def __init__(self, learning_rate: Union[float, Callable] = 3e-4, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 clip_grad_norm: float | None = 1.0):
+        self.lr = learning_rate if callable(learning_rate) \
+            else (lambda step: jnp.asarray(learning_rate, jnp.float32))
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.wd = weight_decay
+        self.clip = clip_grad_norm
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        if self.clip is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)))
+            scale = jnp.minimum(1.0, self.clip / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.wd * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        return updates, AdamWState(step, mu, nu)

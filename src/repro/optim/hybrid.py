@@ -1,0 +1,76 @@
+"""Hybrid optimizer: exact NGD on a selected parameter group, AdamW on the
+rest.
+
+This is the production deployment mode for multi-billion-parameter
+architectures (DESIGN.md §5): the Fisher block is solved exactly with
+Algorithm 1 for the parameters where curvature matters most (typically the
+output head / final blocks), while the bulk of the network uses AdamW.
+The score matrix is only n × m_subset, keeping the memory envelope linear
+in the subset size.
+
+Selection is by a path-predicate over the parameter pytree
+(``filter_fn(path_str) -> bool``).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.optim.adamw import AdamW
+from repro.optim.ngd import NaturalGradient
+
+__all__ = ["HybridState", "HybridNGD", "partition_params", "merge_params",
+           "path_of"]
+
+
+def path_of(keypath) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in keypath)
+
+
+def partition_params(params, filter_fn: Callable[[str], bool]):
+    """Split a pytree into (selected, rest) with None placeholders."""
+    sel = jax.tree_util.tree_map_with_path(
+        lambda kp, x: x if filter_fn(path_of(kp)) else None, params)
+    rest = jax.tree_util.tree_map_with_path(
+        lambda kp, x: None if filter_fn(path_of(kp)) else x, params)
+    return sel, rest
+
+
+def merge_params(a, b):
+    """Inverse of partition_params (leaf-wise first-non-None)."""
+    return jax.tree.map(lambda x, y: x if x is not None else y, a, b,
+                        is_leaf=lambda x: x is None)
+
+
+class HybridState(NamedTuple):
+    ngd: any
+    adamw: any
+
+
+class HybridNGD:
+    requires_scores = True
+
+    def __init__(self, filter_fn: Callable[[str], bool], *,
+                 ngd: NaturalGradient | None = None,
+                 adamw: AdamW | None = None):
+        self.filter_fn = filter_fn
+        self.ngd = ngd or NaturalGradient()
+        self.adamw = adamw or AdamW()
+
+    def init(self, params) -> HybridState:
+        sel, rest = partition_params(params, self.filter_fn)
+        return HybridState(self.ngd.init(sel), self.adamw.init(rest))
+
+    def update(self, grads, state: HybridState, params, *, scores):
+        """``scores`` must be built over the *selected* subset only (use
+        ``scores_filter_fn`` / ``per_sample_scores`` with the subset's
+        logp closure)."""
+        gsel, grest = partition_params(grads, self.filter_fn)
+        psel, prest = partition_params(params, self.filter_fn)
+        usel, s_ngd = self.ngd.update(gsel, state.ngd, psel, scores=scores)
+        urest, s_aw = self.adamw.update(grest, state.adamw, prest)
+        return merge_params(usel, urest), HybridState(s_ngd, s_aw)

@@ -1,0 +1,91 @@
+"""Damped natural-gradient-descent optimizer (the paper's use case).
+
+Optax-shaped (``init``/``update``) but with an extended update signature:
+NGD consumes the per-sample score matrix S alongside the mean gradient v.
+
+    nat_grad = solve(S, v, λ)          # Algorithm 1 by default
+    buf      = μ·buf + nat_grad        # heavy-ball momentum
+    Δθ       = −lr · buf
+
+The solver is pluggable (``repro.core.SOLVERS`` or the Pallas-fused
+``chol_solve_fused`` or a mesh-sharded solver from
+``repro.core.make_sharded_solver``), which is how the same optimizer runs
+single-chip paper-scale and pod-scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import get_solver
+from repro.core.damping import ConstantDamping, DampingState
+
+__all__ = ["NGDState", "NaturalGradient"]
+
+
+class NGDState(NamedTuple):
+    step: jax.Array
+    momentum: jax.Array        # flat (m,) heavy-ball buffer
+    damping: DampingState
+
+
+class NaturalGradient:
+    """Natural gradient descent with Algorithm-1 solve, momentum, clipping.
+
+    Args:
+      learning_rate: float or schedule ``step -> lr``.
+      damping: float λ, or a damping policy object with init()/update().
+      solver: name in repro.core.SOLVERS, or any ``f(S, v, λ) -> x``.
+      momentum: heavy-ball coefficient μ (0 disables).
+      clip_natgrad_norm: optional global-norm clip on the natural gradient.
+    """
+
+    requires_scores = True
+
+    def __init__(self, learning_rate: Union[float, Callable] = 1e-3, *,
+                 damping=1e-3, solver: Union[str, Callable] = "chol",
+                 momentum: float = 0.9,
+                 clip_natgrad_norm: Optional[float] = None):
+        self.lr = learning_rate if callable(learning_rate) \
+            else (lambda step: jnp.asarray(learning_rate, jnp.float32))
+        self.damping_policy = damping if hasattr(damping, "init") \
+            else ConstantDamping(damping)
+        self.solver = get_solver(solver) if isinstance(solver, str) else solver
+        self.momentum = float(momentum)
+        self.clip = clip_natgrad_norm
+
+    def init(self, params) -> NGDState:
+        flat, _ = ravel_pytree(params)
+        return NGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jnp.zeros_like(flat, dtype=jnp.float32),
+            damping=self.damping_policy.init(),
+        )
+
+    def update(self, grads, state: NGDState, params, *, scores: jax.Array):
+        """Returns (updates_pytree, new_state). ``scores`` is S (n, m)."""
+        v, unravel = ravel_pytree(grads)
+        v32 = v.astype(jnp.float32)
+        nat = self.solver(scores, v32, state.damping.lam)
+
+        if self.clip is not None:
+            norm = jnp.linalg.norm(nat)
+            nat = nat * jnp.minimum(1.0, self.clip / (norm + 1e-12))
+
+        buf = self.momentum * state.momentum + nat
+        lr = self.lr(state.step)
+        updates = unravel((-lr * buf).astype(v.dtype))
+        new_state = NGDState(state.step + 1, buf, state.damping)
+        return updates, new_state
+
+    def update_damping(self, state: NGDState, *, actual_reduction,
+                       predicted_reduction) -> NGDState:
+        """Trust-region λ adaptation hook (call after evaluating the step)."""
+        d = self.damping_policy.update(
+            state.damping, actual_reduction=actual_reduction,
+            predicted_reduction=predicted_reduction)
+        return state._replace(damping=d)

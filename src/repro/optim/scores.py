@@ -1,0 +1,87 @@
+"""Per-sample score-matrix construction — the S in (SᵀS + λI)x = v.
+
+``S[i, j] = (1/√n) · ∂ log P_θ(x_i) / ∂θ_j``  (paper §2).
+
+Built with ``vmap(grad)`` over the batch and flattened with
+``ravel_pytree``. Memory is bounded two ways:
+
+* ``chunk`` — samples are processed in chunks via ``lax.map`` so peak
+  activation memory is one chunk's backward pass, not the whole batch's.
+* the output S is materialized once, (n, m), in the caller-specified dtype
+  (bf16 halves the Fisher-buffer footprint; the Gram accumulates fp32).
+
+Also provides the matrix-free Fisher matvec (for the CG baseline) built
+from jvp/vjp — no S materialization at all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+__all__ = ["per_sample_scores", "make_fisher_matvec", "flatten_like"]
+
+
+def flatten_like(params):
+    """Return (flat, unravel_fn) for a parameter pytree."""
+    return ravel_pytree(params)
+
+
+def per_sample_scores(logp_fn: Callable, params, batch, *,
+                      chunk: Optional[int] = None,
+                      center: bool = False,
+                      dtype=None) -> jax.Array:
+    """S (n, m): scaled (optionally centered) per-sample score matrix.
+
+    Args:
+      logp_fn: ``logp_fn(params, example) -> scalar`` log-probability of a
+        single example (each leaf of ``batch`` has a leading sample axis).
+      chunk: process the batch in sample-chunks of this size (must divide n).
+      center: subtract the sample mean before scaling (SR mode, paper §3).
+      dtype: storage dtype of S (default: parameter dtype).
+    """
+    def one_score(example):
+        g = jax.grad(logp_fn)(params, example)
+        flat, _ = ravel_pytree(g)
+        return flat if dtype is None else flat.astype(dtype)
+
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    if chunk is None or chunk >= n:
+        S = jax.vmap(one_score)(batch)
+    else:
+        assert n % chunk == 0, (n, chunk)
+        chunked = jax.tree.map(
+            lambda x: x.reshape(n // chunk, chunk, *x.shape[1:]), batch)
+        S = jax.lax.map(jax.vmap(one_score), chunked)
+        S = S.reshape(n, -1)
+
+    if center:
+        S = S - jnp.mean(S, axis=0, keepdims=True)
+    return S / jnp.sqrt(n).astype(S.dtype)
+
+
+def make_fisher_matvec(logp_fn: Callable, params, batch, *,
+                       damping=0.0) -> Callable:
+    """Matrix-free (SᵀS + λI)·x using one vmapped jvp + one vjp.
+
+    ``Sx`` per sample is a jvp of logp; ``Sᵀ(·)`` is the vjp of the batched
+    logp. Used by the CG baseline and by tests as an S-free oracle.
+    """
+    flat0, unravel = ravel_pytree(params)
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+
+    def batched_logp(p):
+        return jax.vmap(lambda ex: logp_fn(p, ex))(batch) / jnp.sqrt(n)
+
+    def matvec(x_flat):
+        dp = unravel(x_flat.astype(flat0.dtype))
+        _, Sx = jax.jvp(batched_logp, (params,), (dp,))          # (n,)
+        _, vjp = jax.vjp(batched_logp, params)
+        (STSx,) = vjp(Sx)
+        flat, _ = ravel_pytree(STSx)
+        return flat + jnp.asarray(damping, flat.dtype) * x_flat
+
+    return matvec

@@ -1,0 +1,118 @@
+"""Dry-run machinery: HLO collective accounting, roofline math, and one real
+(arch × shape × production-mesh) compile in a subprocess."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.hlo_analysis import parse_collectives, roofline, HW
+
+FAKE_HLO = """
+%loop_body.1 (arg.1: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %ar.inner = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %p9), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+
+%loop_cond.1 (arg.2: (s32[], f32[16,128])) -> pred[] {
+  %c10 = s32[] constant(10)
+  ROOT %lt = pred[] compare(%gte, %c10), direction=LT
+}
+
+ENTRY %main.9 (p0: f32[16,128]) -> f32[16,128] {
+  %ar = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[4,256]{1,0} all-gather(bf16[1,256]{1,0} %p1), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[8]{0} reduce-scatter(f32[64]{0} %p2), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %cp = u32[32]{0} collective-permute(u32[32]{0} %p3), source_target_pairs={{0,1}}
+  %a2a = f32[128]{0} all-to-all(f32[128]{0} %p4), replica_groups={{0,1}}
+  %w = (s32[], f32[16,128]) while(%tup), condition=%loop_cond.1, body=%loop_body.1
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    c = parse_collectives(FAKE_HLO)
+    # 1 in entry + 10 inside the while body (trip count from %c10)
+    assert c["all-reduce"]["count"] == 11
+    assert c["all-reduce"]["bytes"] == 11 * 16 * 128 * 4
+    assert c["all-gather"]["count"] == 1
+    assert c["all-gather"]["bytes"] == 4 * 256 * 2
+    assert c["reduce-scatter"]["bytes"] == 8 * 4
+    assert c["collective-permute"]["bytes"] == 32 * 4
+    assert c["all-to-all"]["count"] == 1
+    # ring adjustments: AR wire = 2·B·(k-1)/k with k=4
+    assert c["all-reduce"]["wire_bytes"] == int(11 * 2 * 16 * 128 * 4 * 3 / 4)
+    assert c["total_bytes"] > 0
+
+
+def test_analyzer_matches_xla_on_scan_free_module():
+    """On a while-free module our dot-FLOP count must equal XLA's."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.hlo_analysis import analyze_module
+    A = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    compiled = jax.jit(lambda x: (x @ x) @ x).lower(A).compile()
+    ours = analyze_module(compiled.as_text())["flops"]
+    theirs = compiled.cost_analysis()["flops"]
+    assert ours == pytest.approx(theirs, rel=0.01)
+
+
+def test_analyzer_scales_scan_bodies():
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.hlo_analysis import analyze_module
+    A = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def loop(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    compiled = jax.jit(loop).lower(A).compile()
+    ours = analyze_module(compiled.as_text())["flops"]
+    assert ours == pytest.approx(7 * 2 * 64**3, rel=0.01)
+    # XLA undercounts: while body visited once
+    assert compiled.cost_analysis()["flops"] == pytest.approx(2 * 64**3,
+                                                              rel=0.01)
+
+
+def test_roofline_terms_and_dominance():
+    r = roofline(flops=197e12, hbm_bytes=819e9, wire_bytes=0.0,
+                 model_flops=100e12, chips=1)
+    assert r["t_compute_s"] == pytest.approx(1.0)
+    assert r["t_memory_s"] == pytest.approx(1.0)
+    assert r["dominant"] in ("compute", "memory")
+    r2 = roofline(flops=1e12, hbm_bytes=1e9, wire_bytes=500e9)
+    assert r2["dominant"] == "collective"
+    assert r2["t_collective_s"] == pytest.approx(10.0)
+
+
+def test_active_params_moe_discount():
+    from repro import configs
+    from repro.launch.dryrun import active_params
+    from repro.models.api import get_api
+    cfg = configs.get_config("qwen3-moe-235b-a22b")
+    specs = get_api(cfg).param_specs()
+    total, active = active_params(specs, cfg)
+    assert 2.1e11 < total < 2.5e11
+    assert 1.5e10 < active < 3.0e10          # ≈22B active
+
+
+@pytest.mark.slow
+def test_real_dryrun_cell_on_production_mesh(tmp_path):
+    """whisper-base decode on the 512-device multi-pod mesh, end to end."""
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-base", "--shape", "decode_32k", "--mesh", "multi",
+         "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(
+        (tmp_path / "whisper-base__decode_32k__multi.json").read_text())
+    assert rec["chips"] == 512
+    assert rec["memory"]["peak_bytes"] < 16 * 2**30       # fits v5e HBM
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")

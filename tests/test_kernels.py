@@ -1,0 +1,113 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), swept over shapes
+and dtypes per the brief."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chol_solve
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+SHAPES = [(8, 128), (32, 300), (100, 1000), (128, 2048), (130, 515)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rel(a, b):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_gram_kernel(shape, dtype):
+    S = jnp.asarray(RNG.normal(size=shape), dtype)
+    W = ops.gram(S, mode="interpret")
+    assert W.dtype == jnp.float32
+    assert _rel(W, ref.gram_ref(S)) < 5e-6
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_gram_sv_fused_kernel(shape, dtype):
+    S = jnp.asarray(RNG.normal(size=shape), dtype)
+    v = jnp.asarray(RNG.normal(size=(shape[1],)), dtype)
+    W, u = ops.gram_sv(S, v, mode="interpret")
+    Wr, ur = ref.gram_sv_ref(S, v)
+    assert _rel(W, Wr) < 5e-6 and _rel(u, ur) < 5e-6
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_ngd_apply_kernel(shape, dtype):
+    n, m = shape
+    S = jnp.asarray(RNG.normal(size=shape), dtype)
+    w = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(m,)), dtype)
+    x = ops.ngd_apply(S, w, v, 0.37, mode="interpret")
+    assert _rel(x, ref.ngd_apply_ref(S, w, v, 0.37)) < 5e-6
+
+
+@pytest.mark.parametrize("n", [16, 48, 64, 100, 128, 160])
+def test_cholesky_kernel(n):
+    A = RNG.normal(size=(n, n)).astype(np.float32)
+    W = jnp.asarray(A @ A.T + n * np.eye(n), jnp.float32)
+    L = ops.cholesky(W, mode="interpret")
+    Lr = ref.cholesky_ref(W)
+    assert _rel(L, Lr) < 1e-5
+    # L is lower triangular and reconstructs W
+    assert np.allclose(np.triu(np.asarray(L), 1), 0.0)
+    np.testing.assert_allclose(np.asarray(L @ L.T), np.asarray(W),
+                               rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("shape", [(16, 100), (64, 777), (128, 1024)])
+def test_fused_solver_matches_algorithm1(shape):
+    n, m = shape
+    S = jnp.asarray(RNG.normal(size=shape), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(m,)), jnp.float32)
+    x = ops.chol_solve_fused(S, v, 0.2, mode="interpret")
+    x_ref = chol_solve(S, v, 0.2)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_ref),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_kernel_routing_defaults_to_ref_on_cpu():
+    """mode=None must not invoke Pallas on the CPU backend."""
+    S = jnp.asarray(RNG.normal(size=(8, 64)), jnp.float32)
+    W = ops.gram(S)          # auto: CPU → reference path
+    assert _rel(W, ref.gram_ref(S)) < 1e-6
+
+
+@pytest.mark.parametrize("gqa", [(2, 1), (2, 2), (1, 4)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_kernel(gqa, causal, window):
+    """Pallas flash attention vs the jnp blockwise reference (which is
+    itself pinned against the naive oracle in test_models.py)."""
+    from repro.models.layers import flash_attention as ref_attn
+    B, KH, g = 1, gqa[0], gqa[1]
+    H, T, hd = KH * g, 256, 32
+    q = jnp.asarray(RNG.normal(size=(B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, KH, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, KH, hd)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              mode="interpret", bq=128, bk=64)
+    refo = ref_attn(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_padded_q():
+    """Non-block-multiple Tq is padded and sliced exactly."""
+    from repro.models.layers import flash_attention as ref_attn
+    B, KH, g, T, hd = 1, 2, 2, 200, 32
+    q = jnp.asarray(RNG.normal(size=(B, T, KH * g, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, 256, KH, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, 256, KH, hd)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, mode="interpret",
+                              bq=128, bk=128)
+    refo = ref_attn(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,173 @@
+"""Layer-level model tests: attention vs naive reference (hypothesis
+sweeps), chunked SSD vs exact recurrence, MoE dispatch invariants, ring
+cache equivalence."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models.config import BlockSlot, ModelConfig
+
+RNG = np.random.default_rng(11)
+
+
+def naive_attn(q, k, v, causal=True, window=None, softcap=None, scale=None,
+               q_offset=0):
+    B, Tq, H, hd = q.shape
+    _, Tk, KH, _ = k.shape
+    g = H // KH
+    scale = scale or hd ** -0.5
+    qg = np.asarray(q, np.float32).reshape(B, Tq, KH, g, hd)
+    s = np.einsum("btkgd,bskd->btkgs", qg * scale, np.asarray(k, np.float32))
+    if softcap:
+        s = softcap * np.tanh(s / softcap)
+    qp = q_offset + np.arange(Tq)
+    kp = np.arange(Tk)
+    mask = np.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kp[None] <= qp[:, None]
+    if window:
+        mask &= kp[None] > qp[:, None] - window
+    s = np.where(mask[None, :, None, None, :], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("btkgs,bskd->btkgd", p,
+                     np.asarray(v, np.float32)).reshape(B, Tq, H, hd)
+
+
+@hypothesis.settings(max_examples=12, deadline=None)
+@hypothesis.given(
+    T=st.integers(4, 48), kh=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]), window=st.sampled_from([None, 8]),
+    softcap=st.sampled_from([None, 30.0]), blk=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 1000))
+def test_flash_attention_property(T, kh, g, window, softcap, blk, seed):
+    rng = np.random.default_rng(seed)
+    B, hd = 2, 8
+    H = kh * g
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, kh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, kh, hd)), jnp.float32)
+    out = L.flash_attention(q, k, v, causal=True, window=window,
+                            softcap=softcap, kv_block=blk)
+    ref = naive_attn(q, k, v, causal=True, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_kv_len_and_positions():
+    B, T, H, hd = 1, 1, 2, 8
+    S = 12
+    q = jnp.asarray(RNG.normal(size=(B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    # ring layout: slot j holds position p = perm[j]; invalid slots < 0
+    perm = np.array([4, 5, 6, 7, 0, 1, 2, 3, -1, -1, -1, -1])
+    out = L.flash_attention(q, k, v, causal=True, q_offset=7,
+                            k_positions=jnp.asarray(perm), kv_block=4)
+    order = [np.where(perm == p)[0][0] for p in range(8)]
+    ref = naive_attn(q, np.asarray(k)[:, order], np.asarray(v)[:, order],
+                     causal=True, q_offset=7)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(T=st.sampled_from([8, 12, 32]),
+                  chunk=st.sampled_from([4, 8, 16]),
+                  g=st.sampled_from([1, 2]),
+                  seed=st.integers(0, 1000))
+def test_ssd_chunked_equals_recurrence(T, chunk, g, seed):
+    rng = np.random.default_rng(seed)
+    cfg = ModelConfig(name="t", d_model=32, ssm_state=8, ssm_head_dim=8,
+                      ssm_groups=g, ssd_chunk=chunk)
+    Bz, nh, hp, ds = 2, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xh = jnp.asarray(rng.normal(size=(Bz, T, nh, hp)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(Bz, T, nh)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, size=(nh,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(Bz, T, g, ds)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(Bz, T, g, ds)), jnp.float32)
+    y, hT = L._ssd_inner(xh, dt, A, Bm, Cm, cfg)
+
+    h = np.zeros((Bz, nh, ds, hp))
+    ys = []
+    rep = nh // g
+    for t in range(T):
+        Bt = np.repeat(np.asarray(Bm)[:, t], rep, axis=1)
+        Ct = np.repeat(np.asarray(Cm)[:, t], rep, axis=1)
+        a = np.exp(np.asarray(dt)[:, t] * np.asarray(A)[None])
+        h = a[:, :, None, None] * h + np.einsum(
+            "bh,bhd,bhp->bhdp", np.asarray(dt)[:, t], Bt,
+            np.asarray(xh)[:, t])
+        ys.append(np.einsum("bhd,bhdp->bhp", Ct, h))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), h, rtol=1e-4, atol=1e-4)
+
+
+def test_moe_dispatch_invariants():
+    cfg = ModelConfig(name="m", d_model=16, n_experts=4, top_k=2, d_ff=32,
+                      capacity_factor=4.0)   # high capacity: no drops
+    d = cfg.d_model
+    p = {"router": jnp.asarray(RNG.normal(size=(d, 4)) * 0.1, jnp.float32),
+         "w_gate": jnp.asarray(RNG.normal(size=(4, d, 32)) * 0.1, jnp.float32),
+         "w_up": jnp.asarray(RNG.normal(size=(4, d, 32)) * 0.1, jnp.float32),
+         "w_down": jnp.asarray(RNG.normal(size=(4, 32, d)) * 0.1, jnp.float32)}
+    x = jnp.asarray(RNG.normal(size=(2, 8, d)), jnp.float32)
+    y, aux = L.moe_block(x, p, cfg)
+    assert y.shape == x.shape and bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) > 0
+
+    # with capacity → 0, everything drops and the output must be exactly 0
+    cfg0 = cfg.scaled(capacity_factor=1e-9)
+    y0, _ = L.moe_block(x, p, cfg0)
+    # capacity is max(int(...), 1) so one slot per expert survives; ensure
+    # the layer stays finite and bounded rather than asserting exact zero.
+    assert bool(jnp.all(jnp.isfinite(y0)))
+
+
+def test_moe_permutation_equivariance():
+    """Permuting tokens permutes outputs (router is position-free)."""
+    cfg = ModelConfig(name="m", d_model=16, n_experts=4, top_k=2, d_ff=32,
+                      capacity_factor=4.0)
+    d = cfg.d_model
+    p = {"router": jnp.asarray(RNG.normal(size=(d, 4)) * 0.1, jnp.float32),
+         "w_gate": jnp.asarray(RNG.normal(size=(4, d, 32)) * 0.1, jnp.float32),
+         "w_up": jnp.asarray(RNG.normal(size=(4, d, 32)) * 0.1, jnp.float32),
+         "w_down": jnp.asarray(RNG.normal(size=(4, 32, d)) * 0.1, jnp.float32)}
+    x = jnp.asarray(RNG.normal(size=(1, 8, d)), jnp.float32)
+    y, _ = L.moe_block(x, p, cfg)
+    perm = np.array([3, 1, 7, 0, 5, 2, 6, 4])
+    y_perm, _ = L.moe_block(x[:, perm], p, cfg)
+    np.testing.assert_allclose(np.asarray(y[:, perm]), np.asarray(y_perm),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE attention logits depend only on relative positions."""
+    hd = 16
+    q = jnp.asarray(RNG.normal(size=(1, 4, 1, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 4, 1, hd)), jnp.float32)
+    pos = jnp.arange(4)[None]
+    q1 = L.rope(q, pos, theta=1e4)
+    k1 = L.rope(k, pos, theta=1e4)
+    q2 = L.rope(q, pos + 100, theta=1e4)
+    k2 = L.rope(k, pos + 100, theta=1e4)
+    s1 = np.einsum("bthd,bshd->bts", np.asarray(q1), np.asarray(k1))
+    s2 = np.einsum("bthd,bshd->bts", np.asarray(q2), np.asarray(k2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-3)
+
+
+def test_causal_conv_decode_matches_train():
+    K, C, T = 4, 6, 10
+    w = jnp.asarray(RNG.normal(size=(K, C)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, T, C)), jnp.float32)
+    y_train, _ = L._causal_conv(x, w)
+    state = jnp.zeros((2, K - 1, C))
+    outs = []
+    for t in range(T):
+        y, state = L._causal_conv(x[:, t:t + 1], w, state=state)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(y_train), rtol=1e-5, atol=1e-5)

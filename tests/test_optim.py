@@ -1,0 +1,164 @@
+"""Optimizer subsystem: NGD convergence, score-matrix construction, hybrid
+partitioning, AdamW, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chol_solve
+from repro.optim import (
+    AdamW,
+    HybridNGD,
+    NaturalGradient,
+    constant,
+    make_fisher_matvec,
+    merge_params,
+    partition_params,
+    per_sample_scores,
+    warmup_cosine,
+    warmup_linear,
+)
+
+RNG = np.random.default_rng(3)
+
+
+def logreg_problem(n=64, d=10, c=4, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(d, c)) * 0.1, jnp.float32),
+              "b": jnp.zeros((c,), jnp.float32)}
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    Y = jnp.asarray(rng.integers(0, c, size=(n,)))
+
+    def logp(p, ex):
+        x, y = ex
+        return jax.nn.log_softmax(x @ p["w"] + p["b"])[y]
+
+    def loss(p):
+        return -jnp.mean(jax.vmap(lambda ex: logp(p, ex))((X, Y)))
+
+    return params, (X, Y), logp, loss
+
+
+def test_scores_shape_and_chunking():
+    params, batch, logp, _ = logreg_problem()
+    S = per_sample_scores(logp, params, batch)
+    assert S.shape == (64, 44)
+    S2 = per_sample_scores(logp, params, batch, chunk=16)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S2), atol=1e-6)
+    Sc = per_sample_scores(logp, params, batch, center=True)
+    np.testing.assert_allclose(np.asarray(jnp.sum(Sc, 0)), np.zeros(44),
+                               atol=1e-5)
+
+
+def test_fisher_matvec_matches_explicit():
+    params, batch, logp, _ = logreg_problem()
+    S = per_sample_scores(logp, params, batch)
+    mv = make_fisher_matvec(logp, params, batch, damping=0.05)
+    x = jnp.asarray(RNG.normal(size=(S.shape[1],)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(mv(x)),
+                               np.asarray(S.T @ (S @ x) + 0.05 * x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ngd_beats_sgd_per_step():
+    """On over-parameterized logistic regression (m = 200 > n = 48 — the
+    paper's regime), NGD converges in far fewer steps than plain gradient
+    descent at the same step budget."""
+    params, batch, logp, loss = logreg_problem(n=48, d=24, c=8)
+    gfun = jax.grad(loss)
+
+    def run_ngd(p, steps=20):
+        opt = NaturalGradient(0.5, damping=1e-2, momentum=0.0)
+        st = opt.init(p)
+        for _ in range(steps):
+            S = per_sample_scores(logp, p, batch)
+            upd, st = opt.update(gfun(p), st, p, scores=S)
+            p = jax.tree.map(jnp.add, p, upd)
+        return float(loss(p))
+
+    def run_gd(p, steps=20, lr=1.0):
+        for _ in range(steps):
+            g = gfun(p)
+            p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+        return float(loss(p))
+
+    l_ngd = run_ngd(params)
+    l_gd = run_gd(params)
+    assert l_ngd < l_gd, (l_ngd, l_gd)
+
+
+def test_ngd_momentum_and_clip():
+    params, batch, logp, loss = logreg_problem()
+    opt = NaturalGradient(0.5, damping=1e-2, momentum=0.9,
+                          clip_natgrad_norm=0.1)
+    st = opt.init(params)
+    S = per_sample_scores(logp, params, batch)
+    upd, st2 = opt.update(jax.grad(loss)(params), st, params, scores=S)
+    # momentum buffer norm is clipped
+    assert float(jnp.linalg.norm(st2.momentum)) <= 0.1 + 1e-5
+    assert int(st2.step) == 1
+
+
+def test_adamw_reduces_quadratic():
+    p = {"x": jnp.ones((8,), jnp.float32) * 3}
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    opt = AdamW(0.1, weight_decay=0.0)
+    st = opt.init(p)
+    for _ in range(50):
+        g = jax.grad(loss)(p)
+        upd, st = opt.update(g, st, p)
+        p = jax.tree.map(jnp.add, p, upd)
+    assert float(loss(p)) < 0.5
+
+
+def test_hybrid_partition_roundtrip():
+    params = {"head": jnp.ones((3,)), "body": {"w": jnp.zeros((2,))}}
+    sel, rest = partition_params(params, lambda path: "head" in path)
+    assert sel["head"] is not None and sel["body"]["w"] is None
+    merged = merge_params(sel, rest)
+    assert jax.tree_util.tree_structure(merged) == \
+        jax.tree_util.tree_structure(params)
+
+
+def test_hybrid_update_applies_both():
+    params, batch, logp, loss = logreg_problem()
+    hyb = HybridNGD(lambda path: path.startswith("w"),
+                    ngd=NaturalGradient(0.5, damping=1e-2, momentum=0.0),
+                    adamw=AdamW(1e-2, weight_decay=0.0))
+    st = hyb.init(params)
+    g = jax.grad(loss)(params)
+    Ssub = per_sample_scores(
+        lambda pw, ex: logp({**params, **pw}, ex), {"w": params["w"]}, batch)
+    upd, st = hyb.update(g, st, params, scores=Ssub)
+    assert all(bool(jnp.all(jnp.isfinite(u)))
+               for u in jax.tree_util.tree_leaves(upd))
+    assert float(jnp.abs(upd["w"]).max()) > 0
+    assert float(jnp.abs(upd["b"]).max()) > 0
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, warmup_steps=10, total_steps=110)
+    assert float(s(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(s(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-2)
+    assert float(s(jnp.asarray(110))) == pytest.approx(0.1, abs=1e-2)
+    sl = warmup_linear(2.0, warmup_steps=4, total_steps=24)
+    assert float(sl(jnp.asarray(24))) == pytest.approx(0.0, abs=1e-5)
+    assert float(constant(0.3)(jnp.asarray(7))) == pytest.approx(0.3)
+
+
+def test_ngd_with_pallas_fused_solver():
+    """The optimizer accepts the kernel-composed solver as a drop-in."""
+    from repro.kernels import ops
+    params, batch, logp, loss = logreg_problem()
+    solver = lambda S, v, lam: ops.chol_solve_fused(S, v, lam,
+                                                    mode="interpret")
+    opt = NaturalGradient(0.5, damping=1e-2, momentum=0.0, solver=solver)
+    st = opt.init(params)
+    S = per_sample_scores(logp, params, batch)
+    upd, _ = opt.update(jax.grad(loss)(params), st, params, scores=S)
+    ref_opt = NaturalGradient(0.5, damping=1e-2, momentum=0.0)
+    upd_ref, _ = ref_opt.update(jax.grad(loss)(params), ref_opt.init(params),
+                                params, scores=S)
+    np.testing.assert_allclose(np.asarray(upd["w"]),
+                               np.asarray(upd_ref["w"]),
+                               rtol=1e-3, atol=1e-5)

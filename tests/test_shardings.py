@@ -1,0 +1,69 @@
+"""Unit tests for the sharding rules (no devices needed — specs only)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.shardings import batch_spec, param_pspec
+
+
+class FakeLeaf:
+    def __init__(self, shape):
+        self.shape = shape
+        self.ndim = len(shape)
+
+
+CASES = [
+    # (path, shape, fsdp, expected)
+    ("blocks/0/wq", (21, 3584, 4096), True, P(None, "data", "model")),
+    ("blocks/0/wq", (21, 3584, 4096), False, P(None, None, "model")),
+    ("blocks/0/wo", (21, 4096, 3584), True, P(None, "model", "data")),
+    ("blocks/0/w_gate", (21, 3584, 14336), True, P(None, "data", "model")),
+    ("blocks/0/w_down", (21, 14336, 3584), True, P(None, "model", "data")),
+    # MoE expert weights (4-D): experts → model (EP)
+    ("blocks/0/w_gate", (94, 128, 4096, 1536), True,
+     P(None, "model", "data", None)),
+    ("blocks/0/w_down", (94, 128, 1536, 4096), True,
+     P(None, "model", None, "data")),
+    ("blocks/0/router", (94, 4096, 128), True, P(None, "data", None)),
+    # mamba
+    ("blocks/0/in_proj", (48, 2048, 8512), True, P(None, "data", "model")),
+    ("blocks/0/out_proj", (48, 4096, 2048), True, P(None, "model", "data")),
+    ("blocks/0/A_log", (48, 64), True, P(None, "model")),
+    # embeddings
+    ("embed", (256256, 3584), True, P("model", "data")),
+    ("head", (4096, 128256), True, P("data", "model")),
+    ("pos_embed", (448, 512), True, P()),
+    # norms replicate
+    ("blocks/0/norm/g", (21, 3584), True, P()),
+    ("final_norm/g", (3584,), True, P()),
+]
+
+
+@pytest.mark.parametrize("path,shape,fsdp,expected", CASES)
+def test_param_rules(path, shape, fsdp, expected):
+    assert param_pspec(path, shape, fsdp=fsdp) == expected
+
+
+def test_ep_over_data_expert_layout():
+    spec = param_pspec("blocks/0/w_gate", (32, 16, 4096, 14336), fsdp=False,
+                       ep_over_data=True)
+    assert spec == P(None, "data", None, "model")
+    # 2-D dense weights are unaffected by the EP flag
+    spec2 = param_pspec("blocks/0/w_gate", (32, 4096, 14336), fsdp=False,
+                        ep_over_data=True)
+    assert spec2 == P(None, None, "model")
+
+
+def test_tuned_config_registry():
+    from repro import configs
+    t = configs.get_tuned("gemma2-9b")
+    assert t.attn_seq_shard and t.attn_bf16
+    t2 = configs.get_tuned("mamba2-1.3b")
+    assert t2.ssd_factored and t2.ssd_shard
+    # MoE serve kinds keep the baseline attention path (§Perf)
+    t3 = configs.get_tuned("qwen3-moe-235b-a22b", kind="prefill")
+    assert not t3.attn_seq_shard
+    t4 = configs.get_tuned("qwen3-moe-235b-a22b", kind="train")
+    assert t4.attn_seq_shard and t4.remat == "full"
+    t5 = configs.get_tuned("jamba-v0.1-52b")
+    assert t5.moe_ep_over_data
