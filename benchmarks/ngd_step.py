@@ -1,6 +1,15 @@
 """End-to-end optimizer-step benchmark: NGD (Algorithm 1, per solver) vs
 AdamW on a reduced LM config — the trainer-level view of the paper's claim
-that the solve is cheap enough to use every step."""
+that the solve is cheap enough to use every step.
+
+``--blocked`` additionally compares the dense-S NGD path against the
+per-layer ``BlockedScores`` path: wall-clock per step AND compiled peak
+memory (XLA's ``memory_analysis``: transient temp bytes + argument +
+output). The dense path materializes the flat (n, m) score matrix every
+step; the blocked path never concatenates, so its transient peak must sit
+strictly below dense — that delta is the whole point of the operator
+refactor and is asserted here.
+"""
 from __future__ import annotations
 
 import time
@@ -22,6 +31,21 @@ def _bench_loop(step_fn, state, steps=5):
         state, _ = step_fn(state, s)
     jax.block_until_ready(jax.tree_util.tree_leaves(state["params"])[0])
     return (time.perf_counter() - t0) / steps
+
+
+def _compiled_memory(step_fn, state, batch_example):
+    """Peak compiled memory of the jitted train step in bytes:
+    transient temps + arguments + outputs (XLA memory_analysis)."""
+    from repro.data import place
+    jstep = step_fn.jitted
+    _, _, ishard = step_fn.shardings
+    b = place(batch_example, ishard)
+    lowered = jstep.lower(state["params"], state["opt"], b)
+    ma = lowered.compile().memory_analysis()
+    if ma is None:                                   # backend w/o analysis
+        return None
+    return (ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes)
 
 
 def run(emit=print, batch=16, seq=64):
@@ -46,5 +70,41 @@ def run(emit=print, batch=16, seq=64):
     return times
 
 
+def run_blocked(emit=print, batch=16, seq=64, arch="llama3.2-3b"):
+    """Dense vs blocked NGD: wall-clock + compiled peak memory."""
+    cfg = configs.get_smoke(arch)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    out = {}
+    for name, blocked in [("dense", False), ("blocked", True)]:
+        init_state, step_fn, _, _, data = build_trainer(
+            cfg, mesh=mesh, optimizer_name="ngd", lr=1e-3, damping=1e-3,
+            batch=batch, seq=seq, total_steps=10, solver="chol",
+            blocked=blocked)
+        state = init_state()
+        mem = _compiled_memory(step_fn, state, data.batch_at(0))
+        t = _bench_loop(step_fn, state)
+        out[name] = {"time_s": t, "mem_bytes": mem}
+        emit(f"ngd_step/{name}_b{batch}_s{seq},{t * 1e6:.0f},")
+        if mem is not None:
+            emit(f"ngd_step/{name}_peak_mem_bytes,,{mem}")
+    if out["dense"]["mem_bytes"] and out["blocked"]["mem_bytes"]:
+        ratio = out["blocked"]["mem_bytes"] / out["dense"]["mem_bytes"]
+        below = out["blocked"]["mem_bytes"] < out["dense"]["mem_bytes"]
+        emit(f"ngd_step/blocked_mem_vs_dense,,"
+             f"{ratio:.3f}x ({'OK below' if below else 'NOT below'})")
+        out["blocked_below_dense"] = bool(below)
+        assert below, (
+            "blocked path's compiled peak memory must sit strictly below "
+            f"dense: blocked={out['blocked']['mem_bytes']} "
+            f"dense={out['dense']['mem_bytes']}")
+    emit(f"ngd_step/blocked_time_vs_dense,,"
+         f"{out['blocked']['time_s'] / out['dense']['time_s']:.2f}x")
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    if "--blocked" in sys.argv:
+        run_blocked()
+    else:
+        run()

@@ -15,6 +15,7 @@ def main() -> None:
 
     from benchmarks import ngd_step
     ngd_step.run()
+    ngd_step.run_blocked()
 
     from benchmarks import roofline
     roofline.run()

@@ -53,6 +53,52 @@ def fit_loglog_slope(xs, ys) -> float:
     return float(np.polyfit(xs, ys, 1)[0])
 
 
+def bench_blocked(shapes=None, *, nblocks=8, solvers=("chol", "eigh", "cg"),
+                  seed=0, emit=print):
+    """Dense (n, m) vs BlockedScores chol at solver level: wall-clock plus
+    compiled peak memory (temp+arg+out bytes from XLA memory_analysis).
+    The blocked operand splits m into ``nblocks`` uneven per-layer-style
+    blocks; solve results agree to fp32 tolerance by the equivalence tests,
+    so only cost is measured here."""
+    from repro.core import BlockedScores, get_solver
+
+    shapes = shapes or [(256, 25_000), (512, 50_000)]
+    rng = np.random.default_rng(seed)
+    rows = []
+    for n, m in shapes:
+        S = jax.numpy.asarray(rng.normal(size=(n, m)), jax.numpy.float32)
+        v = jax.numpy.asarray(rng.normal(size=(m,)), jax.numpy.float32)
+        # uneven widths, like real per-layer blocks
+        cuts = sorted(rng.choice(np.arange(1, m), size=nblocks - 1,
+                                 replace=False))
+        widths = np.diff([0, *cuts, m]).tolist()
+        op = BlockedScores.from_dense(S, widths)
+        row = {"n": n, "m": m}
+        for name in solvers:
+            f = get_solver(name)
+            fd = jax.jit(lambda S, v, _f=f: _f(S, v, DAMPING))
+            fb = jax.jit(lambda o, v, _f=f: _f(o, v, DAMPING))
+            row[f"{name}_dense"] = _time(fd, S, v)
+            row[f"{name}_blocked"] = _time(fb, op, v)
+            for tag, fn_, args in (("dense", fd, (S, v)),
+                                   ("blocked", fb, (op, v))):
+                ma = fn_.lower(*args).compile().memory_analysis()
+                if ma is not None:
+                    row[f"{name}_{tag}_mem"] = (ma.temp_size_in_bytes
+                                                + ma.argument_size_in_bytes
+                                                + ma.output_size_in_bytes)
+        rows.append(row)
+        for name in solvers:
+            emit(f"table1/{name}_blocked_n{n}_m{m},"
+                 f"{row[f'{name}_blocked'] * 1e6:.1f},"
+                 f"{row[f'{name}_blocked'] / row[f'{name}_dense']:.2f}x dense")
+            dk, bk = f"{name}_dense_mem", f"{name}_blocked_mem"
+            if dk in row and bk in row:
+                emit(f"table1/{name}_blocked_mem_n{n}_m{m},,"
+                     f"{row[bk] / row[dk]:.3f}x dense ({row[bk]} B)")
+    return rows
+
+
 def run(full: bool = False, emit=print):
     """Emits ``name,us_per_call,derived`` CSV rows."""
     n_sweep = [(n, m) for n, m in TABLE1_SHAPES if m == 100_000] if full \
@@ -92,4 +138,7 @@ def run(full: bool = False, emit=print):
 
 if __name__ == "__main__":
     import sys
-    run(full="--full" in sys.argv)
+    if "--blocked" in sys.argv:
+        bench_blocked()
+    else:
+        run(full="--full" in sys.argv)

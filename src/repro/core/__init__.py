@@ -1,7 +1,18 @@
 """Core solver library — the paper's contribution (damped-NGD dual solve)."""
+from repro.core.operator import (
+    BlockedScores,
+    LazyBlockedScores,
+    ScoreOperator,
+    as_blocked_vector,
+    block_norm,
+    is_blocked,
+)
 from repro.core.solvers import (
     SOLVERS,
+    CholFactorization,
+    SolverStats,
     center_scores,
+    chol_factorize,
     chol_solve,
     cg_solve,
     direct_solve,
@@ -15,6 +26,7 @@ from repro.core.solvers import (
 )
 from repro.core.distributed import (
     make_sharded_solver,
+    sharded_blocked_chol_solve,
     sharded_chol_solve,
     sharded_chol_solve_2d,
 )
@@ -25,9 +37,12 @@ from repro.core.damping import (
 )
 
 __all__ = [
-    "SOLVERS", "center_scores", "chol_solve", "cg_solve", "direct_solve",
-    "eigh_solve", "get_solver", "gram", "gram_chunked", "minsr_solve",
-    "residual", "svd_solve", "make_sharded_solver", "sharded_chol_solve",
-    "sharded_chol_solve_2d", "ConstantDamping", "DampingState",
-    "LevenbergMarquardtDamping",
+    "SOLVERS", "BlockedScores", "CholFactorization", "LazyBlockedScores",
+    "ScoreOperator", "SolverStats", "as_blocked_vector", "block_norm",
+    "center_scores", "chol_factorize", "chol_solve", "cg_solve",
+    "direct_solve", "eigh_solve", "get_solver", "gram", "gram_chunked",
+    "is_blocked", "minsr_solve", "residual", "svd_solve",
+    "make_sharded_solver", "sharded_blocked_chol_solve",
+    "sharded_chol_solve", "sharded_chol_solve_2d", "ConstantDamping",
+    "DampingState", "LevenbergMarquardtDamping",
 ]

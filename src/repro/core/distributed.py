@@ -27,11 +27,26 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6: top-level export, replication check kwarg is `check_vma`
+    from jax import shard_map as _shard_map_impl
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x: experimental module, kwarg is `check_rep`
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _CHECK_KW = "check_rep"
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compatible shard_map with replication checking disabled
+    (the Gram psum deliberately produces replicated outputs from sharded
+    inputs, which the strict checker rejects on some jax versions)."""
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **{_CHECK_KW: False})
 
 __all__ = [
     "sharded_chol_solve",
     "sharded_chol_solve_2d",
+    "sharded_blocked_chol_solve",
     "make_sharded_solver",
 ]
 
@@ -75,13 +90,12 @@ def sharded_chol_solve(S: jax.Array, v: jax.Array, damping, *,
     carries the same sharding, so the optimizer applies it with zero
     re-sharding traffic.
     """
-    fn = shard_map(
+    fn = _shard_map(
         functools.partial(_dual_solve_local, model_axis=model_axis,
                           extra_sum_axes=extra_sum_axes),
         mesh=mesh,
         in_specs=(P(None, model_axis), P(model_axis), P()),
         out_specs=P(model_axis),
-        check_vma=False,
     )
     return fn(S, v, jnp.asarray(damping))
 
@@ -112,15 +126,78 @@ def sharded_chol_solve_2d(S: jax.Array, v: jax.Array, damping, *,
     replicated over data — exactly the layout of gradient buffers in a
     DP×TP trainer, so no re-sharding traffic on either side of the solve.
     """
-    fn = shard_map(
+    fn = _shard_map(
         functools.partial(_dual_solve_local_2d, data_axis=data_axis,
                           model_axis=model_axis, extra_sum_axes=extra_sum_axes),
         mesh=mesh,
         in_specs=(P(data_axis, model_axis), P(model_axis), P()),
         out_specs=P(model_axis),
-        check_vma=False,
     )
     return fn(S, v, jnp.asarray(damping))
+
+
+def _blocked_dual_solve_local(S_op, v_blocks, lam, *, model_axis: str,
+                              extra_sum_axes: tuple[str, ...] = ()):
+    """Blocked Algorithm 1 inside shard_map: every block (n, m_b) is a
+    column-sharded slab; the local Gram accumulates over the device's slab
+    of *every* block before the single n² psum, so collective cost is
+    identical to the dense path (one psum of n² + one of n·k) while no
+    flat (n, m) array exists on any device.
+    """
+    axes = (model_axis,) + tuple(extra_sum_axes)
+    n = S_op.n
+    acc = jnp.promote_types(S_op.dtype, jnp.float32)
+    S32 = S_op.astype(acc)
+    v32 = jax.tree.map(lambda b: b.astype(acc), tuple(v_blocks))
+
+    # Accumulate across local blocks first (fp32), then one psum each.
+    W = jax.lax.psum(S32.gram(mode="real"), axes)
+    u = jax.lax.psum(S32.matvec(v32), axes)
+
+    W = W + jnp.asarray(lam, acc) * jnp.eye(n, dtype=acc)
+    L = jnp.linalg.cholesky(W)          # replicated: n×n on every device
+    w = solve_triangular(L, u, lower=True)
+    w = solve_triangular(L.T, w, lower=False)
+    y = S32.rmatvec(w)
+    inv_lam = 1.0 / jnp.asarray(lam, acc)
+    return jax.tree.map(
+        lambda vb, yb, v0: ((vb - yb) * inv_lam).astype(v0.dtype),
+        v32, tuple(y), tuple(v_blocks))
+
+
+def sharded_blocked_chol_solve(S, v_blocks, damping, *,
+                               mesh: Mesh,
+                               model_axis: str = "model",
+                               extra_sum_axes: tuple[str, ...] = ()):
+    """Algorithm 1 on a ``BlockedScores`` operator whose blocks are each
+    sharded over ``model_axis`` columns (the per-layer analogue of
+    ``sharded_chol_solve``). ``v_blocks`` is the matching tuple of
+    per-block right-hand sides; the result keeps block structure and
+    sharding, so a per-layer optimizer applies it with zero re-sharding.
+
+    Consume the result per block (elementwise / gather). Known caveat:
+    ``jnp.concatenate`` across the returned blocks mis-reshards on some
+    jaxlib 0.4 CPU builds (replication over the unmentioned data axis is
+    turned into a sum) — and concatenating would defeat the blocked
+    representation anyway.
+    """
+    from repro.core.operator import BlockedScores, LazyBlockedScores
+
+    if isinstance(S, LazyBlockedScores):
+        S = S.materialize()
+    if not isinstance(S, BlockedScores):
+        raise TypeError("sharded_blocked_chol_solve needs a BlockedScores; "
+                        "use sharded_chol_solve for dense S")
+    v_blocks = tuple(v_blocks)
+    # P specs are pytree prefixes: one spec broadcasts over every block.
+    fn = _shard_map(
+        functools.partial(_blocked_dual_solve_local, model_axis=model_axis,
+                          extra_sum_axes=extra_sum_axes),
+        mesh=mesh,
+        in_specs=(P(None, model_axis), P(model_axis), P()),
+        out_specs=P(model_axis),
+    )
+    return fn(S, v_blocks, jnp.asarray(damping))
 
 
 def make_sharded_solver(mesh: Mesh, *, layout: str = "1d",
@@ -130,7 +207,12 @@ def make_sharded_solver(mesh: Mesh, *, layout: str = "1d",
 
     layout="1d": S sharded over params only (the RVB+23 strategy).
     layout="2d": S sharded over (samples, params).
+    layout="blocked": per-layer BlockedScores, each block column-sharded.
     """
+    if layout == "blocked":
+        return functools.partial(sharded_blocked_chol_solve, mesh=mesh,
+                                 model_axis=model_axis,
+                                 extra_sum_axes=extra_sum_axes)
     if layout == "1d":
         return functools.partial(sharded_chol_solve, mesh=mesh,
                                  model_axis=model_axis,

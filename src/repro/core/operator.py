@@ -1,0 +1,247 @@
+"""Blocked score-matrix operator — S as per-layer blocks, never flat.
+
+The paper's regime is m ≫ n, where m is the total parameter count. The
+dense path materializes S as one (n, m) array (built per step with
+``ravel_pytree``), so the memory ceiling is the flat S buffer rather than
+anything in Algorithm 1 itself. But the algorithm only touches S through
+three block-separable contractions:
+
+    gram:     W = S·Sᵀ   = Σ_b  S_b · S_bᵀ          (n, n)
+    matvec:   u = S·v    = Σ_b  S_b · v_b           (n,) / (n, k)
+    rmatvec:  y = Sᵀ·w   = [S_bᵀ · w  for b]        blocked (m_b,) pieces
+
+so S can stay a pytree of per-layer (n, m_b) blocks end to end.
+``BlockedScores`` is that representation; every solver in
+``repro.core.solvers`` dispatches on it, the optimizer keeps per-layer
+state, and the flat (n, m) array never exists.
+
+Vectors in parameter space (right-hand sides v, solutions x, momentum)
+are represented as plain tuples of per-block arrays — ordinary pytrees,
+so ``jax.tree.map`` / CG / optimizers compose with them directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "BlockedScores",
+    "LazyBlockedScores",
+    "ScoreOperator",
+    "as_blocked_vector",
+    "block_norm",
+    "is_blocked",
+]
+
+_HI = jax.lax.Precision.HIGHEST
+
+BlockedVector = Tuple[jax.Array, ...]
+
+
+def _ct(A: jax.Array, mode: str) -> jax.Array:
+    return A.conj().T if mode == "complex" else A.T
+
+
+@jax.tree_util.register_pytree_node_class
+class BlockedScores:
+    """Score matrix S (n, m) stored as ordered per-layer (n, m_b) blocks.
+
+    A registered pytree (leaves = the blocks), so it passes through jit,
+    shard_map, vmap and optimizer state untouched. ``names`` (aux data)
+    are optional per-block labels, e.g. parameter-leaf paths.
+    """
+
+    def __init__(self, blocks: Sequence[jax.Array],
+                 names: Optional[Sequence[str]] = None):
+        blocks = tuple(blocks)
+        if not blocks:
+            raise ValueError("BlockedScores needs at least one block")
+        self.blocks = blocks
+        self.names = tuple(names) if names is not None else None
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return self.blocks, self.names
+
+    @classmethod
+    def tree_unflatten(cls, names, blocks):
+        return cls(blocks, names=names)
+
+    # -- shape metadata ----------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.blocks[0].shape[0]
+
+    @property
+    def m(self) -> int:
+        return sum(b.shape[1] for b in self.blocks)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.n, self.m)
+
+    @property
+    def block_widths(self) -> tuple[int, ...]:
+        return tuple(b.shape[1] for b in self.blocks)
+
+    @property
+    def dtype(self):
+        return jnp.result_type(*self.blocks)
+
+    def __repr__(self):
+        return (f"BlockedScores(n={self.n}, m={self.m}, "
+                f"blocks={len(self.blocks)}, dtype={self.dtype})")
+
+    # -- representation changes -------------------------------------------
+    def astype(self, dtype) -> "BlockedScores":
+        return BlockedScores([b.astype(dtype) for b in self.blocks],
+                             names=self.names)
+
+    def realify(self) -> "BlockedScores":
+        """Paper §3 real-part transform per block: S_b ← [Re S_b; Im S_b]."""
+        return BlockedScores(
+            [jnp.concatenate([jnp.real(b), jnp.imag(b)], axis=0)
+             for b in self.blocks],
+            names=self.names)
+
+    def to_dense(self) -> jax.Array:
+        """Concatenate to the flat (n, m) array. Tests/oracles only — the
+        whole point of this class is that production paths never call it."""
+        return jnp.concatenate(self.blocks, axis=1)
+
+    @classmethod
+    def from_dense(cls, S: jax.Array, widths: Sequence[int],
+                   names: Optional[Sequence[str]] = None) -> "BlockedScores":
+        if sum(widths) != S.shape[1]:
+            raise ValueError(f"widths {tuple(widths)} don't sum to m={S.shape[1]}")
+        offsets = jnp.cumsum(jnp.asarray((0,) + tuple(widths)))
+        blocks = [S[:, int(offsets[i]):int(offsets[i + 1])]
+                  for i in range(len(widths))]
+        return cls(blocks, names=names)
+
+    @classmethod
+    def from_grads_pytree(cls, tree) -> "BlockedScores":
+        """Blocks from a per-sample-gradient pytree: each leaf (n, *shape)
+        becomes an (n, prod(shape)) block; leaf order == tree_leaves order,
+        which matches ``ravel_pytree`` concatenation order."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        names = [str(p) for p, _ in
+                 jax.tree_util.tree_leaves_with_path(tree)]
+        return cls([leaf.reshape(leaf.shape[0], -1) for leaf in leaves],
+                   names=names)
+
+    # -- vector plumbing ---------------------------------------------------
+    def split(self, v: jax.Array) -> BlockedVector:
+        """Split a flat (m,) or (m, k) array into matching blocks."""
+        out, off = [], 0
+        for w in self.block_widths:
+            out.append(v[off:off + w])
+            off += w
+        if off != v.shape[0]:
+            raise ValueError(f"vector length {v.shape[0]} != m={self.m}")
+        return tuple(out)
+
+    @staticmethod
+    def concat(v_blocks: BlockedVector) -> jax.Array:
+        return jnp.concatenate(v_blocks, axis=0)
+
+    # -- the three contractions -------------------------------------------
+    def gram(self, *, mode: str = "real", precision=_HI) -> jax.Array:
+        """W = S·Sᵀ (S·S† in complex mode), accumulated fp32+ across blocks
+        without ever concatenating: peak transient is one upcast block."""
+        acc_dtype = jnp.promote_types(self.dtype, jnp.float32)
+        W = None
+        for b in self.blocks:
+            b = b.astype(acc_dtype)
+            Wb = jnp.matmul(b, _ct(b, mode), precision=precision)
+            W = Wb if W is None else W + Wb
+        return W
+
+    def matvec(self, v: Union[jax.Array, BlockedVector], *,
+               precision=_HI) -> jax.Array:
+        """u = S·v, fp32+ accumulation. ``v`` flat (m,)/(m, k) or blocked."""
+        v_blocks = self.split(v) if not isinstance(v, (tuple, list)) else v
+        acc_dtype = jnp.promote_types(
+            jnp.promote_types(self.dtype, jnp.result_type(*v_blocks)),
+            jnp.float32)
+        u = None
+        for b, vb in zip(self.blocks, v_blocks):
+            ub = jnp.matmul(b.astype(acc_dtype), vb.astype(acc_dtype),
+                            precision=precision)
+            u = ub if u is None else u + ub
+        return u
+
+    def rmatvec(self, w: jax.Array, *, mode: str = "real",
+                precision=_HI) -> BlockedVector:
+        """y = Sᵀ·w (S†·w in complex mode), returned blocked."""
+        acc_dtype = jnp.promote_types(
+            jnp.promote_types(self.dtype, w.dtype), jnp.float32)
+        w = w.astype(acc_dtype)
+        return tuple(
+            jnp.matmul(_ct(b.astype(acc_dtype), mode), w, precision=precision)
+            for b in self.blocks)
+
+
+class LazyBlockedScores:
+    """Deferred ``BlockedScores``: holds a builder thunk and materializes
+    the blocks on first contraction (then caches).
+
+    The builder typically wraps chunked ``vmap(grad)`` score construction
+    (see ``repro.optim.scores.lazy_score_blocks``), so an operator can be
+    handed to a solver before any backward pass has run — and a solver
+    that turns out not to need S (e.g. a cached factorization re-solve)
+    never pays for it.
+    """
+
+    def __init__(self, builder: Callable[[], BlockedScores]):
+        self._builder = builder
+        self._cached: Optional[BlockedScores] = None
+
+    def materialize(self) -> BlockedScores:
+        if self._cached is None:
+            blocks = self._builder()
+            if not isinstance(blocks, BlockedScores):
+                blocks = BlockedScores.from_grads_pytree(blocks)
+            self._cached = blocks
+        return self._cached
+
+    def __getattr__(self, name):
+        # delegate everything (gram/matvec/rmatvec/shape/...) to the
+        # materialized operator; __getattr__ only fires for missing attrs.
+        return getattr(self.materialize(), name)
+
+
+# Either concrete or lazy blocked scores — what solvers dispatch on.
+ScoreOperator = (BlockedScores, LazyBlockedScores)
+
+
+def is_blocked(S: Any) -> bool:
+    """True if ``S`` is a blocked score operator rather than a dense array."""
+    return isinstance(S, ScoreOperator)
+
+
+def as_blocked_vector(S, v) -> tuple[BlockedVector, bool]:
+    """Normalize a right-hand side against operator ``S``.
+
+    Returns ``(v_blocks, was_flat)`` where ``was_flat`` records whether the
+    caller passed a single flat array (so the solver can hand back the same
+    form it was given).
+    """
+    if isinstance(v, (tuple, list)):
+        widths = tuple(b.shape[0] for b in v)
+        if widths != S.block_widths:
+            raise ValueError(
+                f"blocked vector widths {widths} != operator widths "
+                f"{S.block_widths}")
+        return tuple(v), False
+    return S.split(v), True
+
+
+def block_norm(v_blocks: BlockedVector) -> jax.Array:
+    """Global 2-norm over a blocked vector (fp32+)."""
+    sq = sum(jnp.sum(jnp.real(b * jnp.conj(b)).astype(jnp.float32))
+             for b in v_blocks)
+    return jnp.sqrt(sq)

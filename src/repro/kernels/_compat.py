@@ -1,0 +1,21 @@
+"""Version-compat aliases for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams`` and
+moved ``pltpu.SMEM`` → ``pltpu.MemorySpace.SMEM`` across 0.4 → 0.5+; the
+kernels import the names from here so they run on either line.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:  # jax 0.4.x
+    CompilerParams = pltpu.TPUCompilerParams
+
+try:
+    SMEM = pltpu.MemorySpace.SMEM
+except AttributeError:  # jax 0.4.x
+    SMEM = pltpu.SMEM
+
+__all__ = ["CompilerParams", "SMEM"]

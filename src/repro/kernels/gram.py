@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gram_pallas"]
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+__all__ = ["gram_pallas", "gram_acc_pallas"]
 
 
 def _gram_kernel(s_i_ref, s_j_ref, w_ref):
@@ -62,9 +64,59 @@ def gram_pallas(S: jax.Array, *, bn: int = 128, bk: int = 512,
         ],
         out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
         name="gram_ssT",
     )(S, S)
+
+
+def _gram_acc_kernel(w_in_ref, s_i_ref, s_j_ref, w_ref):
+    """Like ``_gram_kernel`` but seeded from an incoming accumulator tile
+    instead of zeros — the chaining primitive for blocked (per-layer) S."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        w_ref[...] = w_in_ref[...]
+
+    a = s_i_ref[...]
+    b = s_j_ref[...]
+    w_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def gram_acc_pallas(S: jax.Array, W_in: jax.Array, *, bn: int = 128,
+                    bk: int = 512, interpret: bool = False) -> jax.Array:
+    """W = W_in + S @ S.T with fp32 accumulation; ``W_in`` is donated
+    (aliased to the output), so chaining over B blocks keeps exactly one
+    (n, n) accumulator live in HBM regardless of B.
+
+    S must be padded to (bn, bk) tiles; W_in is (n, n) float32.
+    """
+    n, m = S.shape
+    assert n % bn == 0 and m % bk == 0, (n, m, bn, bk)
+    assert W_in.shape == (n, n) and W_in.dtype == jnp.float32, W_in
+    grid = (n // bn, n // bn, m // bk)
+
+    return pl.pallas_call(
+        _gram_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        input_output_aliases={0: 0},
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="gram_ssT_acc",
+    )(W_in, S, S)

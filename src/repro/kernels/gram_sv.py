@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 __all__ = ["gram_sv_pallas"]
 
 
@@ -76,7 +78,7 @@ def gram_sv_pallas(S: jax.Array, v: jax.Array, *, bn: int = 128,
             jax.ShapeDtypeStruct((n, n), jnp.float32),
             jax.ShapeDtypeStruct((n, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams, SMEM as _SMEM
+
 __all__ = ["ngd_apply_pallas"]
 
 
@@ -52,11 +54,11 @@ def ngd_apply_pallas(S: jax.Array, w: jax.Array, v: jax.Array, lam,
             pl.BlockSpec((n, bk), lambda k: (0, k)),
             pl.BlockSpec((n, 1), lambda k: (0, 0)),
             pl.BlockSpec((bk, 1), lambda k: (k, 0)),
-            pl.BlockSpec((1, 1), lambda k: (0, 0), memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec((1, 1), lambda k: (0, 0), memory_space=_SMEM),
         ],
         out_specs=pl.BlockSpec((bk, 1), lambda k: (k, 0)),
         out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

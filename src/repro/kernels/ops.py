@@ -18,14 +18,15 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from repro.core.operator import BlockedScores, is_blocked
 from repro.kernels import ref
 from repro.kernels.cholesky import MAX_SINGLE_BLOCK_N, cholesky_pallas
-from repro.kernels.gram import gram_pallas
+from repro.kernels.gram import gram_acc_pallas, gram_pallas
 from repro.kernels.gram_sv import gram_sv_pallas
 from repro.kernels.ngd_apply import ngd_apply_pallas
 
-__all__ = ["gram", "gram_sv", "ngd_apply", "cholesky", "chol_solve_fused",
-           "flash_attention", "on_tpu", "pad_to"]
+__all__ = ["gram", "gram_blocks", "gram_sv", "ngd_apply", "cholesky",
+           "chol_solve_fused", "flash_attention", "on_tpu", "pad_to"]
 
 
 def on_tpu() -> bool:
@@ -58,14 +59,51 @@ def _pick_blocks(n: int, m: int) -> tuple[int, int]:
     return bn, bk
 
 
-def gram(S: jax.Array, *, mode: Optional[str] = None) -> jax.Array:
-    """W = S@S.T (fp32) via the Pallas kernel (padded), else the reference."""
+def gram(S, *, mode: Optional[str] = None) -> jax.Array:
+    """W = S@S.T (fp32) via the Pallas kernel (padded), else the reference.
+    A blocked operator routes to the chained per-block kernel."""
+    if is_blocked(S):
+        return gram_blocks(S, mode=mode)
     if not _use_kernels(mode):
         return ref.gram_ref(S)
     n, m = S.shape
     bn, bk = _pick_blocks(n, m)
     Sp = pad_to(S, (bn, bk))
     W = gram_pallas(Sp, bn=bn, bk=bk, interpret=(mode == "interpret"))
+    return W[:n, :n]
+
+
+def gram_blocks(S, *, mode: Optional[str] = None) -> jax.Array:
+    """W = Σ_b S_b @ S_bᵀ over per-layer blocks, fp32.
+
+    Kernel path: the first block runs the zero-init Gram kernel; every
+    further block runs ``gram_acc_pallas``, whose accumulator input is
+    aliased to its output — one (n, n) fp32 buffer is threaded through the
+    whole chain, so HBM traffic is one read of each block plus a single
+    resident accumulator, never a flat (n, m) concatenation.
+    """
+    if hasattr(S, "materialize"):
+        S = S.materialize()
+    blocks = S.blocks if isinstance(S, BlockedScores) else tuple(S)
+    n = blocks[0].shape[0]
+    if not _use_kernels(mode):
+        W = None
+        for b in blocks:
+            Wb = ref.gram_ref(b)
+            W = Wb if W is None else W + Wb
+        return W
+    interp = (mode == "interpret")
+    bn = min(128, max(8, n))
+    np_ = n + ((-n) % bn)
+    W = None
+    for b in blocks:
+        _, bk = _pick_blocks(n, b.shape[1])
+        bp = pad_to(b, (bn, bk))
+        if W is None:
+            W = gram_pallas(bp, bn=bn, bk=bk, interpret=interp)
+        else:
+            W = gram_acc_pallas(bp, W, bn=bn, bk=bk, interpret=interp)
+        assert W.shape == (np_, np_)
     return W[:n, :n]
 
 
@@ -145,15 +183,21 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
     return o
 
 
-def chol_solve_fused(S: jax.Array, v: jax.Array, damping,
-                     *, mode: Optional[str] = None) -> jax.Array:
+def chol_solve_fused(S, v, damping, *, mode: Optional[str] = None):
     """Algorithm 1 composed entirely from the Pallas kernels:
 
         (W, u) = gram_sv(S, v)          # fused single pass over S
         L      = cholesky(W + λĨ)       # in-VMEM blocked factorization
         w      = L⁻ᵀ L⁻¹ u              # XLA triangular solves (n×n, tiny)
         x      = ngd_apply(S, w, v, λ)  # fused second pass over S
+
+    With a blocked S the same composition runs per block: (W, u)
+    contributions accumulate across blocks, then the apply runs block by
+    block — ``v`` may be flat or a tuple of per-block pieces and the
+    result comes back in the same form.
     """
+    if is_blocked(S):
+        return _chol_solve_fused_blocked(S, v, damping, mode=mode)
     n = S.shape[0]
     lam = jnp.asarray(damping, jnp.float32)
     W, u = gram_sv(S, v, mode=mode)
@@ -161,3 +205,25 @@ def chol_solve_fused(S: jax.Array, v: jax.Array, damping,
     w = solve_triangular(L, u, lower=True)
     w = solve_triangular(L.T, w, lower=False)
     return ngd_apply(S, w, v, lam, mode=mode)
+
+
+def _chol_solve_fused_blocked(S, v, damping, *, mode: Optional[str] = None):
+    from repro.core.operator import as_blocked_vector
+
+    if hasattr(S, "materialize"):
+        S = S.materialize()
+    v_blocks, was_flat = as_blocked_vector(S, v)
+    n = S.n
+    lam = jnp.asarray(damping, jnp.float32)
+
+    W, u = None, None
+    for b, vb in zip(S.blocks, v_blocks):
+        Wb, ub = gram_sv(b, vb, mode=mode)
+        W = Wb if W is None else W + Wb
+        u = ub if u is None else u + ub
+    L = cholesky(W + lam * jnp.eye(n, dtype=W.dtype), mode=mode)
+    w = solve_triangular(L, u, lower=True)
+    w = solve_triangular(L.T, w, lower=False)
+    x = tuple(ngd_apply(b, w, vb, lam, mode=mode)
+              for b, vb in zip(S.blocks, v_blocks))
+    return BlockedScores.concat(x) if was_flat else x

@@ -213,16 +213,26 @@ def run_cell(arch, shape_name, mesh_kind, optimizer="adamw",
              variant="baseline") -> dict:
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     # explicit mesh context: lets opt-in perf levers use bare-PartitionSpec
-    # with_sharding_constraint (jax resolves axis names against this mesh)
-    jax.sharding.set_mesh(mesh)
-    if solver_nm:
-        lowered, meta = build_solver_lowered(*solver_nm, mesh)
+    # with_sharding_constraint (jax resolves axis names against this mesh).
+    # jax ≥ 0.5 has jax.sharding.set_mesh; 0.4.x uses the Mesh context
+    # manager for the same purpose.
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        set_mesh(mesh)
+        import contextlib
+        mesh_ctx = contextlib.nullcontext()
     else:
-        lowered, meta = build_lowered(arch, shape_name, mesh,
-                                      optimizer=optimizer,
-                                      overrides=overrides, ngd_opts=ngd_opts,
-                                      variant=variant)
-    rec = compile_and_analyze(lowered, meta, mesh)
+        mesh_ctx = mesh
+    with mesh_ctx:
+        if solver_nm:
+            lowered, meta = build_solver_lowered(*solver_nm, mesh)
+        else:
+            lowered, meta = build_lowered(arch, shape_name, mesh,
+                                          optimizer=optimizer,
+                                          overrides=overrides,
+                                          ngd_opts=ngd_opts,
+                                          variant=variant)
+        rec = compile_and_analyze(lowered, meta, mesh)
     rec["mesh"] = mesh_kind
     rec["variant"] = variant
     if overrides:

@@ -14,20 +14,29 @@ __all__ = ["make_production_mesh", "make_mesh", "dp_axes", "DATA", "MODEL",
 POD, DATA, MODEL = "pod", "data", "model"
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across versions: ``axis_types`` only exists (and is
+    needed — Auto is not the default) on jax ≥ 0.5; 0.4.x meshes are Auto
+    implicitly and the kwarg is absent."""
+    try:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (TypeError, AttributeError):
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (16, 16) ("data", "model") = 256 chips.
     Multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = (POD, DATA, MODEL) if multi_pod else (DATA, MODEL)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / elastic re-meshing)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple:

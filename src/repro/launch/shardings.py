@@ -175,12 +175,11 @@ def opt_state_shardings(opt_state, param_shard_tree, mesh: Mesh):
         pass
     from repro.optim.ngd import NGDState
     if isinstance(opt_state, NGDState):
-        # the flat momentum buffer's length is the raveled param count,
-        # generally not divisible by the model-axis size → replicated at
-        # the jit boundary (GSPMD re-shards it internally as needed).
+        # per-layer momentum buffers mirror their parameter's sharding —
+        # no flat raveled buffer exists anymore.
         return NGDState(
             NamedSharding(mesh, P()),
-            NamedSharding(mesh, P()),
+            resolve(opt_state.momentum, param_shard_tree),
             jax.tree.map(lambda _: NamedSharding(mesh, P()),
                          opt_state.damping))
     # generic fallback: replicate

@@ -23,7 +23,7 @@ from repro.launch.shardings import (
     opt_state_shardings,
     param_shardings,
 )
-from repro.optim.scores import per_sample_scores
+from repro.optim.scores import per_sample_score_blocks, per_sample_scores
 
 __all__ = ["make_train_step", "make_ngd_train_step", "jit_train_step",
            "jit_ngd_train_step", "jit_prefill", "jit_serve_step"]
@@ -74,7 +74,7 @@ def make_train_step(api, optimizer, *, microbatches: int = 1):
 
 def make_ngd_train_step(api, optimizer, mesh, *, score_chunk=None,
                         score_dtype=None, score_sharding: str = "1d",
-                        flat_scores: bool = False):
+                        flat_scores: bool = False, blocked: bool = False):
     """The paper's optimizer as a production train step.
 
     1. mean gradient v  (one backward pass)
@@ -87,14 +87,24 @@ def make_ngd_train_step(api, optimizer, mesh, *, score_chunk=None,
     "2d" additionally shards samples over the DP axes — per-sample grads
     are *produced* DP-sharded by vmap over the DP-sharded batch, so "2d"
     skips the sample-axis all-gather entirely (§Perf, whisper NGD cell).
+
+    ``blocked``: keep S as a per-layer ``BlockedScores`` operator — the
+    per-layer gradient pytree maps straight to blocks (no ``ravel_pytree``
+    concat), every solver contraction accumulates across blocks, and the
+    flat (n, m) buffer — the dense path's memory ceiling — never exists.
+    Sharding constraints apply per block with the same specs.
     """
     from repro.launch.mesh import dp_axes
 
     def train_step(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(
             api.loss, has_aux=True)(params, batch)
-        S = per_sample_scores(api.sample_logp, params, batch,
-                              chunk=score_chunk, dtype=score_dtype)
+        if blocked:
+            S = per_sample_score_blocks(api.sample_logp, params, batch,
+                                        chunk=score_chunk, dtype=score_dtype)
+        else:
+            S = per_sample_scores(api.sample_logp, params, batch,
+                                  chunk=score_chunk, dtype=score_dtype)
         if flat_scores:
             # Sample-parallel score computation over the FULL chip grid
             # (samples → pod×data×model): with the network replicated over
@@ -102,14 +112,19 @@ def make_ngd_train_step(api, optimizer, mesh, *, score_chunk=None,
             # gradients; the solver reshard below is one cheap all-to-all
             # of S (n·m/|chips| bytes per device). §Perf, whisper NGD cell.
             all_axes = dp_axes(mesh) + (MODEL,)
-            S = jax.lax.with_sharding_constraint(
-                S, NamedSharding(mesh, P(all_axes, None)))
+            S = jax.tree.map(
+                lambda b: jax.lax.with_sharding_constraint(
+                    b, NamedSharding(mesh, P(all_axes, None))), S)
         if score_sharding == "2d":
             dp = dp_axes(mesh)
             spec = P(dp if len(dp) > 1 else dp[0], MODEL)
         else:
             spec = P(None, MODEL)
-        S = jax.lax.with_sharding_constraint(S, NamedSharding(mesh, spec))
+        # tree.map reaches each block of a BlockedScores (and is a no-op
+        # wrapper for the dense array): every block shards (samples, cols).
+        S = jax.tree.map(
+            lambda b: jax.lax.with_sharding_constraint(
+                b, NamedSharding(mesh, spec)), S)
         updates, opt_state = optimizer.update(grads, opt_state, params,
                                               scores=S)
         params = _apply_updates(params, updates)
@@ -142,16 +157,19 @@ def jit_train_step(api, optimizer, mesh, *, param_specs, input_specs,
 def jit_ngd_train_step(api, optimizer, mesh, *, param_specs, input_specs,
                        fsdp="auto", score_chunk=None, score_dtype=None,
                        score_sharding="1d", replicate_model=False,
-                       donate=True):
+                       blocked=False, donate=True):
     """``replicate_model``: pure-DP layout for the network (params
     replicated, batch over DP) with the solver still model-parallel over S —
     the right layout for the paper's m ≫ n regime where the model is small
     relative to the mesh and TP all-reduces dominate (§Perf, whisper cell).
+
+    ``blocked``: per-layer BlockedScores path (see make_ngd_train_step).
     """
     step = make_ngd_train_step(api, optimizer, mesh, score_chunk=score_chunk,
                                score_dtype=score_dtype,
                                score_sharding=score_sharding,
-                               flat_scores=replicate_model)
+                               flat_scores=replicate_model,
+                               blocked=blocked)
     if replicate_model:
         pshard = jax.tree.map(
             lambda _: NamedSharding(mesh, P()), param_specs)

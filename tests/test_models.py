@@ -1,13 +1,12 @@
 """Layer-level model tests: attention vs naive reference (hypothesis
 sweeps), chunked SSD vs exact recurrence, MoE dispatch invariants, ring
 cache equivalence."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import hypothesis, st
 from repro.models import layers as L
 from repro.models.config import BlockSlot, ModelConfig
 

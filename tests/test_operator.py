@@ -1,0 +1,322 @@
+"""BlockedScores operator: equivalence with the dense (n, m) path across
+every solver and mode, factorization reuse, lazy materialization, blocked
+kernels, blocked scores construction, and blocked NGD updates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SOLVERS,
+    BlockedScores,
+    CholFactorization,
+    LazyBlockedScores,
+    SolverStats,
+    chol_factorize,
+    chol_solve,
+    direct_solve,
+    get_solver,
+    is_blocked,
+    minsr_solve,
+    residual,
+)
+
+RNG = np.random.default_rng(7)
+WIDTHS = [40, 7, 63, 40]          # uneven, like real per-layer blocks
+
+
+def make_problem(n=24, m=150, lam=0.1, complex_=False, seed=0):
+    rng = np.random.default_rng(seed)
+    S = rng.normal(size=(n, m))
+    v = rng.normal(size=(m,))
+    if complex_:
+        S = S + 1j * rng.normal(size=(n, m))
+        v = v + 1j * rng.normal(size=(m,))
+        return jnp.asarray(S, jnp.complex64), jnp.asarray(v, jnp.complex64), lam
+    return jnp.asarray(S, jnp.float32), jnp.asarray(v, jnp.float32), lam
+
+
+def test_blocked_metadata_and_roundtrip():
+    S, v, _ = make_problem()
+    op = BlockedScores.from_dense(S, WIDTHS)
+    assert op.shape == S.shape and op.n == 24 and op.m == 150
+    assert op.block_widths == tuple(WIDTHS)
+    np.testing.assert_array_equal(np.asarray(op.to_dense()), np.asarray(S))
+    np.testing.assert_array_equal(
+        np.asarray(BlockedScores.concat(op.split(v))), np.asarray(v))
+
+
+def test_contractions_match_dense():
+    S, v, _ = make_problem()
+    op = BlockedScores.from_dense(S, WIDTHS)
+    np.testing.assert_allclose(np.asarray(op.gram()), np.asarray(S @ S.T),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(op.matvec(v)), np.asarray(S @ v),
+                               rtol=1e-5, atol=1e-4)
+    w = jnp.asarray(RNG.normal(size=(S.shape[0],)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(BlockedScores.concat(op.rmatvec(w))),
+        np.asarray(S.T @ w), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", sorted(SOLVERS))
+def test_all_solvers_blocked_matches_dense(name):
+    S, v, lam = make_problem()
+    op = BlockedScores.from_dense(S, WIDTHS)
+    x_ref = get_solver(name)(S, v, lam)
+    # flat RHS in → flat solution out
+    x_flat = get_solver(name)(op, v, lam)
+    np.testing.assert_allclose(np.asarray(x_flat), np.asarray(x_ref),
+                               rtol=5e-3, atol=5e-3)
+    # blocked RHS in → blocked solution out
+    x_blk = get_solver(name)(op, op.split(v), lam)
+    assert isinstance(x_blk, tuple) and len(x_blk) == len(WIDTHS)
+    np.testing.assert_allclose(np.asarray(BlockedScores.concat(x_blk)),
+                               np.asarray(x_ref), rtol=5e-3, atol=5e-3)
+
+
+def test_chol_blocked_complex_mode():
+    S, v, lam = make_problem(complex_=True, lam=0.5)
+    op = BlockedScores.from_dense(S, WIDTHS)
+    np.testing.assert_allclose(np.asarray(chol_solve(op, v, lam)),
+                               np.asarray(direct_solve(S, v, lam)),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_chol_blocked_real_part_mode():
+    S, v, lam = make_problem(complex_=True, lam=0.5)
+    op = BlockedScores.from_dense(S, WIDTHS)
+    vr = jnp.real(v)
+    x = chol_solve(op, vr, lam, mode="real_part")
+    S2 = jnp.concatenate([jnp.real(S), jnp.imag(S)], axis=0)
+    np.testing.assert_allclose(np.asarray(x),
+                               np.asarray(direct_solve(S2, vr, lam)),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_minsr_blocked():
+    S, _, lam = make_problem()
+    op = BlockedScores.from_dense(S, WIDTHS)
+    f = jnp.asarray(RNG.normal(size=(S.shape[0],)), jnp.float32)
+    x = minsr_solve(op, f, lam)
+    np.testing.assert_allclose(np.asarray(BlockedScores.concat(x)),
+                               np.asarray(minsr_solve(S, f, lam)),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_bf16_blocks_promote():
+    S, v, lam = make_problem()
+    op = BlockedScores.from_dense(S.astype(jnp.bfloat16), WIDTHS)
+    x16 = chol_solve(op, v.astype(jnp.bfloat16), lam)
+    assert x16.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(x16),
+                               np.asarray(chol_solve(S, v, lam)),
+                               rtol=0.1, atol=0.05)
+
+
+def test_operator_through_jit():
+    """BlockedScores is a pytree: it crosses jit boundaries as an argument."""
+    S, v, lam = make_problem()
+    op = BlockedScores.from_dense(S, WIDTHS)
+    jf = jax.jit(lambda o, v: chol_solve(o, v, lam))
+    np.testing.assert_allclose(np.asarray(jf(op, v)),
+                               np.asarray(chol_solve(S, v, lam)),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_residual_blocked():
+    S, v, lam = make_problem()
+    op = BlockedScores.from_dense(S, WIDTHS)
+    x = chol_solve(op, v, lam)
+    assert float(residual(op, v, x, lam)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# CholFactorization: multi-RHS + multi-λ reuse, stats
+# ---------------------------------------------------------------------------
+
+def test_factorization_multi_rhs_and_damping():
+    S, v, lam = make_problem()
+    op = BlockedScores.from_dense(S, WIDTHS)
+    fac = chol_factorize(op, lam)
+    assert isinstance(fac, CholFactorization)
+    np.testing.assert_allclose(np.asarray(fac.solve(v)),
+                               np.asarray(chol_solve(S, v, lam)),
+                               rtol=5e-3, atol=5e-3)
+    V = jnp.asarray(RNG.normal(size=(S.shape[1], 3)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(fac.solve(V)),
+                               np.asarray(chol_solve(S, V, lam)),
+                               rtol=5e-3, atol=5e-3)
+    # re-damp without another pass over S
+    fac2 = fac.with_damping(0.7)
+    np.testing.assert_allclose(np.asarray(fac2.solve(v)),
+                               np.asarray(chol_solve(S, v, 0.7)),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_chol_solve_return_stats():
+    S, v, lam = make_problem()
+    x, stats = chol_solve(S, v, lam, return_stats=True)
+    assert isinstance(stats, SolverStats)
+    assert float(stats.residual_norm) < 1e-3
+    assert float(stats.gram_cond_proxy) >= 1.0
+    np.testing.assert_allclose(np.asarray(x), np.asarray(chol_solve(S, v, lam)),
+                               rtol=1e-6, atol=1e-6)
+    # blocked too
+    op = BlockedScores.from_dense(S, WIDTHS)
+    xb, stats_b = chol_solve(op, v, lam, return_stats=True)
+    assert float(stats_b.residual_norm) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# lazy operator
+# ---------------------------------------------------------------------------
+
+def test_lazy_materializes_once():
+    S, v, lam = make_problem()
+    calls = []
+
+    def build():
+        calls.append(1)
+        return BlockedScores.from_dense(S, WIDTHS)
+
+    lz = LazyBlockedScores(build)
+    assert not calls                      # nothing until first contraction
+    x = chol_solve(lz, v, lam)
+    assert calls == [1]
+    chol_solve(lz, v, lam)                # cached — no rebuild
+    assert calls == [1]
+    assert is_blocked(lz)
+    np.testing.assert_allclose(np.asarray(x),
+                               np.asarray(chol_solve(S, v, lam)),
+                               rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# blocked Pallas kernels (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+def test_gram_blocks_kernel_matches():
+    from repro.kernels import ops
+    S, _, _ = make_problem(n=24, m=300)
+    op = BlockedScores.from_dense(S, [100, 44, 156])
+    ref = np.asarray(S @ S.T)
+    for mode in ("ref", "interpret"):
+        W = ops.gram_blocks(op, mode=mode)
+        np.testing.assert_allclose(np.asarray(W), ref, rtol=1e-5, atol=1e-3)
+
+
+def test_chol_solve_fused_blocked():
+    from repro.kernels import ops
+    S, v, lam = make_problem(n=24, m=300)
+    op = BlockedScores.from_dense(S, [100, 44, 156])
+    x = ops.chol_solve_fused(op, v, lam, mode="interpret")
+    np.testing.assert_allclose(np.asarray(x),
+                               np.asarray(chol_solve(S, v, lam)),
+                               rtol=1e-3, atol=1e-4)
+    xb = ops.chol_solve_fused(op, op.split(v), lam, mode="ref")
+    np.testing.assert_allclose(np.asarray(BlockedScores.concat(xb)),
+                               np.asarray(chol_solve(S, v, lam)),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# blocked score construction + blocked NGD updates
+# ---------------------------------------------------------------------------
+
+def logreg_problem(n=64, d=10, c=4, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(d, c)) * 0.1, jnp.float32),
+              "b": jnp.zeros((c,), jnp.float32)}
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    Y = jnp.asarray(rng.integers(0, c, size=(n,)))
+
+    def logp(p, ex):
+        x, y = ex
+        return jax.nn.log_softmax(x @ p["w"] + p["b"])[y]
+
+    def loss(p):
+        return -jnp.mean(jax.vmap(lambda ex: logp(p, ex))((X, Y)))
+
+    return params, (X, Y), logp, loss
+
+
+def test_score_blocks_match_dense_scores():
+    from repro.optim import per_sample_score_blocks, per_sample_scores
+    params, batch, logp, _ = logreg_problem()
+    Sd = per_sample_scores(logp, params, batch)
+    op = per_sample_score_blocks(logp, params, batch)
+    assert op.block_widths == (4, 40)       # b leaf then w leaf
+    np.testing.assert_allclose(np.asarray(op.to_dense()), np.asarray(Sd),
+                               atol=1e-6)
+    # chunked + centered agree too
+    opc = per_sample_score_blocks(logp, params, batch, chunk=16, center=True)
+    Sc = per_sample_scores(logp, params, batch, center=True)
+    np.testing.assert_allclose(np.asarray(opc.to_dense()), np.asarray(Sc),
+                               atol=1e-6)
+
+
+def test_lazy_score_blocks():
+    from repro.optim import lazy_score_blocks, per_sample_scores
+    params, batch, logp, _ = logreg_problem()
+    lz = lazy_score_blocks(logp, params, batch)
+    Sd = per_sample_scores(logp, params, batch)
+    v = jnp.asarray(RNG.normal(size=(Sd.shape[1],)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(chol_solve(lz, v, 0.1)),
+                               np.asarray(chol_solve(Sd, v, 0.1)),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_ngd_blocked_update_matches_dense():
+    from repro.optim import (NaturalGradient, per_sample_score_blocks,
+                             per_sample_scores)
+    params, batch, logp, loss = logreg_problem()
+    g = jax.grad(loss)(params)
+    Sd = per_sample_scores(logp, params, batch)
+    op = per_sample_score_blocks(logp, params, batch)
+    opt = NaturalGradient(0.5, damping=1e-2, momentum=0.9)
+    st = opt.init(params)
+    # momentum state is per-layer (params-shaped), not flat
+    assert jax.tree_util.tree_structure(st.momentum) == \
+        jax.tree_util.tree_structure(params)
+    ud, std = opt.update(g, st, params, scores=Sd)
+    ub, stb = opt.update(g, st, params, scores=op)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(ud[k]), np.asarray(ub[k]),
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(std.momentum[k]),
+                                   np.asarray(stb.momentum[k]),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_ngd_complex_mode_preserves_imaginary_part():
+    """SR mode="complex": the optimizer must not cast the natural gradient
+    to float32 (that silently zeroes Im(x))."""
+    from repro.core import chol_solve
+    from repro.optim import NaturalGradient
+    rng = np.random.default_rng(5)
+    params = {"w": jnp.asarray(rng.normal(size=(6,))
+                               + 1j * rng.normal(size=(6,)), jnp.complex64)}
+    S = jnp.asarray(rng.normal(size=(4, 6)) + 1j * rng.normal(size=(4, 6)),
+                    jnp.complex64)
+    g = {"w": jnp.asarray(rng.normal(size=(6,))
+                          + 1j * rng.normal(size=(6,)), jnp.complex64)}
+    opt = NaturalGradient(0.1, damping=0.5, momentum=0.9)
+    st = opt.init(params)
+    assert st.momentum["w"].dtype == jnp.complex64
+    upd, _ = opt.update(g, st, params, scores=S)
+    assert float(jnp.abs(jnp.imag(upd["w"])).max()) > 0
+    np.testing.assert_allclose(np.asarray(upd["w"]),
+                               np.asarray(-0.1 * chol_solve(S, g["w"], 0.5)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ngd_blocked_width_mismatch_raises():
+    from repro.optim import NaturalGradient, per_sample_score_blocks
+    params, batch, logp, loss = logreg_problem()
+    op = per_sample_score_blocks(logp, params, batch)
+    opt = NaturalGradient(0.5, damping=1e-2, momentum=0.0)
+    st = opt.init(params)
+    bad = {"w": jnp.zeros((3, 3)), "b": jnp.zeros((3,))}
+    with pytest.raises(ValueError, match="block widths"):
+        opt.update(bad, st, bad, scores=op)

@@ -94,8 +94,11 @@ def test_ngd_momentum_and_clip():
     st = opt.init(params)
     S = per_sample_scores(logp, params, batch)
     upd, st2 = opt.update(jax.grad(loss)(params), st, params, scores=S)
-    # momentum buffer norm is clipped
-    assert float(jnp.linalg.norm(st2.momentum)) <= 0.1 + 1e-5
+    # per-layer momentum buffers mirror the param tree; global norm clipped
+    assert jax.tree_util.tree_structure(st2.momentum) == \
+        jax.tree_util.tree_structure(params)
+    from repro.optim.ngd import global_norm
+    assert float(global_norm(st2.momentum)) <= 0.1 + 1e-5
     assert int(st2.step) == 1
 
 

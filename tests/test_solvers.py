@@ -1,12 +1,11 @@
 """Solver correctness: every method vs the direct O(m³) oracle, the paper's
 SR variants, and property-based invariants (hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import hypothesis, st
 from repro.core import (
     SOLVERS,
     ConstantDamping,
@@ -109,6 +108,33 @@ def test_gram_chunked_matches():
     W = gram_chunked(S, 32)
     np.testing.assert_allclose(np.asarray(W), np.asarray(S @ S.T),
                                rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,chunk", [(130, 32), (127, 64), (50, 7)])
+def test_gram_chunked_padding_path(m, chunk):
+    """m % chunk != 0 exercises the zero-pad tail chunk — exact because
+    zero columns contribute nothing to S·Sᵀ."""
+    assert m % chunk != 0
+    S, _, _ = make_problem(n=12, m=m)
+    W = gram_chunked(S, chunk)
+    np.testing.assert_allclose(np.asarray(W), np.asarray(S @ S.T),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_gram_chunked_complex_accumulation_dtype():
+    """Complex mode: accumulator must be complex64+ (not the real promote),
+    the result must match S·S† including the padded-tail case."""
+    S, _, _ = make_problem(n=8, m=45, complex_=True)
+    W = gram_chunked(S, 16, mode="complex")
+    assert jnp.issubdtype(W.dtype, jnp.complexfloating)
+    assert W.dtype == jnp.complex64
+    np.testing.assert_allclose(np.asarray(W), np.asarray(S @ S.conj().T),
+                               rtol=1e-5, atol=1e-4)
+    # bf16-stored complex is not a thing; but fp64-promoted real input
+    # must accumulate in float64 when x64 is off → stays float32
+    Sr, _, _ = make_problem(n=8, m=45)
+    Wr = gram_chunked(Sr.astype(jnp.bfloat16), 16)
+    assert Wr.dtype == jnp.float32
 
 
 def test_bf16_scores_promote():
