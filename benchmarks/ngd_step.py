@@ -70,8 +70,13 @@ def run(emit=print, batch=16, seq=64):
     return times
 
 
-def run_blocked(emit=print, batch=16, seq=64, arch="llama3.2-3b"):
-    """Dense vs blocked NGD: wall-clock + compiled peak memory."""
+def run_blocked(emit=print, batch=16, seq=64, arch="llama3.2-3b",
+                assert_below=True):
+    """Dense vs blocked NGD: wall-clock + compiled peak memory.
+
+    ``assert_below=False`` for CI-smoke shapes: below ~(n=8, seq=32) the
+    per-block buffer overheads outweigh the flat-S saving the assertion
+    guards, so the memory claim is only enforced at the default scale."""
     cfg = configs.get_smoke(arch)
     mesh = make_mesh((1, 1), ("data", "model"))
     out = {}
@@ -93,7 +98,7 @@ def run_blocked(emit=print, batch=16, seq=64, arch="llama3.2-3b"):
         emit(f"ngd_step/blocked_mem_vs_dense,,"
              f"{ratio:.3f}x ({'OK below' if below else 'NOT below'})")
         out["blocked_below_dense"] = bool(below)
-        assert below, (
+        assert below or not assert_below, (
             "blocked path's compiled peak memory must sit strictly below "
             f"dense: blocked={out['blocked']['mem_bytes']} "
             f"dense={out['dense']['mem_bytes']}")

@@ -1,24 +1,100 @@
 """Benchmark orchestrator. One section per paper table/figure plus the
-framework-level harnesses. Prints ``name,us_per_call,derived`` CSV."""
+framework-level harnesses. Prints ``name,us_per_call,derived`` CSV; with
+``--json`` additionally writes machine-readable ``BENCH_solvers.json`` and
+``BENCH_ngd.json`` (one row per measurement: name, us_per_call, derived,
+config, peak_mem_bytes) so the perf trajectory is tracked across PRs.
+
+``--tiny`` shrinks every shape to CI-smoke size (seconds, not minutes);
+``--full`` runs the exact paper grid.
+"""
+from __future__ import annotations
+
+import json
+import re
 import sys
 
+_MEM_ROW = re.compile(r"(\d+)\s*B?\)?$")
 
-def main() -> None:
-    full = "--full" in sys.argv
+
+def _collector(config):
+    """(rows, emit): emit prints the CSV line and parses it into a row."""
+    rows = []
+
+    def emit(line):
+        print(line)
+        parts = line.split(",", 2)
+        name = parts[0]
+        us = parts[1] if len(parts) > 1 else ""
+        derived = parts[2] if len(parts) > 2 else ""
+        peak = None
+        if "mem" in name:
+            m = _MEM_ROW.search(derived.strip())
+            if m:
+                peak = int(m.group(1))
+        rows.append({"name": name,
+                     "us_per_call": float(us) if us else None,
+                     "derived": derived,
+                     "config": config,
+                     "peak_mem_bytes": peak})
+    return rows, emit
+
+
+def _write_json(path, rows):
+    with open(path, "w") as fh:
+        json.dump(rows, fh, indent=1)
+    print(f"# wrote {path} ({len(rows)} rows)")
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    full = "--full" in argv
+    tiny = "--tiny" in argv
+    as_json = "--json" in argv
     print("name,us_per_call,derived")
 
+    solver_rows = []
+    ngd_rows = []
+
     from benchmarks import table1_solvers
-    table1_solvers.run(full=full)
+    # tiny sweeps are disjoint so BENCH_solvers.json row names stay unique
+    n_sweep = [(32, 2_000), (64, 2_000)] if tiny else None
+    m_sweep = [(48, 1_000), (48, 3_000)] if tiny else None
+    rows, emit = _collector({"section": "table1", "full": full,
+                             "tiny": tiny})
+    table1_solvers.run(full=full, emit=emit, n_sweep=n_sweep, m_sweep=m_sweep)
+    solver_rows += rows
 
     from benchmarks import kernels
-    kernels.run()
+    rows, emit = _collector({"section": "kernels", "tiny": tiny})
+    kernels.run(emit=emit, shapes=((64, 2_000),) if tiny
+                else ((512, 50_000),))
+    solver_rows += rows
 
     from benchmarks import ngd_step
-    ngd_step.run()
-    ngd_step.run_blocked()
+    bs = dict(batch=4, seq=16) if tiny else dict(batch=16, seq=64)
+    rows, emit = _collector({"section": "ngd_step", **bs})
+    ngd_step.run(emit=emit, **bs)
+    ngd_step.run_blocked(emit=emit, assert_below=not tiny, **bs)
+    ngd_rows += rows
+
+    from benchmarks import amortized
+    am = dict(n=64, m=2_000, k=8) if tiny else dict(n=256, m=25_000, k=16)
+    rows, emit = _collector({"section": "amortized", **am})
+    # tiny shapes sit at the dispatch-overhead floor where the O(n²k)-vs-
+    # O(n²m) separation vanishes; the speedup gate runs at the real shape.
+    amortized.run(emit=emit, assert_speedup=not tiny, **am)
+    if not tiny:
+        amortized.run_trainer(emit=emit)
+    ngd_rows += rows
 
     from benchmarks import roofline
-    roofline.run()
+    rows, emit = _collector({"section": "roofline"})
+    roofline.run(emit=emit)
+    solver_rows += rows
+
+    if as_json:
+        _write_json("BENCH_solvers.json", solver_rows)
+        _write_json("BENCH_ngd.json", ngd_rows)
 
 
 if __name__ == "__main__":

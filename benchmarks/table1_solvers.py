@@ -49,6 +49,8 @@ def bench_shapes(shapes, *, solvers=("chol", "eigh", "svd"), seed=0):
 
 
 def fit_loglog_slope(xs, ys) -> float:
+    if len(xs) < 2:
+        return float("nan")            # tiny CI sweeps: no fit possible
     xs, ys = np.log(np.asarray(xs, float)), np.log(np.asarray(ys, float))
     return float(np.polyfit(xs, ys, 1)[0])
 
@@ -99,12 +101,15 @@ def bench_blocked(shapes=None, *, nblocks=8, solvers=("chol", "eigh", "cg"),
     return rows
 
 
-def run(full: bool = False, emit=print):
-    """Emits ``name,us_per_call,derived`` CSV rows."""
-    n_sweep = [(n, m) for n, m in TABLE1_SHAPES if m == 100_000] if full \
-        else SCALED_N_SWEEP
-    m_sweep = [(n, m) for n, m in TABLE1_SHAPES if n == 2048] if full \
-        else SCALED_M_SWEEP
+def run(full: bool = False, emit=print, n_sweep=None, m_sweep=None):
+    """Emits ``name,us_per_call,derived`` CSV rows. ``n_sweep``/``m_sweep``
+    override the shape grids (CI smoke runs pass tiny ones)."""
+    if n_sweep is None:
+        n_sweep = [(n, m) for n, m in TABLE1_SHAPES if m == 100_000] if full \
+            else SCALED_N_SWEEP
+    if m_sweep is None:
+        m_sweep = [(n, m) for n, m in TABLE1_SHAPES if n == 2048] if full \
+            else SCALED_M_SWEEP
 
     rows_n = bench_shapes(n_sweep)
     rows_m = bench_shapes(m_sweep)

@@ -268,6 +268,64 @@ class CholFactorization:
                                  take_real_v=self._take_real_v,
                                  precision=self.precision)
 
+    def _replace(self, *, S, W, L) -> "CholFactorization":
+        return CholFactorization(S=S, mode=self.mode, W=W, L=L,
+                                 lam=self.lam, jitter=self.jitter,
+                                 take_real_v=self._take_real_v,
+                                 precision=self.precision)
+
+    def update(self, cols, *, S_new=None) -> "CholFactorization":
+        """Rank-k streaming refresh: fold k new score columns into the
+        factorization at O(n²·k) — no Gram pass, no re-factorization.
+
+        ``cols`` (n, k) are new columns of the *prepared* S (dual-space
+        vectors: new parameters' scores, a microbatch's contribution, the
+        update half of a sliding window — see ``repro.curvature``):
+
+            W ← W + cols·cols†;   L ← cholupdate(L, cols)
+
+        By default ``cols`` is also appended to the held S (a new block
+        for a blocked operator), keeping ``solve`` exact for the grown
+        system; pass ``S_new`` to substitute a different operator (e.g.
+        when the columns replace rather than extend — the caller owns
+        S/W consistency then, as ``CurvatureCache`` does).
+        """
+        from repro.kernels.ops import cholupdate as _cholupdate
+        cols = jnp.asarray(cols)
+        if cols.ndim == 1:
+            cols = cols[:, None]
+        cols = cols.astype(self.S.dtype)
+        W = self.W + jnp.matmul(cols, _ct(cols, self.mode),
+                                precision=self.precision)
+        L = _cholupdate(self.L, cols, sign=+1)
+        if S_new is None:
+            S_new = BlockedScores(self.S.blocks + (cols,),
+                                  names=None) if is_blocked(self.S) else \
+                jnp.concatenate([self.S, cols], axis=1)
+        return self._replace(S=S_new, W=W, L=L)
+
+    def downdate(self, cols, *, S_new=None) -> "CholFactorization":
+        """Rank-k removal — the inverse of ``update`` at the same O(n²·k):
+
+            W ← W − cols·cols†;   L ← choldowndate(L, cols)
+
+        ``W − cols·cols†`` must stay PSD (true whenever the columns are
+        actually present in S, e.g. a retiring block of a sliding window).
+        Removing columns from S is not inferable from their values, so
+        ``S_new`` names the shrunken operator; when omitted, S is kept
+        as-is and ``solve`` becomes the *stale-S* approximation that
+        ``CurvatureCache`` monitors via ``residual``.
+        """
+        from repro.kernels.ops import cholupdate as _cholupdate
+        cols = jnp.asarray(cols)
+        if cols.ndim == 1:
+            cols = cols[:, None]
+        cols = cols.astype(self.S.dtype)
+        W = self.W - jnp.matmul(cols, _ct(cols, self.mode),
+                                precision=self.precision)
+        L = _cholupdate(self.L, cols, sign=-1)
+        return self._replace(S=self.S if S_new is None else S_new, W=W, L=L)
+
     def _prep_v(self, v):
         if self._take_real_v:
             v = jax.tree.map(
@@ -314,10 +372,17 @@ def chol_factorize(S, damping, *,
                    mode: Mode = "auto",
                    gram_chunk: Optional[int] = None,
                    gram_fn: Optional[Callable] = None,
+                   W: Optional[jax.Array] = None,
                    jitter: float = 0.0,
                    precision=_HI) -> CholFactorization:
     """Run the O(n²·m) + O(n³) setup of Algorithm 1 once; see
-    ``CholFactorization`` for what the returned object amortizes."""
+    ``CholFactorization`` for what the returned object amortizes.
+
+    ``W``: optional precomputed *undamped* Gram of the prepared (realified,
+    promoted) S — skips the O(n²·m) pass entirely. This is the reuse hook
+    of the streaming-curvature subsystem: ``StreamingGram`` accumulates W
+    over microbatches and ``CurvatureCache`` carries it across steps.
+    """
     orig_complex = jnp.issubdtype(S.dtype, jnp.complexfloating)
     resolved = _resolve_mode(S, mode)
     take_real_v = (resolved == "real_part" and orig_complex)
@@ -331,7 +396,12 @@ def chol_factorize(S, damping, *,
     S = S.astype(jnp.promote_types(S.dtype, jnp.float32))
 
     n = S.shape[0]
-    if gram_fn is not None and not is_blocked(S):
+    if W is not None:
+        W = jnp.asarray(W)
+        if W.shape != (n, n):
+            raise ValueError(f"precomputed Gram is {W.shape}, prepared S "
+                             f"needs ({n}, {n})")
+    elif gram_fn is not None and not is_blocked(S):
         W = gram_fn(S)
     elif gram_chunk is not None and not is_blocked(S):
         W = gram_chunked(S, gram_chunk, mode=resolved, precision=precision)

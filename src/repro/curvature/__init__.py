@@ -1,0 +1,39 @@
+"""Streaming curvature subsystem — the damped-Fisher factorization as a
+maintained, reusable artifact instead of a per-step throwaway.
+
+Three layers, each usable on its own:
+
+* ``update``    — rank-k Cholesky update/downdate (O(n²·k) factor refresh;
+  pure-JAX reference here, Pallas TPU kernel in ``kernels/cholupdate.py``)
+  plus window algebra (append / drop-leading / symmetric row replacement).
+* ``streaming`` — ``StreamingGram``: fold the Gram over microbatch /
+  per-layer pieces into one resident (n, n) accumulator; feeds
+  ``chol_factorize(..., W=...)``.
+* ``cache``     — ``StreamingCurvature`` / ``CurvatureCache``: carry the
+  Gram across optimizer steps with age- and drift-triggered refreshes and
+  ``with_damping``-style λ re-damping; jit-safe state + hit/refresh stats.
+
+``repro.optim.NaturalGradient(curvature=...)`` and the trainer's
+``--curvature streaming`` flag wire this into training end to end.
+"""
+from repro.curvature.cache import (
+    CurvatureCache,
+    CurvatureState,
+    CurvatureStats,
+    StreamingCurvature,
+)
+from repro.curvature.streaming import StreamingGram, accumulate_gram
+from repro.curvature.update import (
+    chol_append,
+    chol_downdate,
+    chol_drop_leading,
+    chol_update,
+    replace_factors,
+)
+
+__all__ = [
+    "CurvatureCache", "CurvatureState", "CurvatureStats",
+    "StreamingCurvature", "StreamingGram", "accumulate_gram",
+    "chol_append", "chol_downdate", "chol_drop_leading", "chol_update",
+    "replace_factors",
+]

@@ -1,0 +1,168 @@
+"""Cross-step curvature reuse — the damped factorization as a cached asset.
+
+Consecutive SGD batches describe heavily overlapping curvature, so the
+O(n²·m) Gram pass that dominates Algorithm 1 need not rerun every step.
+``StreamingCurvature`` is the refresh policy:
+
+* **age refresh** — recompute W from the current scores every
+  ``refresh_every`` steps;
+* **drift refresh** — between scheduled refreshes, monitor the cheap
+  relative ``residual`` of the solve under the cached W (two O(n·m)
+  passes, ≪ the O(n²·m) Gram) and refresh when it exceeds ``drift_tol``;
+* **λ changes** — always re-damped from the cached *undamped* W via the
+  ``with_damping`` identity (one O(n³) n×n Cholesky per step, never a
+  pass over S), so trust-region damping schedules are free.
+
+The per-step solve always uses the *current* S for its matvec/rmatvec
+passes — only the n×n curvature estimate W is allowed to go stale, which
+is exactly the K-FAC-style amortization the paper's exact method forbids
+itself; the drift check bounds the approximation.
+
+Everything threads a ``CurvatureState`` pytree (cached W + age +
+``CurvatureStats`` hit/refresh counters) so the policy runs inside a
+jitted train step; ``CurvatureCache`` is the eager stateful wrapper for
+solver-level use (benchmarks, notebooks).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operator import LazyBlockedScores
+from repro.core.solvers import _op_gram, chol_factorize, residual
+
+__all__ = ["CurvatureStats", "CurvatureState", "StreamingCurvature",
+           "CurvatureCache"]
+
+
+class CurvatureStats(NamedTuple):
+    """SolverStats-style counters for the cache policy."""
+    hits: jax.Array            # steps served by the cached W
+    refreshes: jax.Array       # full Gram recomputations
+    last_residual: jax.Array   # last drift-check relative residual (−1: off)
+
+
+class CurvatureState(NamedTuple):
+    """Carried through the train step (a pytree — jit/scan/checkpoint safe)."""
+    W: jax.Array               # cached undamped Gram (n, n)
+    age: jax.Array             # steps since last refresh
+    stats: CurvatureStats
+
+
+class StreamingCurvature:
+    """Refresh policy for the cached damped-Fisher factorization.
+
+    Args:
+      n: dual-space dimension the Gram lives in (the per-step sample
+        count; double it when feeding real_part-transformed scores).
+      refresh_every: scheduled full-refresh period T (≥ 1). 1 degenerates
+        to the exact per-step method.
+      drift_tol: optional relative-residual bound; exceeded → refresh now.
+      jitter: extra diagonal on the damped system (as in ``chol_solve``).
+      mode: "real" (default) or "complex".
+      dtype: accumulator dtype floor.
+    """
+
+    def __init__(self, n: int, *, refresh_every: int = 10,
+                 drift_tol: Optional[float] = None, jitter: float = 0.0,
+                 mode: str = "real", dtype=jnp.float32):
+        if refresh_every < 1:
+            raise ValueError("refresh_every must be >= 1")
+        if mode not in ("real", "complex"):
+            raise ValueError(
+                f"mode must be 'real' or 'complex', got {mode!r} "
+                "(for real_part, realify the scores and double n)")
+        floor = jnp.complex64 if mode == "complex" else jnp.float32
+        self.n = int(n)
+        self.refresh_every = int(refresh_every)
+        self.drift_tol = None if drift_tol is None else float(drift_tol)
+        self.jitter = float(jitter)
+        self.mode = mode
+        self.acc_dtype = jnp.promote_types(dtype, floor)
+
+    def init(self) -> CurvatureState:
+        """Fresh state; ``age`` starts saturated so the first solve always
+        computes a real Gram (the zero W is never used)."""
+        return CurvatureState(
+            W=jnp.zeros((self.n, self.n), self.acc_dtype),
+            age=jnp.asarray(jnp.iinfo(jnp.int32).max - 1, jnp.int32),
+            stats=CurvatureStats(
+                hits=jnp.zeros((), jnp.int32),
+                refreshes=jnp.zeros((), jnp.int32),
+                last_residual=-jnp.ones((), jnp.float32)))
+
+    # -- the jit-safe step -------------------------------------------------
+    def solve(self, S, v, damping, state: CurvatureState):
+        """x ≈ (SᵀS + λI)⁻¹v with the cached-W policy; returns (x, state').
+
+        S dense or blocked; v flat / (m, k) / blocked, echoed back in the
+        same form. Pure in (v, damping, state) — safe under jit, with the
+        Gram recomputation guarded by ``lax.cond`` so the O(n²·m) pass
+        only executes on refresh steps.
+        """
+        if isinstance(S, LazyBlockedScores):
+            S = S.materialize()
+        if jnp.issubdtype(S.dtype, jnp.complexfloating) \
+                and self.mode != "complex":
+            raise ValueError(
+                "complex scores need StreamingCurvature(mode='complex') — "
+                f"this policy was built with mode={self.mode!r}")
+        S = S.astype(jnp.promote_types(S.dtype, jnp.float32))
+        lam = jnp.asarray(damping, self.acc_dtype).real.astype(jnp.float32)
+
+        def fresh_gram():
+            return _op_gram(S, mode=self.mode).astype(self.acc_dtype)
+
+        def dual_solve(W):
+            # the with_damping identity: re-damp the cached undamped W at
+            # the current λ — delegated to the chol_factorize(W=...) hook
+            # so the cache and the exact path share one solve.
+            return chol_factorize(S, lam, W=W, mode=self.mode,
+                                  jitter=self.jitter).solve(v)
+
+        refresh_due = state.age >= self.refresh_every
+        W1 = jax.lax.cond(refresh_due, fresh_gram, lambda: state.W)
+        x = dual_solve(W1)
+
+        if self.drift_tol is None:
+            refreshed = refresh_due
+            W2, r = W1, -jnp.ones((), jnp.float32)
+        else:
+            r = residual(S, v, x, lam, mode=self.mode).astype(jnp.float32)
+            drift = jnp.logical_and(~refresh_due, r > self.drift_tol)
+            W2 = jax.lax.cond(drift, fresh_gram, lambda: W1)
+            x = jax.lax.cond(drift, lambda: dual_solve(W2), lambda: x)
+            refreshed = jnp.logical_or(refresh_due, drift)
+
+        stats = CurvatureStats(
+            hits=state.stats.hits + (~refreshed).astype(jnp.int32),
+            refreshes=state.stats.refreshes + refreshed.astype(jnp.int32),
+            last_residual=r)
+        new_state = CurvatureState(
+            W=W2,
+            age=jnp.where(refreshed, 1, state.age + 1).astype(jnp.int32),
+            stats=stats)
+        return x, new_state
+
+
+class CurvatureCache:
+    """Eager stateful wrapper: ``solve`` mutates the held state in place —
+    the drop-in amortized replacement for per-step ``chol_solve`` outside
+    jit (benchmarks, interactive use)."""
+
+    def __init__(self, policy: StreamingCurvature):
+        self.policy = policy
+        self.state = policy.init()
+
+    def solve(self, S, v, damping):
+        x, self.state = self.policy.solve(S, v, damping, self.state)
+        return x
+
+    @property
+    def stats(self) -> CurvatureStats:
+        return self.state.stats
+
+    def reset(self) -> None:
+        self.state = self.policy.init()

@@ -1,0 +1,139 @@
+"""Streaming Gram accumulation — W without ever holding all of S.
+
+The Gram is a sum over the parameter axis, so any partition of S's columns
+— per-layer ``BlockedScores`` blocks, dense column chunks, one microbatch's
+lazily-built score blocks at a time — can be folded into a single resident
+(n, n) fp32 accumulator and then freed:
+
+    W = Σ_pieces  S_piece · S_piece†        (fp32/complex64 accumulation)
+
+That is exactly the gradient-accumulation shape of NGD training: each
+microbatch's per-layer score blocks are materialized, folded in, and
+dropped, so the peak score footprint is one piece, never the full (n, m)
+matrix (nor even all blocks at once, which ``BlockedScores.gram`` still
+requires to be alive simultaneously).
+
+``StreamingGram`` is immutable-functional (``update`` returns a new
+instance) so it threads through ``lax.scan``/jit; the module-level
+``accumulate_gram`` is the one-shot convenience. ``factorize`` hands the
+finished W to ``chol_factorize(..., W=...)``, skipping its Gram pass.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operator import BlockedScores, LazyBlockedScores, is_blocked
+
+__all__ = ["StreamingGram", "accumulate_gram"]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+def _piece_blocks(piece) -> tuple:
+    """Normalize a piece — dense (n, m_b) array, BlockedScores, or lazy —
+    to a tuple of (n, m_b) arrays."""
+    if isinstance(piece, LazyBlockedScores):
+        piece = piece.materialize()
+    if isinstance(piece, BlockedScores):
+        return piece.blocks
+    piece = jnp.asarray(piece)
+    if piece.ndim == 1:
+        piece = piece[:, None]
+    return (piece,)
+
+
+class StreamingGram:
+    """fp32-accumulated W = Σ S_piece·S_piece† over parameter-axis pieces.
+
+    Args:
+      n: dual-space dimension (sample count; 2× the sample count when
+        feeding real_part-transformed scores).
+      mode: "real" | "complex" | "real_part". Complex pieces accumulate a
+        Hermitian complex64+ W; in real_part mode complex pieces are
+        realified ([Re; Im] along the sample axis) before folding — build
+        the accumulator with the doubled n in that case.
+      dtype: accumulator dtype floor (promoted to ≥ fp32 / complex64).
+    """
+
+    def __init__(self, n: int, *, mode: str = "real", dtype=jnp.float32,
+                 _W: Optional[jax.Array] = None, _m: int = 0):
+        if mode not in ("real", "complex", "real_part"):
+            raise ValueError(f"unknown mode {mode!r}")
+        floor = jnp.complex64 if mode == "complex" else jnp.float32
+        acc = jnp.promote_types(dtype, floor)
+        self.n = int(n)
+        self.mode = mode
+        self.W = jnp.zeros((n, n), acc) if _W is None else _W
+        self.m = _m                      # columns folded in so far
+
+    def update(self, piece) -> "StreamingGram":
+        """Fold one piece in: W += S_piece·S_piece† (per block for a
+        blocked piece). Returns a new accumulator; ``piece`` is free to be
+        dropped by the caller afterwards."""
+        W, m = self.W, self.m
+        for b in _piece_blocks(piece):
+            if self.mode == "real_part" and \
+                    jnp.issubdtype(b.dtype, jnp.complexfloating):
+                b = jnp.concatenate([jnp.real(b), jnp.imag(b)], axis=0)
+            if b.shape[0] != self.n:
+                raise ValueError(f"piece has {b.shape[0]} dual rows, "
+                                 f"accumulator has n={self.n}")
+            b = b.astype(W.dtype)
+            bt = b.conj().T if self.mode == "complex" else b.T
+            W = W + jnp.matmul(b, bt, precision=_HI)
+            m += b.shape[1]
+        return StreamingGram(self.n, mode=self.mode, dtype=W.dtype,
+                             _W=W, _m=m)
+
+    def downdate(self, piece) -> "StreamingGram":
+        """Remove a piece's contribution (the retiring half of a sliding
+        block window): W −= S_piece·S_piece†."""
+        W, m = self.W, self.m
+        for b in _piece_blocks(piece):
+            if self.mode == "real_part" and \
+                    jnp.issubdtype(b.dtype, jnp.complexfloating):
+                b = jnp.concatenate([jnp.real(b), jnp.imag(b)], axis=0)
+            b = b.astype(W.dtype)
+            bt = b.conj().T if self.mode == "complex" else b.T
+            W = W - jnp.matmul(b, bt, precision=_HI)
+            m -= b.shape[1]
+        return StreamingGram(self.n, mode=self.mode, dtype=W.dtype,
+                             _W=W, _m=m)
+
+    def gram(self) -> jax.Array:
+        """The accumulated undamped (n, n) Gram."""
+        return self.W
+
+    def factorize(self, S, damping, **kw):
+        """``chol_factorize`` with the Gram pass skipped — S (dense or
+        blocked) is still needed for the solve's matvec/rmatvec passes,
+        but its O(n²·m) contraction never reruns."""
+        from repro.core.solvers import chol_factorize
+        return chol_factorize(S, damping, W=self.W, **kw)
+
+    def __repr__(self):
+        return (f"StreamingGram(n={self.n}, mode={self.mode!r}, "
+                f"m_folded={self.m})")
+
+
+def accumulate_gram(pieces: Iterable, *, n: Optional[int] = None,
+                    mode: str = "real", dtype=jnp.float32) -> jax.Array:
+    """One-shot fold: W = Σ over an iterable of pieces (dense chunks,
+    BlockedScores, or lazy builders materialized one at a time)."""
+    acc = None
+    for piece in pieces:
+        if acc is None:
+            if n is None:
+                b0 = _piece_blocks(piece)[0]
+                n = 2 * b0.shape[0] if (mode == "real_part" and
+                                        jnp.issubdtype(b0.dtype,
+                                                       jnp.complexfloating)) \
+                    else b0.shape[0]
+            acc = StreamingGram(n, mode=mode, dtype=dtype)
+        acc = acc.update(piece)
+    if acc is None:
+        raise ValueError("no pieces to accumulate")
+    return acc.gram()

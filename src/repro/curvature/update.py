@@ -1,0 +1,222 @@
+"""Rank-k Cholesky update and downdate — the streaming-curvature primitive.
+
+The paper's Algorithm 1 rebuilds ``L = chol(S·Sᵀ + λĨ)`` from scratch every
+solve: O(n²·m) for the Gram plus O(n³) for the factorization. But the Gram
+is a *sum of outer products over parameter columns*,
+
+    W = S·Sᵀ = Σ_j S[:, j]·S[:, j]ᵀ,
+
+so appending/removing score columns (a new layer's block, a microbatch's
+contribution, one side of a sliding sample window after symmetrization) is
+a rank-k perturbation  W' = W ± X·Xᵀ  with X : (n, k) — and the factor can
+follow it directly at O(n²·k):
+
+* ``chol_update(L, X)``    →  L' with  L'·L'ᵀ = L·Lᵀ + X·Xᵀ
+* ``chol_downdate(L, X)``  →  L' with  L'·L'ᵀ = L·Lᵀ − X·Xᵀ
+
+Two interchangeable methods produce the *same* factor (Cholesky with a
+positive diagonal is unique, so they agree to fp rounding):
+
+* ``method="composed"`` (default) — the level-3 BLAS identity
+
+      P = L⁻¹·X  (triangular solve);   L' = L · chol(Ĩ ± P·P†)
+
+  O(n²·k) solves + one n×n Cholesky/trimul. The extra O(n³) terms are
+  LAPACK-fast and — in the paper's m ≫ n regime — noise next to the
+  O(n²·m) Gram they replace; this is the fast path on CPU/XLA.
+* ``method="rotations"`` — the classic LINPACK sweep of plane rotations
+  (circular for the update, hyperbolic for the downdate), strictly
+  O(n²·k) with no n³ term and no temporaries: the streaming-native form,
+  and the shape the Pallas TPU kernel (``kernels/cholupdate.py``)
+  implements in-VMEM. ``repro.kernels.ops.cholupdate`` routes to that
+  kernel with the same on-TPU/fallback policy as ``cholesky_pallas``.
+
+Both are complex-Hermitian aware: for ``W = L·L†`` the rotations pick up
+conjugates and the diagonal of L stays real positive.
+
+On top of the rank-1 engine:
+
+* ``chol_append`` / ``chol_drop_leading`` — grow/shrink the factored matrix
+  by bordering (new trailing rows/cols) or by deleting leading ones — the
+  two halves of a FIFO window over *dual-space* dimensions.
+* ``replace_factors`` — symmetric row/col replacement (the sliding *sample*
+  window: k samples leave, k enter) decomposed into one PSD update part X
+  and one PSD downdate part Y via the indefinite 2k×2k core matrix, so
+  ``chol_downdate(chol_update(L, X), Y)`` refreshes the factor exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+__all__ = [
+    "chol_update",
+    "chol_downdate",
+    "chol_append",
+    "chol_drop_leading",
+    "replace_factors",
+]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+def _promote(A: jax.Array) -> jax.Array:
+    return A.astype(jnp.promote_types(A.dtype, jnp.float32))
+
+
+def _as_cols(X: jax.Array, n: int) -> jax.Array:
+    X = jnp.asarray(X)
+    if X.ndim == 1:
+        X = X[:, None]
+    if X.shape[0] != n:
+        raise ValueError(f"update columns have {X.shape[0]} rows, factor "
+                         f"has n={n}")
+    return X
+
+
+def _rank1(L: jax.Array, x: jax.Array, *, sign: int, eps: float) -> jax.Array:
+    """One plane-rotation sweep: L' with L'·L'† = L·L† ± x·x†.
+
+    Column j mixes (L[:, j], x) through the 2×2 (hyperbolic for sign<0)
+    rotation that zeroes x[j]; entries above the diagonal stay exactly zero
+    because both operands are zero there, so full-length vector ops need no
+    masking. The diagonal stays real positive (r = √(a² ± |b|²) with a the
+    old real pivot).
+    """
+    n = L.shape[0]
+    complex_ = jnp.issubdtype(L.dtype, jnp.complexfloating)
+
+    def body(j, carry):
+        L, x = carry
+        col = jax.lax.dynamic_slice(L, (0, j), (n, 1))           # (n, 1)
+        a = jnp.real(jax.lax.dynamic_slice(col, (j, 0), (1, 1)))  # pivot > 0
+        b = jax.lax.dynamic_slice(x, (j, 0), (1, 1))
+        bb = jnp.real(b * jnp.conj(b)) if complex_ else b * b
+        r = jnp.sqrt(jnp.maximum(a * a + sign * bb, eps))
+        c, s = a / r, b / r
+        new_col = c * col + sign * jnp.conj(s) * x
+        x_new = -s * col + c * x          # x_new[j] = (-b·a + a·b)/r ≡ 0
+        return jax.lax.dynamic_update_slice(L, new_col, (0, j)), x_new
+
+    L, _ = jax.lax.fori_loop(0, n, body, (L, x[:, None]))
+    return L
+
+
+def _rank_k(L: jax.Array, X: jax.Array, *, sign: int, eps: float,
+            method: str) -> jax.Array:
+    L = _promote(L)
+    X = _as_cols(X, L.shape[0])
+    dtype = jnp.promote_types(L.dtype, X.dtype)
+    L, X = L.astype(dtype), X.astype(dtype)
+    if method == "composed":
+        n, k = X.shape
+        P = solve_triangular(L, X, lower=True)                 # (n, k)
+        M = jnp.eye(n, dtype=dtype) + sign * jnp.matmul(
+            P, P.conj().T, precision=_HI)
+        return jnp.matmul(L, jnp.linalg.cholesky(M), precision=_HI)
+    if method != "rotations":
+        raise ValueError(f"method must be 'composed' or 'rotations', "
+                         f"got {method!r}")
+    rank1 = functools.partial(_rank1, sign=sign, eps=eps)
+    Lout, _ = jax.lax.scan(lambda L, x: (rank1(L, x), None), L, X.T)
+    # FMA-contracted backends make the exact a·b − b·a cancellations 1-ulp
+    # inexact; pin the strict upper triangle back to zero.
+    return Lout * jnp.tri(L.shape[0], dtype=Lout.real.dtype)
+
+
+def chol_update(L: jax.Array, X: jax.Array, *, eps: float = 1e-30,
+                method: str = "composed") -> jax.Array:
+    """L' = chol(L·L† + X·X†), X : (n,) or (n, k). Always exists."""
+    return _rank_k(L, X, sign=+1, eps=eps, method=method)
+
+
+def chol_downdate(L: jax.Array, X: jax.Array, *, eps: float = 1e-30,
+                  method: str = "composed") -> jax.Array:
+    """L' = chol(L·L† − X·X†).
+
+    Requires L·L† − X·X† positive definite (guaranteed when downdating a
+    *damped* Gram by score columns actually present in it: W − X·X† is
+    still PSD and the +λĨ keeps it PD). In the rotation sweep,
+    near-singular pivots are clamped at ``eps`` rather than NaN-ing,
+    matching the jitter philosophy elsewhere.
+    """
+    return _rank_k(L, X, sign=-1, eps=eps, method=method)
+
+
+def chol_append(L: jax.Array, W_cross: jax.Array, W_corner: jax.Array
+                ) -> jax.Array:
+    """Bordered growth: factor of ``[[W, B], [B†, C]]`` given L = chol(W).
+
+    ``W_cross`` is B (n, k) — cross inner products of the existing window
+    with the k new dual dimensions; ``W_corner`` is C (k, k). Cost: one
+    (n, k) triangular solve + one k×k Cholesky — O(n²·k + k³).
+    """
+    L = _promote(L)
+    B = _promote(jnp.asarray(W_cross))
+    C = _promote(jnp.asarray(W_corner))
+    dtype = jnp.promote_types(jnp.promote_types(L.dtype, B.dtype), C.dtype)
+    L, B, C = L.astype(dtype), B.astype(dtype), C.astype(dtype)
+    n, k = B.shape
+    M = solve_triangular(L, B, lower=True)            # (n, k): L·M = B
+    Lc = jnp.linalg.cholesky(C - M.conj().T @ M)
+    top = jnp.concatenate([L, jnp.zeros((n, k), dtype)], axis=1)
+    bot = jnp.concatenate([M.conj().T, Lc], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def chol_drop_leading(L: jax.Array, k: int) -> jax.Array:
+    """Factor of W[k:, k:] given L = chol(W) — deleting the k *leading*
+    rows/cols (the oldest entries of a FIFO window).
+
+    With L = [[L11, 0], [L21, L22]]:  W[k:, k:] = L21·L21† + L22·L22†, so
+    the answer is a rank-k ``chol_update`` of L22 by the columns of L21.
+    """
+    L = _promote(L)
+    return chol_update(L[k:, k:], L[k:, :k])
+
+
+def replace_factors(W: jax.Array, new_cols: jax.Array, idx: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decompose a symmetric row/col replacement of W into (X, Y, W').
+
+    ``idx`` (k,) are the rows/cols being replaced (the samples leaving the
+    window); ``new_cols`` (n, k) are the *new* Gram columns W'[:, idx]
+    (inner products of every window sample with the k incoming ones —
+    one O(n·m·k) pass over S, cheap next to the full O(n²·m) Gram).
+
+    The Hermitian difference Δ = W' − W is supported on rows/cols ``idx``:
+
+        Δ = [E  B] · [[−C, I], [I, 0]] · [E  B]†,
+        E = Ĩ[:, idx],  B = Δ[:, idx],  C = Δ[idx, idx],
+
+    and an eigendecomposition of the tiny 2k×2k core splits it into PSD
+    parts  Δ = X·X† − Y·Y†  (each n×2k; zero columns where the spectrum
+    has the other sign, which rank-1 sweeps skip for free). Then
+
+        L' = chol_downdate(chol_update(L, X), Y)
+
+    refreshes the factor at O(n²·k) total. Returns (X, Y, W').
+    """
+    W = _promote(jnp.asarray(W))
+    new_cols = _promote(jnp.asarray(new_cols)).astype(W.dtype)
+    idx = jnp.asarray(idx, jnp.int32)
+    n, k = new_cols.shape
+
+    B = new_cols - W[:, idx]                          # Δ[:, idx]
+    C = B[idx, :]
+    C = (C + C.conj().T) / 2                          # Hermitize the corner
+    E = jnp.zeros((n, k), W.dtype).at[idx, jnp.arange(k)].set(1.0)
+    U = jnp.concatenate([E, B], axis=1)               # (n, 2k)
+    eye = jnp.eye(k, dtype=W.dtype)
+    core = jnp.block([[-C, eye], [eye, jnp.zeros((k, k), W.dtype)]])
+    lam, Q = jnp.linalg.eigh(core)
+    V = jnp.matmul(U, Q, precision=_HI)
+    X = V * jnp.sqrt(jnp.maximum(lam, 0.0))
+    Y = V * jnp.sqrt(jnp.maximum(-lam, 0.0))
+
+    Wp = W.at[:, idx].set(new_cols).at[idx, :].set(new_cols.conj().T)
+    return X, Y, Wp

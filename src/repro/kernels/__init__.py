@@ -8,12 +8,15 @@ oracles):
 * ``gram_sv``   — beyond-paper fusion (W, u) = (S·Sᵀ, S·v) in one pass.
 * ``ngd_apply`` — fused x = (v − Sᵀw)/λ second pass.
 * ``cholesky``  — blocked in-VMEM factorization (the paper's "chol" step).
+* ``cholupdate`` — rank-k factor update/downdate L·Lᵀ ± X·Xᵀ (the
+  streaming-curvature refresh, O(n²k) instead of re-factorizing).
 * ``flash_attention`` — causal/windowed GQA attention forward (the model
   zoo's dominant compute op; online softmax in VMEM scratch).
 """
 from repro.kernels.ops import (
     chol_solve_fused,
     cholesky,
+    cholupdate,
     flash_attention,
     gram,
     gram_sv,
@@ -21,5 +24,5 @@ from repro.kernels.ops import (
     on_tpu,
 )
 
-__all__ = ["chol_solve_fused", "cholesky", "flash_attention", "gram",
-           "gram_sv", "ngd_apply", "on_tpu"]
+__all__ = ["chol_solve_fused", "cholesky", "cholupdate", "flash_attention",
+           "gram", "gram_sv", "ngd_apply", "on_tpu"]

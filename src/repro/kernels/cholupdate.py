@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: rank-k Cholesky update/downdate  L·Lᵀ ± X·Xᵀ.
+
+The streaming-curvature hot op (``repro/curvature/update.py`` is the
+pure-JAX reference). Same single-invocation in-VMEM regime as the blocked
+``cholesky`` kernel — n is the sample count (10²–10³), so L (n, n) and
+X (n, k) both fit VMEM and the whole rank-k sweep runs without touching
+HBM in between:
+
+  outer ``fori_loop`` over the k update columns; inner ``fori_loop`` over
+  the n factor columns, each step one plane rotation (circular for the
+  update, hyperbolic for the downdate) expressed as two length-n VPU
+  vector ops:
+
+      r = √(a² ± b²);  L[:, j] ← (a·L[:, j] ± b·x)/r;  x ← (a·x − b·L[:, j])/r
+
+  No masking is needed: above the diagonal both operands are already zero,
+  and x[j] cancels exactly (−b·a + a·b). O(n²·k) VPU FLOPs — negligible
+  next to the O(n²·m) Gram it replaces, which is the whole point.
+
+There is no triangular-solve or column-pivot primitive in Mosaic, which is
+why the sweep is value-carried ``dynamic_slice`` arithmetic exactly like
+``_chol_kernel``. Larger n falls back to the jnp reference in ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.cholesky import MAX_SINGLE_BLOCK_N
+
+__all__ = ["cholupdate_pallas", "MAX_SINGLE_BLOCK_N"]
+
+
+def _cholupdate_kernel(l_ref, x_ref, out_ref, *, sign: int, eps: float):
+    L0 = l_ref[...].astype(jnp.float32)
+    X = x_ref[...].astype(jnp.float32)
+    n = L0.shape[0]
+    k = X.shape[1]
+
+    def col_sweep(t, L):
+        x = jax.lax.dynamic_slice(X, (0, t), (n, 1))            # (n, 1)
+
+        def rot(j, carry):
+            L, x = carry
+            col = jax.lax.dynamic_slice(L, (0, j), (n, 1))
+            a = jax.lax.dynamic_slice(col, (j, 0), (1, 1))
+            b = jax.lax.dynamic_slice(x, (j, 0), (1, 1))
+            r = jnp.sqrt(jnp.maximum(a * a + sign * b * b, eps))
+            new_col = (a * col + sign * b * x) / r
+            x_new = (a * x - b * col) / r
+            return jax.lax.dynamic_update_slice(L, new_col, (0, j)), x_new
+
+        L, _ = jax.lax.fori_loop(0, n, rot, (L, x))
+        return L
+
+    L = jax.lax.fori_loop(0, k, col_sweep, L0)
+    # FMA contraction makes the a·b − b·a cancellations inexact at the
+    # 1-ulp level; pin the strict upper triangle back to exactly zero.
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    out_ref[...] = jnp.where(rows >= cols, L, 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sign", "eps", "interpret"))
+def cholupdate_pallas(L: jax.Array, X: jax.Array, *, sign: int = 1,
+                      eps: float = 1e-30,
+                      interpret: bool = False) -> jax.Array:
+    """L' with L'·L'ᵀ = L·Lᵀ + sign·X·Xᵀ. Real fp32, L (n, n) lower,
+    X (n, k); sign ∈ {+1, −1}. Zero columns of X are exact no-ops, so
+    callers may pad k freely."""
+    n = L.shape[0]
+    assert L.shape == (n, n) and X.shape[0] == n, (L.shape, X.shape)
+    assert sign in (1, -1), sign
+    return pl.pallas_call(
+        functools.partial(_cholupdate_kernel, sign=sign, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+        name="rank_k_cholupdate",
+    )(L, X)

@@ -21,12 +21,14 @@ from jax.scipy.linalg import solve_triangular
 from repro.core.operator import BlockedScores, is_blocked
 from repro.kernels import ref
 from repro.kernels.cholesky import MAX_SINGLE_BLOCK_N, cholesky_pallas
+from repro.kernels.cholupdate import cholupdate_pallas
 from repro.kernels.gram import gram_acc_pallas, gram_pallas
 from repro.kernels.gram_sv import gram_sv_pallas
 from repro.kernels.ngd_apply import ngd_apply_pallas
 
 __all__ = ["gram", "gram_blocks", "gram_sv", "ngd_apply", "cholesky",
-           "chol_solve_fused", "flash_attention", "on_tpu", "pad_to"]
+           "cholupdate", "chol_solve_fused", "flash_attention", "on_tpu",
+           "pad_to"]
 
 
 def on_tpu() -> bool:
@@ -51,6 +53,19 @@ def pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
     if not any(p[1] for p in pads):
         return x
     return jnp.pad(x, pads)
+
+
+def _pad_identity(W: jax.Array, mult: int) -> jax.Array:
+    """Embed a square matrix in the top-left of the next ``mult``-multiple
+    size, with ones on the padded diagonal — exact for Cholesky-shaped ops
+    (the padded block factors/updates to itself)."""
+    n = W.shape[0]
+    npad = (-n) % mult
+    if not npad:
+        return W
+    Wp = jnp.zeros((n + npad, n + npad), W.dtype)
+    Wp = Wp.at[:n, :n].set(W)
+    return Wp.at[jnp.arange(n, n + npad), jnp.arange(n, n + npad)].set(1.0)
 
 
 def _pick_blocks(n: int, m: int) -> tuple[int, int]:
@@ -141,15 +156,37 @@ def cholesky(W: jax.Array, *, mode: Optional[str] = None,
     n = W.shape[0]
     if not _use_kernels(mode) or n > MAX_SINGLE_BLOCK_N:
         return ref.cholesky_ref(W)
-    npad = (-n) % panel
-    if npad:
-        Wp = jnp.zeros((n + npad, n + npad), W.dtype)
-        Wp = Wp.at[:n, :n].set(W)
-        Wp = Wp.at[jnp.arange(n, n + npad), jnp.arange(n, n + npad)].set(1.0)
-    else:
-        Wp = W
+    Wp = _pad_identity(W, panel)
     L = cholesky_pallas(Wp, panel=panel, interpret=(mode == "interpret"))
     return L[:n, :n]
+
+
+def cholupdate(L: jax.Array, X: jax.Array, *, sign: int = 1,
+               mode: Optional[str] = None) -> jax.Array:
+    """Rank-k factor refresh: L' with L'·L'ᵀ = L·Lᵀ + sign·X·Xᵀ.
+
+    Same dispatch policy as ``cholesky``: the in-VMEM Pallas kernel for
+    real fp32 factors up to MAX_SINGLE_BLOCK_N (padded with an identity
+    diagonal — the extra rotations are exact no-ops), the pure-JAX
+    reference (``repro.curvature.update``) beyond, on CPU, and for complex
+    Hermitian factors (Mosaic has no complex arithmetic).
+    """
+    from repro.curvature.update import chol_downdate, chol_update
+
+    fallback = chol_update if sign > 0 else chol_downdate
+    n = L.shape[0]
+    if X.ndim == 1:
+        X = X[:, None]
+    if (not _use_kernels(mode) or n > MAX_SINGLE_BLOCK_N
+            or jnp.issubdtype(jnp.promote_types(L.dtype, X.dtype),
+                              jnp.complexfloating)):
+        return fallback(L, X)
+    Lp = _pad_identity(L.astype(jnp.float32), 8)
+    Xp = jnp.pad(X, ((0, Lp.shape[0] - n), (0, 0)))
+    Lout = cholupdate_pallas(Lp, Xp.astype(jnp.float32),
+                             sign=1 if sign > 0 else -1,
+                             interpret=(mode == "interpret"))
+    return Lout[:n, :n]
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, scale=None,

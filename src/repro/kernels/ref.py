@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["gram_ref", "gram_sv_ref", "ngd_apply_ref", "cholesky_ref",
-           "chol_solve_ref"]
+           "cholupdate_ref", "chol_solve_ref"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -37,6 +37,16 @@ def ngd_apply_ref(S: jax.Array, w: jax.Array, v: jax.Array, lam) -> jax.Array:
 
 def cholesky_ref(W: jax.Array) -> jax.Array:
     return jnp.linalg.cholesky(W.astype(jnp.float32))
+
+
+def cholupdate_ref(L: jax.Array, X: jax.Array, sign: int = 1) -> jax.Array:
+    """L' with L'·L'ᵀ = L·Lᵀ + sign·X·Xᵀ — the algorithmic home is
+    ``repro.curvature.update`` (the complex-aware plane-rotation sweeps);
+    this alias keeps the one-oracle-per-kernel convention of this module."""
+    from repro.curvature.update import chol_downdate, chol_update
+    fn = chol_update if sign > 0 else chol_downdate
+    tgt = jnp.promote_types(jnp.promote_types(L.dtype, X.dtype), jnp.float32)
+    return fn(L.astype(tgt), X.astype(tgt))
 
 
 def chol_solve_ref(S: jax.Array, v: jax.Array, lam) -> jax.Array:

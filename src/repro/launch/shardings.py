@@ -176,11 +176,15 @@ def opt_state_shardings(opt_state, param_shard_tree, mesh: Mesh):
     from repro.optim.ngd import NGDState
     if isinstance(opt_state, NGDState):
         # per-layer momentum buffers mirror their parameter's sharding —
-        # no flat raveled buffer exists anymore.
+        # no flat raveled buffer exists anymore. The streaming-curvature
+        # state (cached n×n Gram + counters) is replicated: the Gram is
+        # the post-psum dual-space matrix every device already holds.
         return NGDState(
             NamedSharding(mesh, P()),
             resolve(opt_state.momentum, param_shard_tree),
             jax.tree.map(lambda _: NamedSharding(mesh, P()),
-                         opt_state.damping))
+                         opt_state.damping),
+            jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                         opt_state.curvature))
     # generic fallback: replicate
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), opt_state)

@@ -128,7 +128,13 @@ def make_ngd_train_step(api, optimizer, mesh, *, score_chunk=None,
         updates, opt_state = optimizer.update(grads, opt_state, params,
                                               scores=S)
         params = _apply_updates(params, updates)
-        return params, opt_state, {"loss": loss, **metrics}
+        metrics = {"loss": loss, **metrics}
+        if opt_state.curvature is not None:
+            # streaming-curvature cache diagnostics ride the metrics dict
+            cs = opt_state.curvature.stats
+            metrics["curvature_hits"] = cs.hits
+            metrics["curvature_refreshes"] = cs.refreshes
+        return params, opt_state, metrics
 
     return train_step
 

@@ -34,20 +34,48 @@ __all__ = ["train_main", "build_trainer"]
 def build_trainer(cfg, *, mesh, optimizer_name: str, lr: float,
                   damping: float, batch: int, seq: int, total_steps: int,
                   solver: str = "chol", momentum: float = 0.9,
-                  score_chunk=None, blocked: bool = False, seed: int = 0):
+                  score_chunk=None, blocked: bool = False,
+                  curvature: str = "exact", curvature_refresh: int = 10,
+                  curvature_drift_tol=None, seed: int = 0):
     """Returns (init_state, step_fn, save_state, restore_state, data).
 
     ``blocked``: NGD keeps S as per-layer BlockedScores blocks — no flat
     (n, m) score buffer is ever materialized (the paper-scale memory
-    ceiling of the dense path)."""
+    ceiling of the dense path).
+
+    ``curvature``: "exact" re-solves the damped Fisher from scratch every
+    step (the paper; unchanged default); "streaming" carries the n×n Gram
+    across steps with a full refresh every ``curvature_refresh`` steps
+    (and on residual drift past ``curvature_drift_tol``, if set) — the
+    O(n²·m) pass is skipped on cache-hit steps."""
     api = get_api(cfg)
     data = SyntheticLM(cfg, batch=batch, seq=seq, seed=seed)
     sched = warmup_cosine(lr, warmup_steps=max(total_steps // 20, 1),
                           total_steps=total_steps)
 
+    if curvature not in ("exact", "streaming", None):
+        raise ValueError(f"unknown curvature mode {curvature!r}")
+    if curvature == "streaming":
+        if optimizer_name != "ngd":
+            raise ValueError(
+                "curvature='streaming' maintains the NGD damped-Fisher "
+                f"factorization; it has no meaning for {optimizer_name!r}")
+        if solver != "chol":
+            raise ValueError(
+                "curvature='streaming' replaces the Cholesky dual solve "
+                f"and cannot honor solver={solver!r}; use solver='chol' "
+                "or curvature='exact'")
+
     if optimizer_name == "ngd":
+        if curvature == "streaming":
+            from repro.curvature import StreamingCurvature
+            policy = StreamingCurvature(batch,
+                                        refresh_every=curvature_refresh,
+                                        drift_tol=curvature_drift_tol)
+        else:
+            policy = None
         opt = NaturalGradient(sched, damping=damping, solver=solver,
-                              momentum=momentum)
+                              momentum=momentum, curvature=policy)
     else:
         opt = AdamW(sched)
 
@@ -99,6 +127,15 @@ def train_main(argv=None):
                     choices=["chol", "eigh", "svd", "cg"])
     ap.add_argument("--blocked", action="store_true",
                     help="per-layer BlockedScores NGD path (no flat S)")
+    ap.add_argument("--curvature", choices=["exact", "streaming"],
+                    default="exact",
+                    help="per-step exact factorization (paper) or the "
+                         "cross-step streaming curvature cache")
+    ap.add_argument("--curvature-refresh", type=int, default=10,
+                    help="streaming: full Gram refresh period (steps)")
+    ap.add_argument("--curvature-drift-tol", type=float, default=None,
+                    help="streaming: refresh when the solve's relative "
+                         "residual exceeds this")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -123,7 +160,9 @@ def train_main(argv=None):
     init_state, step_fn, save_state, restore_state, _ = build_trainer(
         cfg, mesh=mesh, optimizer_name=args.optimizer, lr=lr,
         damping=args.damping, batch=args.batch, seq=args.seq,
-        total_steps=args.steps, solver=args.solver, blocked=args.blocked)
+        total_steps=args.steps, solver=args.solver, blocked=args.blocked,
+        curvature=args.curvature, curvature_refresh=args.curvature_refresh,
+        curvature_drift_tol=args.curvature_drift_tol)
 
     losses = []
 

@@ -17,6 +17,13 @@ The solver is pluggable (``repro.core.SOLVERS`` or the Pallas-fused
 ``chol_solve_fused`` or a mesh-sharded solver from
 ``repro.core.make_sharded_solver``), which is how the same optimizer runs
 single-chip paper-scale and pod-scale.
+
+``curvature=`` selects how the damped factorization is obtained: the
+default (``None`` / ``"exact"``) solves from scratch every step — the
+paper's method, bit-identical to the pre-curvature behavior — while a
+``repro.curvature.StreamingCurvature`` policy carries the n×n Gram across
+steps (age/drift-triggered refresh, ``with_damping`` λ re-damping) with
+its ``CurvatureState`` living inside ``NGDState``.
 """
 from __future__ import annotations
 
@@ -50,6 +57,7 @@ class NGDState(NamedTuple):
     step: jax.Array
     momentum: Any              # per-layer heavy-ball pytree (params-shaped)
     damping: DampingState
+    curvature: Any = None      # CurvatureState when a streaming policy is on
 
 
 class NaturalGradient:
@@ -61,6 +69,11 @@ class NaturalGradient:
       solver: name in repro.core.SOLVERS, or any ``f(S, v, λ) -> x``.
       momentum: heavy-ball coefficient μ (0 disables).
       clip_natgrad_norm: optional global-norm clip on the natural gradient.
+      curvature: ``None`` / ``"exact"`` for the per-step solve (unchanged
+        default), or a ``repro.curvature.StreamingCurvature`` policy to
+        amortize the Gram across steps (replaces the chol solver; its
+        state rides in ``NGDState.curvature``). The policy's ``n`` must
+        equal the per-step sample count of ``scores``.
     """
 
     requires_scores = True
@@ -68,7 +81,8 @@ class NaturalGradient:
     def __init__(self, learning_rate: Union[float, Callable] = 1e-3, *,
                  damping=1e-3, solver: Union[str, Callable] = "chol",
                  momentum: float = 0.9,
-                 clip_natgrad_norm: Optional[float] = None):
+                 clip_natgrad_norm: Optional[float] = None,
+                 curvature=None):
         self.lr = learning_rate if callable(learning_rate) \
             else (lambda step: jnp.asarray(learning_rate, jnp.float32))
         self.damping_policy = damping if hasattr(damping, "init") \
@@ -76,6 +90,14 @@ class NaturalGradient:
         self.solver = get_solver(solver) if isinstance(solver, str) else solver
         self.momentum = float(momentum)
         self.clip = clip_natgrad_norm
+        if curvature == "exact":
+            curvature = None
+        if curvature is not None and not hasattr(curvature, "solve"):
+            raise ValueError(
+                "curvature= takes None/'exact' or a policy with "
+                "init()/solve() (e.g. repro.curvature.StreamingCurvature(n="
+                "batch)); got " + repr(curvature))
+        self.curvature = curvature
 
     def init(self, params) -> NGDState:
         return NGDState(
@@ -83,10 +105,16 @@ class NaturalGradient:
             momentum=jax.tree.map(
                 lambda p: jnp.zeros(p.shape, _acc_dtype(p.dtype)), params),
             damping=self.damping_policy.init(),
+            curvature=None if self.curvature is None
+            else self.curvature.init(),
         )
 
-    def _nat_grad_tree(self, grads, scores, lam):
-        """Solve (SᵀS+λI)x = v and return x as a grads-shaped pytree."""
+    def _nat_grad_tree(self, grads, scores, lam, cstate):
+        """Solve (SᵀS+λI)x = v; returns (x as grads-shaped pytree, cstate')."""
+        if self.curvature is not None:
+            solve = lambda S, v, lam: self.curvature.solve(S, v, lam, cstate)
+        else:
+            solve = lambda S, v, lam: (self.solver(S, v, lam), None)
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         if is_blocked(scores):
             # blocked path: the gradient pytree IS the blocked RHS — one
@@ -98,21 +126,22 @@ class NaturalGradient:
                     f"block widths {tuple(scores.block_widths)}")
             v_blocks = tuple(g.reshape(-1).astype(_acc_dtype(g.dtype))
                              for g in leaves)
-            x_blocks = self.solver(scores, v_blocks, lam)
+            x_blocks, cstate = solve(scores, v_blocks, lam)
             nat_leaves = [x.reshape(g.shape).astype(_acc_dtype(x.dtype))
                           for x, g in zip(x_blocks, leaves)]
-            return jax.tree_util.tree_unflatten(treedef, nat_leaves)
+            return jax.tree_util.tree_unflatten(treedef, nat_leaves), cstate
         v, unravel = ravel_pytree(grads)
-        nat = self.solver(scores, v.astype(_acc_dtype(v.dtype)), lam)
+        nat, cstate = solve(scores, v.astype(_acc_dtype(v.dtype)), lam)
         return jax.tree.map(lambda x: x.astype(_acc_dtype(x.dtype)),
-                            unravel(nat))
+                            unravel(nat)), cstate
 
     def update(self, grads, state: NGDState, params, *, scores):
         """Returns (updates_pytree, new_state).
 
         ``scores`` is S: dense (n, m) or a blocked operator whose block
         order matches the gradient pytree leaves."""
-        nat = self._nat_grad_tree(grads, scores, state.damping.lam)
+        nat, cstate = self._nat_grad_tree(grads, scores, state.damping.lam,
+                                          state.curvature)
 
         if self.clip is not None:
             norm = global_norm(nat)
@@ -124,7 +153,7 @@ class NaturalGradient:
         lr = self.lr(state.step)
         updates = jax.tree.map(
             lambda b, g: (-lr * b).astype(g.dtype), buf, grads)
-        new_state = NGDState(state.step + 1, buf, state.damping)
+        new_state = NGDState(state.step + 1, buf, state.damping, cstate)
         return updates, new_state
 
     def update_damping(self, state: NGDState, *, actual_reduction,

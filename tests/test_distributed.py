@@ -69,6 +69,45 @@ def test_sharded_blocked_solve_matches_local():
     """)
 
 
+def test_sharded_blocked_per_block_consumption_regression():
+    """Regression for the documented jaxlib-0.4 caveat: the blocked shard_map
+    solver's outputs must be consumed *per block* — each block gathered or
+    reduced on its own — and stay correct that way. (Cross-block
+    ``jnp.concatenate`` of shard_map outputs mis-reshards on some jaxlib
+    0.4 CPU builds: replication over the unmentioned data axis turns into a
+    sum. This test pins the supported access pattern so the workaround in
+    ``sharded_blocked_chol_solve``'s docstring can't silently rot.)"""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import BlockedScores, chol_solve, sharded_blocked_chol_solve
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(3)
+        widths = [48, 16, 64]
+        S = jnp.asarray(rng.normal(size=(16, sum(widths))), jnp.float32)
+        V = jnp.asarray(rng.normal(size=(sum(widths), 2)), jnp.float32)  # multi-RHS
+        op = BlockedScores.from_dense(S, widths)
+        ref_blocks = op.split(np.asarray(chol_solve(S, V, 0.05)))
+        x = sharded_blocked_chol_solve(op, op.split(V), 0.05, mesh=mesh)
+        assert isinstance(x, tuple) and len(x) == len(widths)
+        # per-block consumption (the optimizer's access pattern): every
+        # block individually materialized, elementwise-used, and reduced —
+        # no cross-block concatenate anywhere.
+        for xb, rb, w in zip(x, ref_blocks, widths):
+            assert xb.shape == (w, 2), (xb.shape, w)
+            np.testing.assert_allclose(np.asarray(xb), np.asarray(rb),
+                                       rtol=1e-4, atol=1e-5)
+            # elementwise math on a sharded block keeps its values/sharding
+            np.testing.assert_allclose(np.asarray(2.0 * xb) / 2.0,
+                                       np.asarray(rb), rtol=1e-4, atol=1e-5)
+        # per-block norms agree with the flat-solution norms
+        got = [float(jnp.linalg.norm(xb)) for xb in x]
+        want = [float(np.linalg.norm(np.asarray(rb))) for rb in ref_blocks]
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+        print("ok")
+    """)
+
+
 def test_pure_jit_solver_partition_matches_shard_map():
     """GSPMD partitioning of chol_solve (sharded S) must equal the explicit
     shard_map implementation — cross-checks the partitioner against

@@ -1,0 +1,108 @@
+"""Examples stay green: the quickstart drives at reduced shapes, and the
+trainer's default ``curvature=`` path is a no-op for existing callers."""
+import importlib.util
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+_EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
+
+
+def _load_example(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(_EXAMPLES, f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_quickstart_runs_at_reduced_shape():
+    qs = _load_example("quickstart")
+    lines = []
+    results = qs.main(n=32, m=1_500, lam=1e-2, steps=3, emit=lines.append)
+    assert set(results) == {"chol", "eigh", "svd", "cache"}
+    for name in ("chol", "eigh", "svd"):
+        _, r = results[name]
+        assert r < 1e-2, (name, r)
+    hits, refreshes = results["cache"]
+    assert refreshes == 1 and hits == 2          # one Gram, two reuses
+    assert any("curvature cache stats" in ln for ln in lines)
+
+
+def test_trainer_curvature_default_is_noop_for_existing_callers():
+    """`build_trainer` without a curvature argument and with the explicit
+    default must produce bit-identical NGD training trajectories."""
+    from repro import configs
+    from repro.launch.mesh import make_mesh
+    from repro.launch.trainer import build_trainer
+
+    cfg = configs.get_smoke("llama3.2-3b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    losses = {}
+    for tag, kw in [("implicit", {}), ("exact", {"curvature": "exact"})]:
+        init_state, step_fn, *_ = build_trainer(
+            cfg, mesh=mesh, optimizer_name="ngd", lr=0.1, damping=1e-3,
+            batch=4, seq=16, total_steps=3, **kw)
+        state = init_state()
+        ls = []
+        for s in range(3):
+            state, m = step_fn(state, s)
+            ls.append(float(m["loss"]))
+        losses[tag] = ls
+        assert state["opt"].curvature is None
+    np.testing.assert_array_equal(losses["implicit"], losses["exact"])
+
+
+def _run_streaming(damping, lr, drift_tol, steps=6):
+    from repro import configs
+    from repro.launch.mesh import make_mesh
+    from repro.launch.trainer import build_trainer
+
+    cfg = configs.get_smoke("llama3.2-3b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    init_state, step_fn, *_ = build_trainer(
+        cfg, mesh=mesh, optimizer_name="ngd", lr=lr, damping=damping,
+        batch=4, seq=16, total_steps=steps, curvature="streaming",
+        curvature_refresh=3, curvature_drift_tol=drift_tol)
+    state = init_state()
+    losses, m = [], {}
+    for s in range(steps):
+        state, m = step_fn(state, s)
+        losses.append(float(m["loss"]))
+    return losses, state["opt"].curvature.stats, m
+
+
+def test_trainer_streaming_curvature_trains():
+    # moderate damping absorbs the staleness between scheduled refreshes
+    losses, cs, m = _run_streaming(damping=0.1, lr=0.05, drift_tol=None)
+    assert all(np.isfinite(l) for l in losses), losses
+    # 6 steps at refresh_every=3: refreshes at steps 0 and 3
+    assert int(cs.refreshes) == 2 and int(cs.hits) == 4
+    assert "curvature_refreshes" in m and "curvature_hits" in m
+
+
+def test_trainer_streaming_rejects_non_chol_solver():
+    from repro import configs
+    from repro.launch.mesh import make_mesh
+    from repro.launch.trainer import build_trainer
+
+    cfg = configs.get_smoke("llama3.2-3b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="streaming"):
+        build_trainer(cfg, mesh=mesh, optimizer_name="ngd", lr=0.1,
+                      damping=1e-3, batch=4, seq=16, total_steps=2,
+                      solver="eigh", curvature="streaming")
+
+
+def test_trainer_streaming_drift_guard_catches_nonoverlap():
+    """Synthetic batches share no curvature step to step; at tiny λ a stale
+    W would blow the solve up. The drift guard must detect that (huge
+    residual) and refresh every step — degenerating gracefully to the
+    exact method instead of diverging."""
+    losses, cs, _ = _run_streaming(damping=1e-3, lr=0.1, drift_tol=0.5)
+    assert all(np.isfinite(l) for l in losses), losses
+    assert int(cs.refreshes) == 6 and int(cs.hits) == 0
+    assert float(cs.last_residual) > 0.5

@@ -49,6 +49,39 @@ def test_ngd_apply_kernel(shape, dtype):
     assert _rel(x, ref.ngd_apply_ref(S, w, v, 0.37)) < 5e-6
 
 
+@pytest.mark.parametrize("n,k", [(16, 1), (24, 4), (64, 8), (100, 3)])
+@pytest.mark.parametrize("sign", [1, -1], ids=["update", "downdate"])
+def test_cholupdate_kernel(n, k, sign):
+    A = RNG.normal(size=(n, n)).astype(np.float32)
+    X = jnp.asarray(RNG.normal(size=(n, k)), jnp.float32)
+    W = jnp.asarray(A @ A.T + n * np.eye(n), jnp.float32)
+    if sign < 0:
+        # downdate something actually inside W so it stays PD
+        W = W + X @ X.T
+    L0 = np.linalg.cholesky(np.asarray(W))
+    L = ops.cholupdate(jnp.asarray(L0), X, sign=sign, mode="interpret")
+    Lr = ref.cholupdate_ref(jnp.asarray(L0), X, sign)
+    assert _rel(L, Lr) < 1e-5
+    assert np.allclose(np.triu(np.asarray(L), 1), 0.0)
+    # reconstructs the perturbed Gram
+    rec = np.asarray(L) @ np.asarray(L).T
+    assert _rel(rec, np.asarray(W) + sign * np.asarray(X @ X.T)) < 1e-5
+
+
+def test_cholupdate_cpu_routes_to_reference():
+    # mode=None off-TPU → the pure-JAX reference, complex supported
+    n, k = 12, 2
+    A = RNG.normal(size=(n, n)) + 1j * RNG.normal(size=(n, n))
+    W = jnp.asarray(A @ A.conj().T + n * np.eye(n), jnp.complex64)
+    X = jnp.asarray(RNG.normal(size=(n, k))
+                    + 1j * RNG.normal(size=(n, k)), jnp.complex64)
+    L0 = jnp.linalg.cholesky(W)
+    L = ops.cholupdate(L0, X)
+    rec = np.asarray(L) @ np.asarray(L).conj().T
+    ref_W = np.asarray(W + X @ X.conj().T)
+    assert np.abs(rec - ref_W).max() / np.abs(ref_W).max() < 1e-5
+
+
 @pytest.mark.parametrize("n", [16, 48, 64, 100, 128, 160])
 def test_cholesky_kernel(n):
     A = RNG.normal(size=(n, n)).astype(np.float32)

@@ -201,3 +201,66 @@ def test_constant_damping_is_constant():
     st0 = pol.init()
     st1 = pol.update(st0, actual_reduction=0.0, predicted_reduction=1.0)
     assert float(st1.lam) == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+# CholFactorization reuse guarantees the curvature cache builds on
+# ---------------------------------------------------------------------------
+
+def test_with_damping_multi_lambda_reuse_matches_fresh():
+    """Sweeping λ over a cached factorization must equal a fresh
+    ``chol_solve`` at every λ — the reuse path the curvature cache and LM
+    damping schedules lean on."""
+    from repro.core import SolverStats, chol_factorize
+
+    S, v, lam = make_problem(n=20, m=160)
+    fac = chol_factorize(S, lam)
+    for lam2 in (1e-3, 0.05, lam, 0.9, 7.0):
+        fac2 = fac.with_damping(lam2)
+        assert float(fac2.lam) == pytest.approx(lam2)
+        x, stats = fac2.solve(v, return_stats=True)
+        np.testing.assert_allclose(np.asarray(x),
+                                   np.asarray(chol_solve(S, v, lam2)),
+                                   rtol=1e-5, atol=1e-5)
+        assert isinstance(stats, SolverStats)
+        assert np.isfinite(float(stats.residual_norm))
+        assert float(stats.residual_norm) < 1e-2
+        assert float(stats.gram_cond_proxy) >= 1.0
+    # the cached undamped Gram is shared, not recomputed
+    assert fac.with_damping(0.5).W is fac.W
+
+
+def test_factorization_multi_rhs_matches_fresh():
+    from repro.core import chol_factorize
+
+    S, _, lam = make_problem(n=16, m=120, seed=3)
+    V = jnp.asarray(RNG.normal(size=(S.shape[1], 4)), jnp.float32)
+    fac = chol_factorize(S, lam)
+    X, stats = fac.solve(V, return_stats=True)
+    assert X.shape == V.shape
+    np.testing.assert_allclose(np.asarray(X),
+                               np.asarray(chol_solve(S, V, lam)),
+                               rtol=1e-5, atol=1e-5)
+    assert np.isfinite(float(stats.residual_norm))
+    # column-by-column agreement with independent solves
+    for j in range(V.shape[1]):
+        np.testing.assert_allclose(np.asarray(X[:, j]),
+                                   np.asarray(chol_solve(S, V[:, j], lam)),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_lm_damping_clamp_bounds():
+    """λ must stay inside [lam_min, lam_max] no matter how long the gain
+    ratio stays bad/good."""
+    pol = LevenbergMarquardtDamping(1.0, grow=10.0, shrink=0.1,
+                                    lam_min=1e-3, lam_max=1e2)
+    st = pol.init()
+    for _ in range(10):                         # ρ ≈ 0 → grow every step
+        st = pol.update(st, actual_reduction=jnp.asarray(0.0),
+                        predicted_reduction=jnp.asarray(1.0))
+    assert float(st.lam) == pytest.approx(pol.lam_max)
+    for _ in range(20):                         # ρ ≈ 1 → shrink every step
+        st = pol.update(st, actual_reduction=jnp.asarray(1.0),
+                        predicted_reduction=jnp.asarray(1.0))
+    assert float(st.lam) == pytest.approx(pol.lam_min)
+    assert float(st.last_ratio) == pytest.approx(1.0)
