@@ -54,6 +54,7 @@ def main(argv=None) -> None:
 
     solver_rows = []
     ngd_rows = []
+    serve_rows = []
 
     from benchmarks import table1_solvers
     # tiny sweeps are disjoint so BENCH_solvers.json row names stay unique
@@ -87,6 +88,15 @@ def main(argv=None) -> None:
         amortized.run_trainer(emit=emit)
     ngd_rows += rows
 
+    from benchmarks import serve
+    sv = dict(n=64, m=2_000, requests=24, k=4) if tiny \
+        else dict(n=512, m=25_000, requests=48, k=8)
+    rows, emit = _collector({"section": "serve", **sv})
+    # tiny shapes sit at the dispatch floor (see benchmarks/serve.py);
+    # the >=5x request-path gate runs at the real m >> n shape only.
+    serve.run(emit=emit, assert_speedup=not tiny, **sv)
+    serve_rows += rows
+
     from benchmarks import roofline
     rows, emit = _collector({"section": "roofline"})
     roofline.run(emit=emit)
@@ -95,6 +105,7 @@ def main(argv=None) -> None:
     if as_json:
         _write_json("BENCH_solvers.json", solver_rows)
         _write_json("BENCH_ngd.json", ngd_rows)
+        _write_json("BENCH_serve.json", serve_rows)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,89 @@
+"""Bench trendline gate: diff two BENCH_*.json artifacts, fail on regression.
+
+Closes the perf-tracking loop opened by ``benchmarks/run.py --json``: rows
+are matched by ``name`` across a previous and a current artifact, and any
+named row whose ``us_per_call`` grew by more than ``--threshold`` (default
+1.5×) fails the gate (exit code 1). Rows present in only one artifact are
+ignored (shapes and sections evolve across PRs), as are rows without a
+numeric timing and — via ``--min-us`` — rows sitting at the dispatch
+floor, where scheduler noise swamps any real signal.
+
+    python benchmarks/trend.py PREV.json CUR.json [--threshold 1.5]
+                               [--min-us 100]
+
+CI runs this after the tiny bench smoke against the artifacts committed
+at HEAD (``git show HEAD:BENCH_*.json``). Cross-machine runner variance
+is real; the threshold is deliberately coarse — this gate exists to catch
+step-function regressions (an accidental densify, a lost jit cache), not
+single-digit drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path) -> dict:
+    """name -> us_per_call for every named, timed row."""
+    with open(path) as fh:
+        rows = json.load(fh)
+    out = {}
+    for row in rows:
+        name, us = row.get("name"), row.get("us_per_call")
+        if name and isinstance(us, (int, float)) and us > 0:
+            out[name] = float(us)
+    return out
+
+
+def compare(prev: dict, cur: dict, *, threshold: float = 1.5,
+            min_us: float = 0.0):
+    """Returns (regressions, improvements, compared): regressions are
+    (name, prev_us, cur_us, ratio) with ratio > threshold; improvements
+    the mirror image (ratio < 1/threshold), reported for visibility."""
+    regressions, improvements, compared = [], [], 0
+    for name in sorted(set(prev) & set(cur)):
+        p, c = prev[name], cur[name]
+        if max(p, c) < min_us:
+            continue
+        compared += 1
+        ratio = c / p
+        if ratio > threshold:
+            regressions.append((name, p, c, ratio))
+        elif ratio < 1.0 / threshold:
+            improvements.append((name, p, c, ratio))
+    return regressions, improvements, compared
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("prev", help="previous BENCH_*.json artifact")
+    ap.add_argument("cur", help="current BENCH_*.json artifact")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when cur/prev exceeds this (default 1.5)")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="skip rows where both timings are below this "
+                         "(dispatch-floor noise)")
+    args = ap.parse_args(argv)
+
+    prev, cur = load_rows(args.prev), load_rows(args.cur)
+    regressions, improvements, compared = compare(
+        prev, cur, threshold=args.threshold, min_us=args.min_us)
+
+    print(f"# trend: {compared} comparable rows "
+          f"({len(prev)} prev / {len(cur)} cur, threshold "
+          f"{args.threshold:g}x, min {args.min_us:g}us)")
+    for name, p, c, r in improvements:
+        print(f"improved   {name}: {p:.0f} -> {c:.0f} us ({r:.2f}x)")
+    for name, p, c, r in regressions:
+        print(f"REGRESSION {name}: {p:.0f} -> {c:.0f} us ({r:.2f}x "
+              f"> {args.threshold:g}x)")
+    if regressions:
+        print(f"# FAIL: {len(regressions)} row(s) regressed")
+        return 1
+    print("# OK: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,15 @@
-"""Serving example: batched prefill + greedy decode through the sharded
-serve step (the same code path the decode_32k / long_500k dry-run cells
-lower for the production mesh).
+"""Serving example: batched prefill + greedy decode **plus online
+natural-gradient adaptation** through the serving subsystem.
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-2b] [--new 24]
+The pre-serve-subsystem version of this example only decoded; it now
+drives `repro.serve` end to end: a resident curvature window is
+factorized once, requests coalesce through the token-budget batcher, the
+`SolveServer` answers each with a damped-Fisher solve off the cached
+factor (per-request λ included — no Gram on the request path), updates
+are applied to the live params, and each request's score rows fold back
+into the window via the rank-k algebra before its response is decoded.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-2b] [--new 8]
 """
 import argparse
 import time
@@ -11,50 +18,60 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.launch import train as T
-from repro.launch.mesh import make_mesh
-from repro.models.api import get_api
 
-ap = argparse.ArgumentParser()
-ap.add_argument("--arch", default="gemma2-2b")
-ap.add_argument("--batch", type=int, default=4)
-ap.add_argument("--prompt-len", type=int, default=32)
-ap.add_argument("--new", type=int, default=24)
-args = ap.parse_args()
+def main(argv=None, emit=print):
+    from repro import configs
+    from repro.launch.mesh import make_mesh
+    from repro.launch.trainer import build_server
 
-cfg = configs.get_smoke(args.arch)
-api = get_api(cfg)
-mesh = make_mesh((1, 1), ("data", "model"))
-params = api.init_params(jax.random.key(0))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--window", type=int, default=6)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--new", type=int, default=8, help="tokens decoded")
+    ap.add_argument("--damping", type=float, default=1e-2)
+    ap.add_argument("--lr", type=float, default=0.02)
+    args = ap.parse_args(argv)
 
-rng = np.random.default_rng(0)
-prompt = jnp.asarray(rng.integers(0, cfg.vocab,
-                                  (args.batch, args.prompt_len)))
-max_len = args.prompt_len + args.new
+    cfg = configs.get_smoke(args.arch)
+    mesh = make_mesh((1, 1), ("data", "model"))
 
-t0 = time.perf_counter()
-logits, cache, idx = api.prefill(params, {"tokens": prompt,
-                                          "max_len": max_len})
-print(f"prefill({args.batch}×{args.prompt_len}) "
-      f"{(time.perf_counter() - t0) * 1e3:.0f} ms")
+    t0 = time.perf_counter()
+    server, h = build_server(cfg, mesh=mesh, window=args.window,
+                             seq=args.seq, damping=args.damping,
+                             max_tokens=4 * args.seq, max_requests=4)
+    emit(f"window factorized: n={args.window} m={server.state.S.shape[1]} "
+         f"({(time.perf_counter() - t0) * 1e3:.0f} ms)")
 
-ispecs = {"tokens": jax.ShapeDtypeStruct((args.batch, 1), jnp.int32),
-          "cache": jax.eval_shape(lambda: cache),
-          "cache_index": jax.ShapeDtypeStruct((), jnp.int32)}
-serve, _ = T.jit_serve_step(api, mesh,
-                            param_specs=jax.eval_shape(lambda: params),
-                            input_specs=ispecs, donate=False)
+    results = {}
+    for r in range(args.requests):
+        ex = jax.tree.map(lambda x: x[:2], h.data.batch_at(r + 1))
+        loss, v, rows = h.score_grads(h.params, ex)
+        uid = server.submit(v, tokens=2 * args.seq, rows=rows,
+                            payload=ex["inputs"][:1])
+        results[uid] = float(loss)
 
-tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-generated = [tok]
-t0 = time.perf_counter()
-for t in range(args.new - 1):
-    nxt, cache = serve(params, cache, jnp.asarray(args.prompt_len + t),
-                       generated[-1])
-    generated.append(nxt[:, None])
-dt = time.perf_counter() - t0
-gen = jnp.concatenate(generated, axis=1)
-print(f"decoded {args.new - 1} tokens/stream in {dt * 1e3:.0f} ms "
-      f"({dt / max(args.new - 1, 1) * 1e3:.1f} ms/tok)")
-print("sample token ids:", np.asarray(gen[0][:12]))
+    for res in server.flush():
+        h.apply_update(res.x, lr=args.lr)
+        emit(f"req {res.uid} loss {results[res.uid]:.4f} "
+             f"solve {res.latency_s * 1e3:.1f} ms")
+
+    # decode the last request's prompt with the adapted params
+    prompt = jnp.asarray(h.data.batch_at(args.requests)["inputs"][:1,
+                                                                  :args.seq])
+    t0 = time.perf_counter()
+    gen = h.decode(prompt, new_tokens=args.new)
+    dt = time.perf_counter() - t0
+    emit(f"decoded {args.new} tokens in {dt * 1e3:.0f} ms "
+         f"({dt / max(args.new, 1) * 1e3:.1f} ms/tok)")
+    emit(f"sample token ids: {np.asarray(gen[0][:12]).tolist()}")
+
+    s = server.metrics.summary()
+    emit(f"served {s['served']}: p50 {s['p50_ms']:.1f} ms "
+         f"p99 {s['p99_ms']:.1f} ms ({s['rps']:.1f} req/s)")
+    return server, s
+
+
+if __name__ == "__main__":
+    main()

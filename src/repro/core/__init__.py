@@ -34,6 +34,7 @@ from repro.core.damping import (
     ConstantDamping,
     DampingState,
     LevenbergMarquardtDamping,
+    auto_drift_tol,
 )
 
 __all__ = [
@@ -44,5 +45,5 @@ __all__ = [
     "is_blocked", "minsr_solve", "residual", "svd_solve",
     "make_sharded_solver", "sharded_blocked_chol_solve",
     "sharded_chol_solve", "sharded_chol_solve_2d", "ConstantDamping",
-    "DampingState", "LevenbergMarquardtDamping",
+    "DampingState", "LevenbergMarquardtDamping", "auto_drift_tol",
 ]

@@ -16,7 +16,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ConstantDamping", "LevenbergMarquardtDamping", "DampingState"]
+__all__ = ["ConstantDamping", "LevenbergMarquardtDamping", "DampingState",
+           "auto_drift_tol"]
 
 
 class DampingState(NamedTuple):
@@ -65,3 +66,31 @@ class LevenbergMarquardtDamping:
         lam = jnp.where(rho > self.rho_good, lam * self.shrink, lam)
         lam = jnp.clip(lam, self.lam_min, self.lam_max)
         return DampingState(lam, rho.astype(jnp.float32))
+
+
+def auto_drift_tol(state: "DampingState | None", *, frac: float = 0.25,
+                   floor: float = 1e-3, ceil: float = 1.0) -> jax.Array:
+    """Curvature drift tolerance derived from the damping schedule.
+
+    The trust-region gain ratio ρ = actual/predicted reduction (carried in
+    ``DampingState.last_ratio``) already measures how well the local
+    quadratic model — and hence the cached curvature — describes the loss
+    landscape. Tie the streaming cache's refresh threshold to it:
+
+        tol = clip(frac · ρ, floor, ceil)
+
+    ρ ≈ 1 (model accurate, λ shrinking) → the landscape is locally stable,
+    so a stale factor can be tolerated longer; ρ → 0 (λ growing because
+    steps overshoot) → the curvature is actually moving, so the tolerance
+    tightens toward an immediate refresh. With ``state=None`` (e.g. a
+    constant-λ serving loop before any step-quality feedback) ρ defaults
+    to 1 and the tolerance is simply ``frac``.
+
+    jit/scan-safe: pure ``jnp`` on a scalar. Used by
+    ``repro.curvature.StreamingCurvature(drift_frac=...)`` and the serving
+    subsystem's staleness policy; an explicitly set static ``drift_tol``
+    always overrides this derivation.
+    """
+    rho = jnp.asarray(1.0, jnp.float32) if state is None \
+        else jnp.asarray(state.last_ratio, jnp.float32)
+    return jnp.clip(frac * jnp.maximum(rho, 0.0), floor, ceil)

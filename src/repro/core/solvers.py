@@ -367,6 +367,58 @@ class CholFactorization:
                             gram_cond_proxy=jnp.max(diag) / jnp.min(diag))
         return x_out, stats
 
+    def solve_batch(self, V, dampings, *, jitter: Optional[float] = None):
+        """x_j = (SᵀS + λ_j I)⁻¹ v_j — a coalesced batch of right-hand
+        sides with **per-column** damping, in one pass over S each way.
+
+        The serving-path workhorse: k requests with individual λ share the
+        cached undamped Gram W, so the m-sized work stays batched —
+
+            U = S·V                                  (one O(n·m·k) pass)
+            L_j = chol(W + (λ_j + jitter)·Ĩ)         (batched, O(k·n³))
+            w_j = L_j⁻ᵀ L_j⁻¹ u_j                    (batched triangular)
+            Y = Sᵀ·[w_1 … w_k]                       (one O(n·m·k) pass)
+            x_j = (v_j − y_j) / λ_j
+
+        — against k separate ``with_damping(λ_j).solve(v_j)`` calls, which
+        would pay the two S passes per request. ``V`` is (m, k) (or a tuple
+        of per-block (m_b, k) pieces for a blocked S; blocked in → blocked
+        out); ``dampings`` is (k,). With all λ equal this matches
+        ``with_damping(λ).solve(V)`` column for column.
+        """
+        jit_ = self.jitter if jitter is None else jitter
+        blocked = is_blocked(self.S)
+        if blocked:
+            v_in, was_flat = as_blocked_vector(self.S, V)
+            v_in = self._prep_v(v_in)
+            k = v_in[0].shape[1]
+        else:
+            v_in, was_flat = self._prep_v(V), True
+            if v_in.ndim != 2:
+                raise ValueError(
+                    f"solve_batch takes an (m, k) batch of RHS columns, "
+                    f"got shape {v_in.shape}")
+            k = v_in.shape[1]
+        lams = jnp.asarray(dampings, dtype=self.W.real.dtype).reshape(-1)
+        if lams.shape[0] != k:
+            raise ValueError(f"{lams.shape[0]} dampings for {k} RHS columns")
+
+        eye = jnp.eye(self.n, dtype=self.W.dtype)
+        Wd = self.W[None] + (lams + jit_)[:, None, None] * eye    # (k, n, n)
+        Ls = jnp.linalg.cholesky(Wd)
+        u = _op_matvec(self.S, v_in, precision=self.precision)    # (n, k)
+        ut = u.T[..., None]                                       # (k, n, 1)
+        w = jax.vmap(lambda L, b: solve_triangular(L, b, lower=True))(Ls, ut)
+        w = jax.vmap(lambda L, b: solve_triangular(
+            _ct(L, self.mode), b, lower=False))(Ls, w)
+        w = w[..., 0].T                                           # (n, k)
+        y = _op_rmatvec(self.S, w, mode=self.mode, precision=self.precision)
+        if blocked:
+            x = jax.tree.map(lambda vb, yb: (vb - yb) / lams[None, :],
+                             tuple(v_in), tuple(y))
+            return BlockedScores.concat(x) if was_flat else x
+        return (v_in - y) / lams[None, :]
+
 
 def chol_factorize(S, damping, *,
                    mode: Mode = "auto",

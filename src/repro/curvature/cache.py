@@ -30,6 +30,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.damping import auto_drift_tol
 from repro.core.operator import LazyBlockedScores
 from repro.core.solvers import _op_gram, chol_factorize, residual
 
@@ -59,17 +60,26 @@ class StreamingCurvature:
         count; double it when feeding real_part-transformed scores).
       refresh_every: scheduled full-refresh period T (≥ 1). 1 degenerates
         to the exact per-step method.
-      drift_tol: optional relative-residual bound; exceeded → refresh now.
+      drift_tol: optional *static* relative-residual bound; exceeded →
+        refresh now. When set it overrides ``drift_frac``.
+      drift_frac: optional autotuned drift bound — the threshold is
+        derived per solve from the damping schedule's trust-region gain
+        ratio via ``repro.core.auto_drift_tol(damping_state, frac=...)``
+        (pass the live ``DampingState`` to ``solve``; without one the
+        ratio defaults to 1, i.e. a flat ``frac`` threshold).
       jitter: extra diagonal on the damped system (as in ``chol_solve``).
       mode: "real" (default) or "complex".
       dtype: accumulator dtype floor.
     """
 
     def __init__(self, n: int, *, refresh_every: int = 10,
-                 drift_tol: Optional[float] = None, jitter: float = 0.0,
+                 drift_tol: Optional[float] = None,
+                 drift_frac: Optional[float] = None, jitter: float = 0.0,
                  mode: str = "real", dtype=jnp.float32):
         if refresh_every < 1:
             raise ValueError("refresh_every must be >= 1")
+        if drift_frac is not None and drift_frac <= 0:
+            raise ValueError("drift_frac must be positive")
         if mode not in ("real", "complex"):
             raise ValueError(
                 f"mode must be 'real' or 'complex', got {mode!r} "
@@ -78,6 +88,7 @@ class StreamingCurvature:
         self.n = int(n)
         self.refresh_every = int(refresh_every)
         self.drift_tol = None if drift_tol is None else float(drift_tol)
+        self.drift_frac = None if drift_frac is None else float(drift_frac)
         self.jitter = float(jitter)
         self.mode = mode
         self.acc_dtype = jnp.promote_types(dtype, floor)
@@ -93,14 +104,26 @@ class StreamingCurvature:
                 refreshes=jnp.zeros((), jnp.int32),
                 last_residual=-jnp.ones((), jnp.float32)))
 
+    def effective_drift_tol(self, damping_state=None):
+        """The live drift threshold: the static ``drift_tol`` if set, else
+        the ``drift_frac`` autotune against ``damping_state`` (see
+        ``repro.core.auto_drift_tol``), else None (drift check off)."""
+        if self.drift_tol is not None:
+            return jnp.asarray(self.drift_tol, jnp.float32)
+        if self.drift_frac is not None:
+            return auto_drift_tol(damping_state, frac=self.drift_frac)
+        return None
+
     # -- the jit-safe step -------------------------------------------------
-    def solve(self, S, v, damping, state: CurvatureState):
+    def solve(self, S, v, damping, state: CurvatureState, *,
+              damping_state=None):
         """x ≈ (SᵀS + λI)⁻¹v with the cached-W policy; returns (x, state').
 
         S dense or blocked; v flat / (m, k) / blocked, echoed back in the
         same form. Pure in (v, damping, state) — safe under jit, with the
         Gram recomputation guarded by ``lax.cond`` so the O(n²·m) pass
-        only executes on refresh steps.
+        only executes on refresh steps. ``damping_state`` (optional, a
+        ``DampingState``) feeds the ``drift_frac`` autotuned threshold.
         """
         if isinstance(S, LazyBlockedScores):
             S = S.materialize()
@@ -126,12 +149,13 @@ class StreamingCurvature:
         W1 = jax.lax.cond(refresh_due, fresh_gram, lambda: state.W)
         x = dual_solve(W1)
 
-        if self.drift_tol is None:
+        tol = self.effective_drift_tol(damping_state)
+        if tol is None:
             refreshed = refresh_due
             W2, r = W1, -jnp.ones((), jnp.float32)
         else:
             r = residual(S, v, x, lam, mode=self.mode).astype(jnp.float32)
-            drift = jnp.logical_and(~refresh_due, r > self.drift_tol)
+            drift = jnp.logical_and(~refresh_due, r > tol)
             W2 = jax.lax.cond(drift, fresh_gram, lambda: W1)
             x = jax.lax.cond(drift, lambda: dual_solve(W2), lambda: x)
             refreshed = jnp.logical_or(refresh_due, drift)
@@ -156,8 +180,9 @@ class CurvatureCache:
         self.policy = policy
         self.state = policy.init()
 
-    def solve(self, S, v, damping):
-        x, self.state = self.policy.solve(S, v, damping, self.state)
+    def solve(self, S, v, damping, *, damping_state=None):
+        x, self.state = self.policy.solve(S, v, damping, self.state,
+                                          damping_state=damping_state)
         return x
 
     @property

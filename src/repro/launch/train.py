@@ -26,7 +26,8 @@ from repro.launch.shardings import (
 from repro.optim.scores import per_sample_score_blocks, per_sample_scores
 
 __all__ = ["make_train_step", "make_ngd_train_step", "jit_train_step",
-           "jit_ngd_train_step", "jit_prefill", "jit_serve_step"]
+           "jit_ngd_train_step", "jit_prefill", "jit_serve_step",
+           "make_score_grads", "jit_score_grads"]
 
 
 def _apply_updates(params, updates):
@@ -189,6 +190,48 @@ def jit_ngd_train_step(api, optimizer, mesh, *, param_specs, input_specs,
                  out_shardings=(pshard, oshard, None),
                  donate_argnums=(0, 1) if donate else ())
     return fn, (pshard, oshard, ishard)
+
+
+def make_score_grads(api, *, score_chunk=None, score_dtype=None, scale=None):
+    """Serve-path front half of the NGD step: one pass producing
+    ``(loss, v, rows)`` for a coalesced adaptation batch — the mean-
+    gradient RHS ``v`` (flat, ``ravel_pytree`` order) and the per-sample
+    score rows (n, m). No optimizer, no parameter update: the serving
+    loop owns both (the solve goes through ``repro.serve.SolveServer``
+    against the resident factorization, not through a fresh Gram).
+
+    ``scale``: row normalization override — pass 1/√n_window so request
+    rows can be folded into an n_window-sample curvature window.
+    """
+    from jax.flatten_util import ravel_pytree
+
+    from repro.optim.scores import per_sample_scores
+
+    def score_grads(params, batch):
+        (loss, _), grads = jax.value_and_grad(
+            api.loss, has_aux=True)(params, batch)
+        S = per_sample_scores(api.sample_logp, params, batch,
+                              chunk=score_chunk, dtype=score_dtype,
+                              scale=scale)
+        v, _ = ravel_pytree(grads)
+        return loss, v.astype(jnp.float32), S
+
+    return score_grads
+
+
+def jit_score_grads(api, mesh, *, param_specs, input_specs, fsdp="auto",
+                    score_chunk=None, score_dtype=None, scale=None):
+    """Returns (jitted_fn, (pshard, ishard)) — the jit wrapper the serving
+    subsystem uses for request adaptation batches (S laid out like the
+    NGD train step: samples replicated, parameter columns over MODEL)."""
+    step = make_score_grads(api, score_chunk=score_chunk,
+                            score_dtype=score_dtype, scale=scale)
+    pshard = param_shardings(param_specs, mesh, fsdp=fsdp)
+    ishard = input_shardings(input_specs, mesh)
+    sshard = NamedSharding(mesh, P(None, MODEL))
+    fn = jax.jit(step, in_shardings=(pshard, ishard),
+                 out_shardings=(None, None, sshard))
+    return fn, (pshard, ishard)
 
 
 def jit_prefill(api, mesh, *, param_specs, input_specs, fsdp="auto"):

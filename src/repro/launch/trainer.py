@@ -28,7 +28,7 @@ from repro.launch.supervisor import SupervisorConfig, run_supervised
 from repro.models.api import get_api
 from repro.optim import AdamW, NaturalGradient, warmup_cosine
 
-__all__ = ["train_main", "build_trainer"]
+__all__ = ["train_main", "build_trainer", "build_server", "ServeHandles"]
 
 
 def build_trainer(cfg, *, mesh, optimizer_name: str, lr: float,
@@ -36,7 +36,8 @@ def build_trainer(cfg, *, mesh, optimizer_name: str, lr: float,
                   solver: str = "chol", momentum: float = 0.9,
                   score_chunk=None, blocked: bool = False,
                   curvature: str = "exact", curvature_refresh: int = 10,
-                  curvature_drift_tol=None, seed: int = 0):
+                  curvature_drift_tol=None, curvature_drift_frac=None,
+                  seed: int = 0):
     """Returns (init_state, step_fn, save_state, restore_state, data).
 
     ``blocked``: NGD keeps S as per-layer BlockedScores blocks — no flat
@@ -46,8 +47,11 @@ def build_trainer(cfg, *, mesh, optimizer_name: str, lr: float,
     ``curvature``: "exact" re-solves the damped Fisher from scratch every
     step (the paper; unchanged default); "streaming" carries the n×n Gram
     across steps with a full refresh every ``curvature_refresh`` steps
-    (and on residual drift past ``curvature_drift_tol``, if set) — the
-    O(n²·m) pass is skipped on cache-hit steps."""
+    (and on residual drift past ``curvature_drift_tol`` — or, when
+    ``curvature_drift_frac`` is set instead, past the threshold autotuned
+    from the damping schedule's trust-region ratio; the static tol
+    overrides the autotune) — the O(n²·m) pass is skipped on cache-hit
+    steps."""
     api = get_api(cfg)
     data = SyntheticLM(cfg, batch=batch, seq=seq, seed=seed)
     sched = warmup_cosine(lr, warmup_steps=max(total_steps // 20, 1),
@@ -71,7 +75,8 @@ def build_trainer(cfg, *, mesh, optimizer_name: str, lr: float,
             from repro.curvature import StreamingCurvature
             policy = StreamingCurvature(batch,
                                         refresh_every=curvature_refresh,
-                                        drift_tol=curvature_drift_tol)
+                                        drift_tol=curvature_drift_tol,
+                                        drift_frac=curvature_drift_frac)
         else:
             policy = None
         opt = NaturalGradient(sched, damping=damping, solver=solver,
@@ -118,6 +123,107 @@ def build_trainer(cfg, *, mesh, optimizer_name: str, lr: float,
     return init_state, step_fn, save_state, restore_state, data
 
 
+class ServeHandles:
+    """Everything the serving loop needs besides the ``SolveServer``:
+    the model api, live params, the jitted score-grad step for adaptation
+    batches, a decoder factory over the serve steps, the data source
+    seeding synthetic traffic, and the parameter unravel for applying
+    flat natural-gradient updates."""
+
+    def __init__(self, *, api, params, data, score_grads, unravel, mesh):
+        self.api = api
+        self.params = params
+        self.data = data
+        self.score_grads = score_grads     # (params, batch) -> (loss, v, S)
+        self.unravel = unravel             # flat (m,) -> params-shaped tree
+        self.mesh = mesh
+        self._decoders = {}                # (b, plen, new) -> jitted step
+
+    def apply_update(self, x_flat, *, lr: float):
+        """θ ← θ − lr·x for a flat natural-gradient solve result."""
+        delta = self.unravel(jnp.asarray(x_flat))
+        self.params = jax.tree.map(
+            lambda p, d: (p - lr * d.astype(p.dtype)).astype(p.dtype),
+            self.params, delta)
+        return self.params
+
+    def decode(self, prompt, *, new_tokens: int):
+        """Prefill + greedy one-token decode of ``prompt`` (b, T) through
+        the jitted serve steps (``launch.train.jit_prefill`` /
+        ``jit_serve_step``); returns (b, new_tokens) generated ids."""
+        prompt = jnp.asarray(prompt, jnp.int32)
+        b, plen = prompt.shape
+        max_len = plen + new_tokens
+        logits, cache, _ = self.api.prefill(
+            self.params, {"tokens": prompt, "max_len": max_len})
+        ispecs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                  "cache": jax.eval_shape(lambda: cache),
+                  "cache_index": jax.ShapeDtypeStruct((), jnp.int32)}
+        key = (b, plen, new_tokens)
+        if key not in self._decoders:
+            self._decoders[key] = T.jit_serve_step(
+                self.api, self.mesh,
+                param_specs=jax.eval_shape(lambda: self.params),
+                input_specs=ispecs, donate=False)[0]
+        step = self._decoders[key]
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out = [tok]
+        for t in range(new_tokens - 1):
+            nxt, cache = step(self.params, cache, jnp.asarray(plen + t),
+                              out[-1])
+            out.append(nxt[:, None])
+        return jnp.concatenate(out, axis=1)
+
+
+def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
+                 max_tokens: int = 4096, max_requests: int = 8,
+                 refresh_every: int = 64, drift_tol=None, drift_frac=0.25,
+                 jitter: float = 0.0, score_chunk=None, policy: str = "cached",
+                 seed: int = 0):
+    """Config → mesh → model → resident curvature window → ``SolveServer``.
+
+    The serving twin of ``build_trainer``: builds the jitted serve steps
+    (prefill + one-token decode from ``launch.train``, plus the score-grad
+    pass for adaptation batches), seeds an n=``window`` sample score
+    window from synthetic data, factorizes it once, and wraps it in a
+    request-driven server with token-budget batching and the age/drift
+    online-adaptation policy. Returns ``(server, handles)``.
+    """
+    from jax.flatten_util import ravel_pytree
+
+    from repro.serve import (OnlineAdaptation, SolveServer,
+                             TokenBudgetBatcher, init_serve_state)
+
+    api = get_api(cfg)
+    data = SyntheticLM(cfg, batch=window, seq=seq, seed=seed)
+    params = api.init_params(jax.random.key(seed))
+    _, unravel = ravel_pytree(params)
+
+    sample = data.batch_at(0)
+    specs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), sample)
+    pspecs = api.param_specs()
+    # request rows carry the window's 1/√n normalization so folds are
+    # exchangeable with the seeded rows
+    jscore, _ = T.jit_score_grads(api, mesh, param_specs=pspecs,
+                                  input_specs=specs, score_chunk=score_chunk,
+                                  scale=1.0 / np.sqrt(window))
+
+    _, _, S0 = jscore(params, sample)
+    state = init_serve_state(S0, damping, jitter=jitter)
+    adaptation = OnlineAdaptation(refresh_every=refresh_every,
+                                  drift_tol=drift_tol, drift_frac=drift_frac,
+                                  jitter=jitter)
+    server = SolveServer(
+        state,
+        batcher=TokenBudgetBatcher(max_tokens=max_tokens,
+                                   max_requests=max_requests),
+        adaptation=adaptation, policy=policy, jitter=jitter)
+    handles = ServeHandles(api=api, params=params, data=data,
+                           score_grads=jscore, unravel=unravel, mesh=mesh)
+    return server, handles
+
+
 def train_main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=configs.list_archs(), required=True)
@@ -135,7 +241,12 @@ def train_main(argv=None):
                     help="streaming: full Gram refresh period (steps)")
     ap.add_argument("--curvature-drift-tol", type=float, default=None,
                     help="streaming: refresh when the solve's relative "
-                         "residual exceeds this")
+                         "residual exceeds this (static; overrides "
+                         "--curvature-drift-frac)")
+    ap.add_argument("--curvature-drift-frac", type=float, default=None,
+                    help="streaming: autotune the drift threshold as this "
+                         "fraction of the damping schedule's trust-region "
+                         "ratio (repro.core.auto_drift_tol)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -162,7 +273,8 @@ def train_main(argv=None):
         damping=args.damping, batch=args.batch, seq=args.seq,
         total_steps=args.steps, solver=args.solver, blocked=args.blocked,
         curvature=args.curvature, curvature_refresh=args.curvature_refresh,
-        curvature_drift_tol=args.curvature_drift_tol)
+        curvature_drift_tol=args.curvature_drift_tol,
+        curvature_drift_frac=args.curvature_drift_frac)
 
     losses = []
 

@@ -109,10 +109,14 @@ class NaturalGradient:
             else self.curvature.init(),
         )
 
-    def _nat_grad_tree(self, grads, scores, lam, cstate):
+    def _nat_grad_tree(self, grads, scores, damping: DampingState, cstate):
         """Solve (SᵀS+λI)x = v; returns (x as grads-shaped pytree, cstate')."""
+        lam = damping.lam
         if self.curvature is not None:
-            solve = lambda S, v, lam: self.curvature.solve(S, v, lam, cstate)
+            # the full DampingState rides along so a drift_frac policy can
+            # autotune its refresh threshold from the trust-region ratio
+            solve = lambda S, v, lam: self.curvature.solve(
+                S, v, lam, cstate, damping_state=damping)
         else:
             solve = lambda S, v, lam: (self.solver(S, v, lam), None)
         leaves, treedef = jax.tree_util.tree_flatten(grads)
@@ -140,7 +144,7 @@ class NaturalGradient:
 
         ``scores`` is S: dense (n, m) or a blocked operator whose block
         order matches the gradient pytree leaves."""
-        nat, cstate = self._nat_grad_tree(grads, scores, state.damping.lam,
+        nat, cstate = self._nat_grad_tree(grads, scores, state.damping,
                                           state.curvature)
 
         if self.clip is not None:

@@ -62,7 +62,7 @@ def _per_sample_grads(logp_fn: Callable, params, batch, *,
 def per_sample_score_blocks(logp_fn: Callable, params, batch, *,
                             chunk: Optional[int] = None,
                             center: bool = False,
-                            dtype=None) -> BlockedScores:
+                            dtype=None, scale=None) -> BlockedScores:
     """Blocked S: one (n, m_b) block per parameter leaf, never concatenated.
 
     Args:
@@ -71,6 +71,10 @@ def per_sample_score_blocks(logp_fn: Callable, params, batch, *,
       chunk: process the batch in sample-chunks of this size (must divide n).
       center: subtract the sample mean before scaling (SR mode, paper §3).
       dtype: storage dtype of the blocks (default: gradient dtype).
+      scale: per-row multiplier overriding the default 1/√n — serving uses
+        1/√n_window so that request rows folded into an n_window-sample
+        curvature window carry the window's normalization, not the
+        (smaller) request batch's.
     """
     G, n = _per_sample_grads(logp_fn, params, batch, chunk=chunk)
 
@@ -80,6 +84,8 @@ def per_sample_score_blocks(logp_fn: Callable, params, batch, *,
             b = b.astype(dtype)
         if center:
             b = b - jnp.mean(b, axis=0, keepdims=True)
+        if scale is not None:
+            return b * jnp.asarray(scale, b.dtype)
         return b / jnp.sqrt(n).astype(b.dtype)
 
     leaves, _ = jax.tree_util.tree_flatten(G)
@@ -91,19 +97,19 @@ def per_sample_score_blocks(logp_fn: Callable, params, batch, *,
 def lazy_score_blocks(logp_fn: Callable, params, batch, *,
                       chunk: Optional[int] = None,
                       center: bool = False,
-                      dtype=None) -> LazyBlockedScores:
+                      dtype=None, scale=None) -> LazyBlockedScores:
     """Deferred blocked S: the ``vmap(grad)`` pass runs on first contraction
     (and is cached), so handing the operator around costs nothing until a
     solver actually touches it."""
     return LazyBlockedScores(functools.partial(
         per_sample_score_blocks, logp_fn, params, batch,
-        chunk=chunk, center=center, dtype=dtype))
+        chunk=chunk, center=center, dtype=dtype, scale=scale))
 
 
 def per_sample_scores(logp_fn: Callable, params, batch, *,
                       chunk: Optional[int] = None,
                       center: bool = False,
-                      dtype=None) -> jax.Array:
+                      dtype=None, scale=None) -> jax.Array:
     """S (n, m): dense scaled (optionally centered) per-sample score matrix.
 
     One concat over the blocked representation — block order matches
@@ -112,7 +118,7 @@ def per_sample_scores(logp_fn: Callable, params, batch, *,
     blocked operator feeds every solver without this (n, m) buffer.
     """
     op = per_sample_score_blocks(logp_fn, params, batch, chunk=chunk,
-                                 center=center, dtype=dtype)
+                                 center=center, dtype=dtype, scale=scale)
     return op.to_dense()
 
 

@@ -1,0 +1,44 @@
+"""Online NGD serving subsystem — request-batched damped-Fisher solves
+against the resident curvature cache.
+
+The training stack already maintains the paper's factorization as an
+artifact (``repro.curvature``); this package turns it into a *service*:
+
+* ``batcher``  — token-budget coalescing of adaptation/decode requests
+  into solver-shaped microbatches (bucketed multi-RHS columns).
+* ``server``   — ``SolveServer``: dual solves against the resident
+  ``CholFactorization``; one factorization serves many requests, with
+  per-request λ through the batched multi-λ ``solve_batch`` path. No
+  Gram, no refactorization, on the request path.
+* ``adapt``    — ``OnlineAdaptation``: serving gradients fold into the
+  window via the rank-k ``replace_factors`` algebra; staleness bounded by
+  the same age/drift thresholds as the training-side ``CurvatureCache``
+  (drift threshold autotuned from the damping schedule by default).
+* ``state``    — ``ServeState``: the whole resident asset as one
+  checkpointable pytree (bit-identical solves across restarts).
+* ``main``     — ``serve_main``: the CLI serving loop (decode + online
+  natural-gradient fine-tuning), wired through ``launch.trainer
+  .build_server`` and the jitted serve steps in ``launch.train``.
+
+``benchmarks/serve.py`` gates the cached request path at ≥5× the
+refactorize-per-request baseline with p50/p99 latency tracking.
+"""
+from repro.serve.adapt import OnlineAdaptation
+from repro.serve.batcher import Microbatch, SolveRequest, TokenBudgetBatcher
+from repro.serve.server import ServerMetrics, SolveResult, SolveServer
+from repro.serve.state import (
+    ServeState,
+    ServeStats,
+    as_factorization,
+    init_serve_state,
+    restore_serve_state,
+    save_serve_state,
+    serve_mode,
+)
+
+__all__ = [
+    "OnlineAdaptation", "Microbatch", "SolveRequest", "TokenBudgetBatcher",
+    "ServerMetrics", "SolveResult", "SolveServer", "ServeState", "ServeStats",
+    "as_factorization", "init_serve_state", "restore_serve_state",
+    "save_serve_state", "serve_mode",
+]

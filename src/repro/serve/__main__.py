@@ -1,0 +1,3 @@
+from repro.serve.main import serve_main
+
+serve_main()

@@ -1,0 +1,159 @@
+"""Online adaptation — serving gradients folded into the resident window.
+
+Every adaptation request carries per-sample score rows of its examples
+(scaled by the window's 1/√n — see ``per_sample_scores(scale=...)``).
+After its solve completes, those rows enter the resident n-sample window
+FIFO, k oldest samples retiring per fold, through the sliding-sample-
+window algebra of ``repro.curvature.update``:
+
+    cols = S·rows†  (one O(n·m·k) pass — the *only* m-sized work)
+    X, Y, W' = replace_factors(W, cols, idx)          (2k×2k core split)
+    L' = chol_downdate(chol_update(L, X), Y)          (O(n²·k))
+    S'[idx] = rows
+
+so the factor tracks the fine-tuned weights at O(n·m·k) per fold — never
+the O(n²·m) Gram, never an O(n³) refactorization, on the request path.
+
+Staleness is bounded exactly like the training-side ``CurvatureCache``:
+``maybe_refresh`` (called by the server *between* microbatches) triggers
+a full refactorization when the factor's age exceeds ``refresh_every``
+microbatches or the last monitored solve residual exceeds the drift
+threshold — static ``drift_tol`` if set, else the ``drift_frac``
+autotune against the damping schedule (``repro.core.auto_drift_tol``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.damping import auto_drift_tol
+from repro.core.operator import BlockedScores, is_blocked
+from repro.core.solvers import chol_factorize
+from repro.curvature.update import chol_downdate, chol_update, replace_factors
+from repro.serve.state import ServeState, serve_mode
+
+__all__ = ["OnlineAdaptation"]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+def _ct(A, mode: str):
+    return A.conj().T if mode == "complex" else A.T
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _fold_window(S, W, L, slot, rows, *, mode):
+    """One FIFO fold: rows (k, m) dense or tuple of per-block (k, m_b)
+    pieces replace the k oldest window samples; returns (S', W', L',
+    slot'). Pure and jitted — the fold is request-path-adjacent work."""
+    n = W.shape[0]
+    blocked = isinstance(S, BlockedScores)
+    row_blocks = tuple(rows) if isinstance(rows, (tuple, list)) else (rows,)
+    k = row_blocks[0].shape[0]
+    idx = (slot + jnp.arange(k, dtype=jnp.int32)) % n
+
+    # new Gram columns W'[:, idx]: inner products of the post-replacement
+    # window with the incoming rows — old rows via one S·rows† pass, the
+    # replaced rows' own entries via the small rows·rows† corner.
+    S_blocks = S.blocks if blocked else (S,)
+    acc = jnp.promote_types(W.dtype, jnp.float32)
+    cols = sum(jnp.matmul(b.astype(acc), _ct(r.astype(acc), mode),
+                          precision=_HI)
+               for b, r in zip(S_blocks, row_blocks))            # (n, k)
+    corner = sum(jnp.matmul(r.astype(acc), _ct(r.astype(acc), mode),
+                            precision=_HI)
+                 for r in row_blocks)                            # (k, k)
+    cols = cols.at[idx, :].set(corner)
+
+    X, Y, Wp = replace_factors(W, cols, idx)
+    Lp = chol_downdate(chol_update(L, X), Y)
+    new_blocks = tuple(b.at[idx, :].set(r.astype(b.dtype))
+                       for b, r in zip(S_blocks, row_blocks))
+    Sp = BlockedScores(new_blocks, names=S.names) if blocked \
+        else new_blocks[0]
+    return Sp, Wp, Lp, (slot + k) % n
+
+
+class OnlineAdaptation:
+    """Bounded-staleness maintenance policy for the serving window.
+
+    Thresholds mirror ``repro.curvature.StreamingCurvature`` (age period +
+    drift bound, with the static ``drift_tol`` overriding the
+    ``drift_frac`` autotune); ``from_policy`` copies them from a training-
+    side policy so serving and training share one staleness contract.
+    """
+
+    def __init__(self, *, refresh_every: int = 64,
+                 drift_tol: Optional[float] = None,
+                 drift_frac: Optional[float] = 0.25,
+                 jitter: float = 0.0):
+        if refresh_every < 1:
+            raise ValueError("refresh_every must be >= 1")
+        self.refresh_every = int(refresh_every)
+        self.drift_tol = None if drift_tol is None else float(drift_tol)
+        self.drift_frac = None if drift_frac is None else float(drift_frac)
+        self.jitter = float(jitter)
+
+    @classmethod
+    def from_policy(cls, policy, *, jitter: Optional[float] = None
+                    ) -> "OnlineAdaptation":
+        """Adopt a ``StreamingCurvature`` policy's thresholds."""
+        return cls(refresh_every=policy.refresh_every,
+                   drift_tol=policy.drift_tol,
+                   drift_frac=getattr(policy, "drift_frac", None),
+                   jitter=policy.jitter if jitter is None else jitter)
+
+    def effective_drift_tol(self, damping_state=None):
+        if self.drift_tol is not None:
+            return jnp.asarray(self.drift_tol, jnp.float32)
+        if self.drift_frac is not None:
+            return auto_drift_tol(damping_state, frac=self.drift_frac)
+        return None
+
+    def fold(self, state: ServeState, rows) -> ServeState:
+        """Fold one request's score rows into the window (FIFO replace).
+
+        ``rows``: (k, m) dense — or a tuple of per-block (k, m_b) pieces
+        matching a blocked window. Requires k ≤ n (a single request never
+        displaces more than the whole window).
+        """
+        row_blocks = tuple(rows) if isinstance(rows, (tuple, list)) \
+            else (rows,)
+        k = int(row_blocks[0].shape[0])
+        n = int(state.W.shape[0])
+        if k > n:
+            raise ValueError(f"cannot fold {k} rows into an n={n} window")
+        if is_blocked(state.S) and len(row_blocks) != len(state.S.blocks):
+            raise ValueError(
+                f"{len(row_blocks)} row blocks for a "
+                f"{len(state.S.blocks)}-block window")
+        Sp, Wp, Lp, slot = _fold_window(
+            state.S, state.W, state.L, state.slot,
+            rows if isinstance(rows, (tuple, list)) else jnp.asarray(rows),
+            mode=serve_mode(state))
+        stats = state.stats._replace(
+            adapted=state.stats.adapted + jnp.asarray(k, jnp.int32))
+        return state._replace(S=Sp, W=Wp, L=Lp, slot=slot, stats=stats)
+
+    def maybe_refresh(self, state: ServeState, *, damping_state=None,
+                      force: bool = False) -> Tuple[ServeState, bool]:
+        """Full W refactorization when the staleness bound is hit — called
+        between microbatches, never on the request path. Returns
+        (state', refreshed)."""
+        tol = self.effective_drift_tol(damping_state)
+        r = float(state.stats.last_residual)
+        age_due = int(state.age) >= self.refresh_every
+        drift_due = tol is not None and r >= 0.0 and r > float(tol)
+        if not (force or age_due or drift_due):
+            return state, False
+        fac = chol_factorize(state.S, state.lam0, mode=serve_mode(state),
+                             jitter=self.jitter)
+        stats = state.stats._replace(
+            refreshes=state.stats.refreshes + 1,
+            last_residual=-jnp.ones((), jnp.float32))
+        return state._replace(W=fac.W, L=fac.L,
+                              age=jnp.zeros((), jnp.int32),
+                              stats=stats), True

@@ -1,0 +1,152 @@
+"""Token-budget request batcher — coalescing serve traffic for the solver.
+
+Incoming adaptation/decode requests each carry one right-hand side (a flat
+(m,) vector or per-layer blocked pieces), a per-request damping λ, and a
+token cost (e.g. the request's prompt length). The batcher coalesces them
+FIFO into microbatches whose stacked RHS is exactly the multi-RHS shape
+the dual solve consumes — ``V`` (m, k) dense, or a tuple of per-block
+(m_b, k) pieces when the resident S is a blocked operator — so one pass
+over S serves the whole microbatch (``CholFactorization.solve`` /
+``solve_batch``).
+
+Two admission limits bound a microbatch: ``max_tokens`` (the serving-loop
+budget — a microbatch closes before the next request would exceed it) and
+``max_requests`` (the solver-side RHS width). A single oversized request
+is still admitted alone — the budget shapes batches, it never starves.
+
+``bucket=True`` pads the stacked RHS with zero columns up to power-of-two
+widths (λ padding 1.0), so the jitted solve path compiles O(log
+max_requests) shapes instead of one per occupancy; pad columns are
+dropped when results are scattered back to requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Iterator, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SolveRequest", "Microbatch", "TokenBudgetBatcher"]
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One adaptation/decode request awaiting a damped-Fisher solve.
+
+    ``v``: the RHS — flat (m,) array or tuple of per-block (m_b,) pieces.
+    ``damping``: per-request λ (requests at the resident λ take the
+    resident-factor fast path; others go through the batched multi-λ
+    solve). ``tokens``: budget cost. ``rows``: optional per-sample score
+    rows of this request's examples ((k_ex, m) or per-block pieces) — the
+    online-adaptation loop folds them into the curvature window after the
+    solve. ``payload``: opaque caller data (e.g. prompt tokens to decode).
+    """
+    uid: int
+    v: Any
+    damping: float
+    tokens: int = 1
+    rows: Any = None
+    payload: Any = None
+    t_submit: float = 0.0       # stamped by the server for latency stats
+
+
+class Microbatch(NamedTuple):
+    """A coalesced solver batch: ``V`` holds one RHS column per request
+    (plus zero pad columns up to the bucket width), ``dampings`` the
+    per-column λ (pad columns get 1.0). ``requests[j]`` owns column j."""
+    requests: Tuple[SolveRequest, ...]
+    V: Any                      # (m, k_pad) or tuple of (m_b, k_pad)
+    dampings: jax.Array         # (k_pad,) float32
+    tokens: int
+
+    @property
+    def k(self) -> int:
+        return len(self.requests)
+
+
+def _bucket_width(k: int, cap: int) -> int:
+    """Smallest power of two ≥ k, clamped to cap."""
+    w = 1
+    while w < k:
+        w *= 2
+    return min(w, max(cap, k))
+
+
+def _stack_columns(vs: List[Any], pad_to: int):
+    """Stack per-request RHS (flat or blocked) into solver columns."""
+    def stack(cols):
+        V = jnp.stack([jnp.asarray(c).reshape(-1) for c in cols], axis=1)
+        if pad_to > V.shape[1]:
+            V = jnp.pad(V, ((0, 0), (0, pad_to - V.shape[1])))
+        return V
+
+    if isinstance(vs[0], (tuple, list)):
+        widths = tuple(len(v) for v in vs)
+        if len(set(widths)) != 1:
+            raise ValueError(f"blocked RHS block counts differ: {widths}")
+        return tuple(stack([v[b] for v in vs]) for b in range(widths[0]))
+    return stack(vs)
+
+
+class TokenBudgetBatcher:
+    """FIFO coalescing of solve requests under a token budget."""
+
+    def __init__(self, *, max_tokens: int = 4096, max_requests: int = 16,
+                 bucket: bool = True):
+        if max_tokens < 1 or max_requests < 1:
+            raise ValueError("max_tokens and max_requests must be >= 1")
+        self.max_tokens = int(max_tokens)
+        self.max_requests = int(max_requests)
+        self.bucket = bool(bucket)
+        self._queue: List[SolveRequest] = []
+        self._uid = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending_tokens(self) -> int:
+        return sum(r.tokens for r in self._queue)
+
+    def submit(self, v, *, damping: float, tokens: int = 1, rows=None,
+               payload=None, uid: Optional[int] = None) -> SolveRequest:
+        """Enqueue one request; returns the (uid-stamped) request object."""
+        req = SolveRequest(
+            uid=next(self._uid) if uid is None else uid, v=v,
+            damping=float(damping), tokens=max(int(tokens), 1),
+            rows=rows, payload=payload)
+        self._queue.append(req)
+        return req
+
+    def next_microbatch(self) -> Optional[Microbatch]:
+        """Coalesce the queue head into one microbatch (None when empty).
+
+        Admission is FIFO: requests join until the next one would blow the
+        token budget or the RHS width; the first request always fits.
+        """
+        if not self._queue:
+            return None
+        take, tokens = [], 0
+        while self._queue and len(take) < self.max_requests:
+            nxt = self._queue[0]
+            if take and tokens + nxt.tokens > self.max_tokens:
+                break
+            take.append(self._queue.pop(0))
+            tokens += nxt.tokens
+        k = len(take)
+        pad_to = _bucket_width(k, self.max_requests) if self.bucket else k
+        V = _stack_columns([r.v for r in take], pad_to)
+        lams = jnp.asarray(
+            [r.damping for r in take] + [1.0] * (pad_to - k), jnp.float32)
+        return Microbatch(requests=tuple(take), V=V, dampings=lams,
+                          tokens=tokens)
+
+    def drain(self) -> Iterator[Microbatch]:
+        """Yield microbatches until the queue is empty."""
+        while True:
+            mb = self.next_microbatch()
+            if mb is None:
+                return
+            yield mb

@@ -1,0 +1,171 @@
+"""``serve_main`` — the online NGD serving loop as a CLI.
+
+    PYTHONPATH=src python -m repro.serve --arch llama3.2-3b --smoke \
+        --requests 12 --window 8 --seq 16 --decode-tokens 4
+
+Synthetic request traffic drives the full serving path end to end: each
+request carries a handful of fine-tuning examples and a prompt. Per
+request the loop
+
+1. runs the jitted score-grad pass (``launch.train.jit_score_grads``) —
+   mean-gradient RHS v plus per-sample score rows for the window fold;
+2. submits v to the token-budget batcher with the request's λ;
+3. flushes coalesced microbatches through the ``SolveServer`` (resident
+   factor; no Gram on the request path), applies the natural-gradient
+   updates to the live params, and lets ``OnlineAdaptation`` fold the
+   rows / trigger age+drift refreshes (threshold autotuned from the
+   damping schedule via the Levenberg–Marquardt gain ratio);
+4. greedy-decodes the response through the jitted serve steps.
+
+``ServeState`` and the params checkpoint every ``--ckpt-every``
+microbatch rounds through ``repro.checkpoint`` (atomic, resumable).
+Prints p50/p99 solve latency, requests/sec and cache counters at exit.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.damping import DampingState, LevenbergMarquardtDamping
+from repro.launch.mesh import make_mesh
+from repro.launch.trainer import build_server
+
+__all__ = ["serve_main"]
+
+
+def serve_main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--arch", choices=configs.list_archs(),
+                    default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (CPU-runnable); on by default")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="synthetic requests to serve")
+    ap.add_argument("--window", type=int, default=8,
+                    help="resident curvature window size n (samples)")
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--adapt-examples", type=int, default=2,
+                    help="fine-tuning examples per request")
+    ap.add_argument("--decode-tokens", type=int, default=4,
+                    help="greedy tokens decoded per request (0: skip)")
+    ap.add_argument("--damping", type=float, default=1e-2,
+                    help="resident λ0; requests may deviate per-request")
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--max-tokens", type=int, default=64,
+                    help="batcher token budget per microbatch")
+    ap.add_argument("--max-requests", type=int, default=4,
+                    help="batcher RHS width cap per microbatch")
+    ap.add_argument("--burst", type=int, default=3,
+                    help="requests submitted before each flush (lets the "
+                         "batcher actually coalesce)")
+    ap.add_argument("--refresh-every", type=int, default=16,
+                    help="age bound: full refresh after this many "
+                         "microbatches")
+    ap.add_argument("--drift-tol", type=float, default=None,
+                    help="static drift bound (overrides --drift-frac)")
+    ap.add_argument("--drift-frac", type=float, default=0.25,
+                    help="autotuned drift bound fraction "
+                         "(repro.core.auto_drift_tol)")
+    ap.add_argument("--mesh-shape", default="1,1")
+    ap.add_argument("--ckpt-dir", default="artifacts/serve_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=8,
+                    help="checkpoint cadence in flush rounds (0: off)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_smoke(args.arch) if args.smoke \
+        else configs.get_config(args.arch)
+    shape = tuple(int(x) for x in args.mesh_shape.split(","))
+    axes = ("data", "model")[:len(shape)] if len(shape) <= 2 \
+        else ("pod", "data", "model")
+    mesh = make_mesh(shape, axes)
+
+    t0 = time.perf_counter()
+    server, h = build_server(
+        cfg, mesh=mesh, window=args.window, seq=args.seq,
+        damping=args.damping, max_tokens=args.max_tokens,
+        max_requests=args.max_requests, refresh_every=args.refresh_every,
+        drift_tol=args.drift_tol, drift_frac=args.drift_frac,
+        seed=args.seed)
+    print(f"resident window factorized: n={args.window} "
+          f"m={server.state.S.shape[1]} λ0={args.damping} "
+          f"({(time.perf_counter() - t0) * 1e3:.0f} ms)", flush=True)
+
+    lm = LevenbergMarquardtDamping(args.damping)
+    dstate: DampingState = lm.init()
+    rng = np.random.default_rng(args.seed)
+    losses, rounds = [], 0
+    pending = {}      # uid -> (v, loss_before, batch)
+
+    for r in range(args.requests):
+        # one synthetic request: adaptation examples + a prompt
+        full = h.data.batch_at(r + 1)
+        take = rng.choice(args.window, size=args.adapt_examples,
+                          replace=False)
+        ex = jax.tree.map(lambda x: x[np.sort(take)], full)
+        loss, v, rows = h.score_grads(h.params, ex)
+        # per-request λ: occasional requests ask for extra damping
+        lam = args.damping * (4.0 if r % 5 == 4 else 1.0)
+        uid = server.submit(v, damping=lam,
+                            tokens=args.adapt_examples * args.seq, rows=rows)
+        pending[uid] = (v, float(loss), ex)
+
+        if (r + 1) % args.burst and r != args.requests - 1:
+            continue
+        results = server.flush(damping_state=dstate)
+        for res in results:
+            v_req, loss_before, ex_req = pending.pop(res.uid)
+            h.apply_update(res.x, lr=args.lr)
+            # trust-region feedback for the drift autotune: actual vs
+            # predicted reduction of this request's adaptation loss
+            loss_after, _, _ = h.score_grads(h.params, ex_req)
+            predicted = args.lr * float(jnp.vdot(v_req, res.x).real)
+            dstate = lm.update(dstate,
+                               actual_reduction=loss_before
+                               - float(loss_after),
+                               predicted_reduction=max(predicted, 1e-30))
+            losses.append(loss_before)
+            if args.decode_tokens > 0:
+                prompt = jnp.asarray(ex_req["inputs"][:1, :args.seq])
+                gen = h.decode(prompt, new_tokens=args.decode_tokens)
+                ids = np.asarray(gen[0])
+                print(f"req {res.uid:3d} λ={res.damping:.3g} "
+                      f"loss {loss_before:8.4f} "
+                      f"solve {res.latency_s * 1e3:6.1f} ms "
+                      f"tokens {ids[:8].tolist()}", flush=True)
+        if results:
+            rounds += 1
+            if args.ckpt_every and rounds % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, rounds,
+                          {"serve": server.state, "params": h.params},
+                          metadata={"arch": cfg.name})
+
+    s = server.metrics.summary()
+    st = server.stats
+    print(f"served {s['served']} requests: "
+          f"p50 {s['p50_ms']:.1f} ms  p99 {s['p99_ms']:.1f} ms  "
+          f"{s['rps']:.1f} req/s  {s['tokens_per_s']:.0f} tok/s")
+    print(f"window: adapted {int(st.adapted)} rows, "
+          f"{int(st.refreshes)} full refreshes over "
+          f"{int(st.microbatches)} microbatches "
+          f"(drift tol now "
+          f"{float(server.adaptation.effective_drift_tol(dstate)):.3g}, "
+          f"λ now {float(dstate.lam):.3g})")
+    if args.ckpt_every and rounds:
+        ckpt.save(args.ckpt_dir, rounds,
+                  {"serve": server.state, "params": h.params},
+                  metadata={"arch": cfg.name})
+        print(f"checkpointed ServeState+params at round {rounds} "
+              f"-> {args.ckpt_dir}")
+    return server, losses
+
+
+if __name__ == "__main__":
+    serve_main()

@@ -1,0 +1,241 @@
+"""``SolveServer`` — request-driven damped-Fisher solves against the
+resident factorization.
+
+The request path costs two passes over S plus n-sized triangular work —
+never a Gram, never a refactorization:
+
+* microbatches whose requests all sit at the resident λ₀ reuse the
+  resident factor L directly (one multi-RHS ``CholFactorization.solve``);
+* mixed-λ microbatches go through ``solve_batch`` — per-column Cholesky
+  of the *cached* W (O(k·n³), no S pass) with the two S passes still
+  coalesced across the batch, the serving form of the ``with_damping``
+  multi-λ identity.
+
+Both paths run as one jitted function over the ``ServeState`` pytree
+(bucketed RHS widths keep the compile count at O(log max_requests)).
+``policy="refactorize"`` flips the same function to rebuild the Gram
+every microbatch — the per-request-refactorize baseline that
+``benchmarks/serve.py`` gates the cached path against.
+
+Between microbatches (off the request path) the server hands adaptation
+rows to ``OnlineAdaptation`` and lets its age/drift policy decide on a
+full refresh; per-request wall-clock latencies land in ``ServerMetrics``
+(p50/p99, requests/sec).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solvers import CholFactorization, chol_factorize
+from repro.serve.adapt import OnlineAdaptation
+from repro.serve.batcher import Microbatch, TokenBudgetBatcher
+from repro.serve.state import ServeState, as_factorization, serve_mode
+
+__all__ = ["SolveResult", "ServerMetrics", "SolveServer"]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+class SolveResult(NamedTuple):
+    uid: int
+    x: Any                     # (m,) flat or tuple of per-block pieces
+    damping: float
+    latency_s: float
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "jitter", "uniform", "monitor",
+                                    "refactorize"))
+def _coalesced_solve(S, W, L, lam0, V, lams, *, mode, jitter, uniform,
+                     monitor, refactorize):
+    """One microbatch: x_j = (SᵀS + λ_j I)⁻¹ v_j, plus the monitored
+    relative residual (−1 when off / not applicable)."""
+    if refactorize:
+        # the baseline: a fresh O(n²·m) Gram + O(n³) Cholesky per microbatch
+        fac = chol_factorize(S, lam0, mode=mode, jitter=jitter)
+    else:
+        fac = CholFactorization(S=S, mode=mode, W=W, L=L, lam=lam0,
+                                jitter=jitter, take_real_v=False,
+                                precision=_HI)
+    if uniform:
+        if monitor:
+            x, stats = fac.solve(V, return_stats=True)
+            return x, stats.residual_norm.astype(jnp.float32)
+        return fac.solve(V), -jnp.ones((), jnp.float32)
+    # mixed per-request λ: drift monitoring needs a single λ — skip it
+    return fac.solve_batch(V, lams, jitter=jitter), \
+        -jnp.ones((), jnp.float32)
+
+
+class ServerMetrics:
+    """Per-request wall-clock accounting (eager, python-side)."""
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self._records: List[tuple] = []     # (t_submit, t_done, tokens)
+
+    def record(self, t_submit: float, t_done: float, tokens: int) -> None:
+        self._records.append((t_submit, t_done, tokens))
+
+    @property
+    def served(self) -> int:
+        return len(self._records)
+
+    def latencies_s(self) -> np.ndarray:
+        return np.asarray([d - s for s, d, _ in self._records], np.float64)
+
+    def summary(self) -> dict:
+        """p50/p99 latency, requests/sec, tokens/sec over the recorded
+        window (first submit → last completion)."""
+        if not self._records:
+            return {"served": 0, "p50_ms": None, "p99_ms": None,
+                    "rps": None, "tokens_per_s": None}
+        lat = self.latencies_s()
+        t0 = min(s for s, _, _ in self._records)
+        t1 = max(d for _, d, _ in self._records)
+        span = max(t1 - t0, 1e-12)
+        tokens = sum(t for _, _, t in self._records)
+        return {"served": len(lat),
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "rps": len(lat) / span,
+                "tokens_per_s": tokens / span}
+
+
+class SolveServer:
+    """The serving front end: submit → coalesce → solve → adapt.
+
+    Args:
+      state: resident ``ServeState`` (see ``init_serve_state``).
+      batcher: request coalescing policy (default token-budget FIFO).
+      adaptation: optional ``OnlineAdaptation`` — requests carrying score
+        rows then fine-tune the window after their solve.
+      policy: "cached" (resident factor, the subsystem's point) or
+        "refactorize" (fresh Gram every microbatch — benchmark baseline).
+      monitor_drift: compute the cheap relative residual on uniform-λ
+        microbatches (feeds the drift-refresh threshold).
+      jitter: extra diagonal, as elsewhere.
+    """
+
+    def __init__(self, state: ServeState, *,
+                 batcher: Optional[TokenBudgetBatcher] = None,
+                 adaptation: Optional[OnlineAdaptation] = None,
+                 policy: str = "cached", monitor_drift: bool = True,
+                 jitter: float = 0.0, clock=time.perf_counter):
+        if policy not in ("cached", "refactorize"):
+            raise ValueError(f"policy must be 'cached' or 'refactorize', "
+                             f"got {policy!r}")
+        self.state = state
+        self.batcher = batcher if batcher is not None else TokenBudgetBatcher()
+        self.adaptation = adaptation
+        self.policy = policy
+        self.monitor_drift = bool(monitor_drift)
+        self.jitter = float(jitter)
+        self.clock = clock
+        self.metrics = ServerMetrics()
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, v, *, damping: Optional[float] = None, tokens: int = 1,
+               rows=None, payload=None) -> int:
+        """Enqueue one request; returns its uid. ``damping=None`` means
+        the resident λ₀ (the fast path)."""
+        lam = float(self.state.lam0) if damping is None else float(damping)
+        req = self.batcher.submit(v, damping=lam, tokens=tokens, rows=rows,
+                                  payload=payload)
+        req.t_submit = self.clock()
+        return req.uid
+
+    def solve_one(self, v, *, damping: Optional[float] = None, tokens: int = 1,
+                  rows=None):
+        """Convenience: submit + flush a single request, return its x.
+
+        Only valid on an empty queue — flushing would also solve any
+        pending requests, whose results this method has no way to hand
+        back; use ``submit``/``flush`` for real traffic.
+        """
+        if len(self.batcher):
+            raise RuntimeError(
+                f"solve_one with {len(self.batcher)} request(s) pending "
+                "would drop their results; use submit() + flush()")
+        uid = self.submit(v, damping=damping, tokens=tokens, rows=rows)
+        (res,) = [r for r in self.flush() if r.uid == uid]
+        return res.x
+
+    # -- the serve loop ----------------------------------------------------
+    def flush(self, *, damping_state=None) -> List[SolveResult]:
+        """Drain the batcher: solve every pending microbatch, fold each
+        request's adaptation rows, and let the staleness policy decide on
+        a refresh between microbatches. Returns results FIFO."""
+        out: List[SolveResult] = []
+        for mb in self.batcher.drain():
+            out.extend(self._serve(mb))
+            if self.adaptation is not None:
+                for req in mb.requests:
+                    if req.rows is not None:
+                        self.state = self.adaptation.fold(self.state,
+                                                          req.rows)
+                self.state, _ = self.adaptation.maybe_refresh(
+                    self.state, damping_state=damping_state)
+        return out
+
+    def _serve(self, mb: Microbatch) -> List[SolveResult]:
+        st = self.state
+        lam0 = float(st.lam0)
+        uniform = all(r.damping == lam0 for r in mb.requests)
+        x, resid = _coalesced_solve(
+            st.S, st.W, st.L, st.lam0, mb.V, mb.dampings,
+            mode=serve_mode(st), jitter=self.jitter, uniform=uniform,
+            monitor=self.monitor_drift and self.policy == "cached",
+            refactorize=self.policy == "refactorize")
+        jax.block_until_ready(x)
+        t_done = self.clock()
+
+        k = mb.k
+        stats = st.stats._replace(
+            served=st.stats.served + jnp.asarray(k, jnp.int32),
+            microbatches=st.stats.microbatches + 1,
+            last_residual=jnp.where(resid >= 0, resid,
+                                    st.stats.last_residual))
+        self.state = st._replace(age=st.age + 1, stats=stats)
+
+        results = []
+        for j, req in enumerate(mb.requests):
+            xj = tuple(xb[:, j] for xb in x) if isinstance(x, (tuple, list)) \
+                else x[:, j]
+            self.metrics.record(req.t_submit, t_done, req.tokens)
+            results.append(SolveResult(uid=req.uid, x=xj,
+                                       damping=req.damping,
+                                       latency_s=t_done - req.t_submit))
+        return results
+
+    # -- maintenance -------------------------------------------------------
+    def refresh(self) -> None:
+        """Force a full refactorization now (ops hook; not request-path)."""
+        if self.adaptation is not None:
+            self.state, _ = self.adaptation.maybe_refresh(self.state,
+                                                          force=True)
+        else:
+            fac = chol_factorize(self.state.S, self.state.lam0,
+                                 mode=serve_mode(self.state),
+                                 jitter=self.jitter)
+            self.state = self.state._replace(
+                W=fac.W, L=fac.L, age=jnp.zeros((), jnp.int32),
+                stats=self.state.stats._replace(
+                    refreshes=self.state.stats.refreshes + 1))
+
+    @property
+    def factorization(self) -> CholFactorization:
+        """The resident factorization, as a first-class solver object."""
+        return as_factorization(self.state, jitter=self.jitter)
+
+    @property
+    def stats(self):
+        return self.state.stats

@@ -1,0 +1,108 @@
+"""``ServeState`` — the serving subsystem's resident, checkpointable asset.
+
+What a serving process keeps warm between requests is exactly the paper's
+factorization, held open: the n-sample score window S, its undamped Gram
+W, and the Cholesky factor L of W + (λ₀+jitter)Ĩ at the resident damping.
+All of it is a flat NamedTuple pytree of arrays, so it jits, shards (see
+``launch/shardings.py`` — replicated, like the training-side
+``CurvatureState``), and round-trips through ``repro.checkpoint`` bit-
+identically: a restarted server resumes with the same factor and produces
+the same solves.
+
+The request path reads this state (``SolveServer``); the online-adaptation
+loop advances it by rank-k window algebra (``OnlineAdaptation``); nothing
+on the request path ever rebuilds W from scratch.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operator import is_blocked
+from repro.core.solvers import CholFactorization, chol_factorize
+
+__all__ = ["ServeStats", "ServeState", "init_serve_state", "serve_mode",
+           "as_factorization", "save_serve_state", "restore_serve_state"]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+class ServeStats(NamedTuple):
+    """Counters carried with the state (and therefore checkpointed)."""
+    served: jax.Array          # requests completed
+    microbatches: jax.Array    # coalesced solves executed
+    adapted: jax.Array         # sample rows folded into the window
+    refreshes: jax.Array       # full W refactorizations
+    last_residual: jax.Array   # last monitored relative residual (−1: none)
+
+
+class ServeState(NamedTuple):
+    """The resident curvature window + factorization (a pytree).
+
+    ``S``: the (n, m) sample-score window — dense array or a
+    ``BlockedScores`` operator (itself a registered pytree).
+    ``W``: undamped Gram of S. ``L``: chol(W + (lam0+jitter)Ĩ) — the
+    resident factor at the server's base damping ``lam0``. ``slot``: next
+    FIFO window row the adaptation loop will replace. ``age``:
+    microbatches since the last full refresh.
+    """
+    S: Any
+    W: jax.Array
+    L: jax.Array
+    lam0: jax.Array
+    slot: jax.Array
+    age: jax.Array
+    stats: ServeStats
+
+
+def _zero_stats() -> ServeStats:
+    z = jnp.zeros((), jnp.int32)
+    return ServeStats(served=z, microbatches=z, adapted=z, refreshes=z,
+                      last_residual=-jnp.ones((), jnp.float32))
+
+
+def init_serve_state(S, damping, *, jitter: float = 0.0,
+                     mode: str = "auto") -> ServeState:
+    """Build the resident state: one O(n²·m) Gram pass + O(n³) Cholesky —
+    the only time the serving subsystem ever pays them up front."""
+    fac = chol_factorize(S, damping, mode=mode, jitter=jitter)
+    return ServeState(S=fac.S, W=fac.W, L=fac.L, lam0=fac.lam,
+                      slot=jnp.zeros((), jnp.int32),
+                      age=jnp.zeros((), jnp.int32),
+                      stats=_zero_stats())
+
+
+def serve_mode(state: ServeState) -> str:
+    """The resolved solver mode of the resident window (realification
+    happened at ``init_serve_state``; only real/complex remain)."""
+    return "complex" if jnp.issubdtype(state.S.dtype, jnp.complexfloating) \
+        else "real"
+
+
+def as_factorization(state: ServeState, *, jitter: float = 0.0,
+                     precision=_HI) -> CholFactorization:
+    """View the resident state as a ``CholFactorization`` — every solver
+    affordance (multi-RHS ``solve``, ``with_damping``, ``solve_batch``,
+    rank-k ``update``/``downdate``) then applies to the serving window."""
+    return CholFactorization(S=state.S, mode=serve_mode(state), W=state.W,
+                             L=state.L, lam=state.lam0, jitter=jitter,
+                             take_real_v=False, precision=precision)
+
+
+def save_serve_state(ckpt_dir, step: int, state: ServeState, *,
+                     metadata: Optional[dict] = None, keep: int = 3):
+    """Checkpoint the state (atomic, keep-last-k — see repro.checkpoint)."""
+    from repro.checkpoint import checkpoint as ckpt
+    meta = {"kind": "serve_state",
+            "blocked": bool(is_blocked(state.S)),
+            **(metadata or {})}
+    return ckpt.save(ckpt_dir, step, state, metadata=meta, keep=keep)
+
+
+def restore_serve_state(ckpt_dir, step: int, like: ServeState):
+    """Restore into the structure of ``like`` (e.g. a freshly initialized
+    state of the same shapes). Returns (state, metadata)."""
+    from repro.checkpoint import checkpoint as ckpt
+    return ckpt.restore(ckpt_dir, step, like)

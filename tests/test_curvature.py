@@ -278,6 +278,43 @@ def test_cache_drift_triggers_refresh():
     assert float(cache.stats.last_residual) > 0.5
 
 
+def test_cache_drift_frac_autotunes_from_damping_state():
+    """drift_frac derives the threshold from the trust-region ratio: a
+    poor ratio tightens it (refresh fires), a good ratio relaxes it (hit
+    survives); a static drift_tol overrides the autotune."""
+    from repro.core import DampingState
+
+    n, m, lam = 16, 400, 0.5
+    S, v = _mk(n=n, m=m, seed=4)
+    S = S / jnp.sqrt(jnp.asarray(m, jnp.float32))   # ‖W‖ ~ O(1) vs λ
+    # consecutive-batch-overlap perturbation: residual lands between the
+    # autotune's floor (1e-3, the tight/bad-ratio tol) and a relaxed 0.9
+    S2 = S + (0.1 / np.sqrt(m)) * jnp.asarray(
+        np.random.default_rng(1).normal(size=(n, m)), jnp.float32)
+    good = DampingState(jnp.float32(lam), jnp.float32(1.0))   # tol = 0.9
+    bad = DampingState(jnp.float32(lam), jnp.float32(1e-3))   # tol = floor
+
+    cache = CurvatureCache(StreamingCurvature(n, refresh_every=1000,
+                                              drift_frac=0.9))
+    cache.solve(S, v, lam, damping_state=good)
+    cache.solve(S2, v, lam, damping_state=good)     # residual < 0.9 → hit
+    assert int(cache.stats.hits) == 1
+    cache.reset()
+    cache.solve(S, v, lam, damping_state=bad)
+    x = cache.solve(S2, v, lam, damping_state=bad)  # tight tol → refresh
+    assert int(cache.stats.refreshes) == 2
+    np.testing.assert_allclose(np.asarray(x),
+                               np.asarray(chol_solve(S2, v, lam)),
+                               rtol=1e-4, atol=1e-4)
+
+    static = CurvatureCache(StreamingCurvature(n, refresh_every=1000,
+                                               drift_tol=10.0,
+                                               drift_frac=1e-6))
+    static.solve(S, v, lam, damping_state=bad)
+    static.solve(S2, v, lam, damping_state=bad)     # static 10.0 wins → hit
+    assert int(static.stats.hits) == 1
+
+
 def test_cache_stale_hit_is_bounded_approximation():
     """Between refreshes the solve uses a stale W with the *current* S —
     the residual quantifies the drift and must stay finite/small for
