@@ -97,6 +97,13 @@ def main(argv=None) -> None:
     serve.run(emit=emit, assert_speedup=not tiny, **sv)
     serve_rows += rows
 
+    from benchmarks import serve_dist
+    rows, emit = _collector({"section": "serve_dist", **sv})
+    # same dispatch-floor policy: the async >= 1x eager req/s gate runs
+    # at the real shape only; tiny rows are still trend-guarded.
+    serve_dist.run(emit=emit, assert_ratio=not tiny, **sv)
+    serve_rows += rows
+
     from benchmarks import roofline
     rows, emit = _collector({"section": "roofline"})
     roofline.run(emit=emit)

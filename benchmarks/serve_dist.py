@@ -1,0 +1,166 @@
+"""Distributed serving benchmark: async (sharded) vs eager replicated.
+
+The dist subsystem's claim, measured end to end on identical request
+traces: the ``AsyncSolveServer`` — request-queue thread coalescing while
+the device executes the previous solve, window sharded over the mesh when
+more than one device is up — must sustain at least the eager replicated
+``SolveServer``'s requests/sec at the real m ≫ n shape, **and** return
+the same answers (≤5e-3 vs the eager responses, the same bound
+``benchmarks/serve.py`` gates the cached path with; online-adaptation
+folds included, so the *sharded* rank-k-maintained factor is what is
+being checked).
+
+Tiny CI shapes sit at the dispatch floor, where thread hand-off overhead
+is comparable to the solve itself — there the comparison is report-only
+(same policy as ``serve.py``'s 5× gate) but the rows still land in
+``BENCH_serve.json`` so ``trend.py`` guards them across runs.
+
+    PYTHONPATH=src:. python benchmarks/serve_dist.py [--tiny] [--json]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _mk_trace(n, m, requests, adapt_k, seed=0):
+    rng = np.random.default_rng(seed)
+    S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    vs = [jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+          for _ in range(requests)]
+    adapt_rows = [jnp.asarray(rng.normal(size=(adapt_k, m)) / np.sqrt(m),
+                              jnp.float32) for _ in range(4)]
+    return S, vs, adapt_rows
+
+
+def _drive(server, vs, *, adapt_every, adapt_rows, warmup):
+    """Warm the solve (full bucket width) and the fold path — each server
+    flavour compiles its own fold, and an unwarmed one would smear a
+    one-time compile across the measured span — then reset metrics and
+    stream the trace: submit everything (the async worker overlaps from
+    the first submit), flush once, return {i: x}."""
+    for i, v in enumerate(vs[:warmup]):
+        server.submit(v, rows=adapt_rows[0] if i == 0 and adapt_every
+                      else None)
+    server.flush()
+    server.metrics.reset()
+
+    submitted = {}
+    for i, v in enumerate(vs):
+        rows = None
+        if adapt_every and i % adapt_every == adapt_every - 1:
+            rows = adapt_rows[(i // adapt_every) % len(adapt_rows)]
+        submitted[server.submit(v, rows=rows)] = i
+    return {submitted[r.uid]: r.x for r in server.flush()}
+
+
+def run(emit=print, n=512, m=25_000, requests=48, k=8, damping=1e-2,
+        adapt_every=6, adapt_k=4, min_ratio=1.0, assert_ratio=True,
+        seed=0):
+    from repro.dist import AsyncSolveServer, DistSpec, init_sharded_serve_state
+    from repro.launch.mesh import make_mesh
+    from repro.serve import (OnlineAdaptation, SolveServer,
+                             TokenBudgetBatcher, init_serve_state)
+
+    S, vs, adapt_rows = _mk_trace(n, m, requests, adapt_k, seed)
+    devices = jax.device_count()
+    sharded = devices > 1 and m % devices == 0
+
+    def batcher():
+        return TokenBudgetBatcher(max_tokens=2 ** 30, max_requests=k)
+
+    def adaptation():
+        return OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
+                                drift_frac=None)
+
+    # -- eager replicated baseline (the PR-3 server) ----------------------
+    eager = SolveServer(init_serve_state(S, damping), batcher=batcher(),
+                        adaptation=adaptation(), monitor_drift=False)
+    x_eager = _drive(eager, vs, adapt_every=adapt_every,
+                     adapt_rows=adapt_rows, warmup=k)
+    se = eager.metrics.summary()
+
+    # -- async (sharded when the mesh has devices to shard over) ----------
+    if sharded:
+        mesh = make_mesh((devices,), ("model",))
+        state = init_sharded_serve_state(
+            S, damping, spec=DistSpec(mesh, "1d"))
+        kind = f"sharded 1d x{devices}"
+    else:
+        state = init_serve_state(S, damping)
+        kind = "replicated"
+    asrv = AsyncSolveServer(state, batcher=batcher(),
+                            adaptation=adaptation(), monitor_drift=False)
+    try:
+        x_async = _drive(asrv, vs, adapt_every=adapt_every,
+                         adapt_rows=adapt_rows, warmup=k)
+        sa = asrv.metrics.summary()
+    finally:
+        asrv.shutdown()
+
+    max_rel_err = max(
+        float(jnp.linalg.norm(jnp.asarray(x_async[i]) - jnp.asarray(x_eager[i]))
+              / jnp.linalg.norm(jnp.asarray(x_eager[i])))
+        for i in range(requests))
+    ratio = sa["rps"] / se["rps"]
+    ok = ratio >= min_ratio
+
+    emit(f"serve_dist/eager_replicated_n{n}_m{m},{se['p50_ms'] * 1e3:.0f},"
+         f"{se['rps']:.1f} req/s (p99={se['p99_ms'] * 1e3:.0f}us)")
+    emit(f"serve_dist/async_n{n}_m{m},{sa['p50_ms'] * 1e3:.0f},"
+         f"{sa['rps']:.1f} req/s (p99={sa['p99_ms'] * 1e3:.0f}us, {kind})")
+    emit(f"serve_dist/async_vs_eager,,"
+         f"{ratio:.2f}x req/s ({'OK' if ok else 'NOT'} >= {min_ratio:g}; "
+         f"{kind})")
+    emit(f"serve_dist/equivalence_max_rel_err,,{max_rel_err:.2e} over "
+         f"{requests} requests ({int(asrv.stats.adapted)} rows folded)")
+
+    assert max_rel_err < 5e-3, (
+        f"async path drifted from the eager replicated server: "
+        f"max rel err {max_rel_err}")
+    if assert_ratio:
+        assert ok, (
+            f"async serving must sustain >= {min_ratio:g}x the eager "
+            f"replicated req/s at the real shape: got {ratio:.2f}x "
+            f"({sa['rps']:.1f} vs {se['rps']:.1f} req/s)")
+    return {"n": n, "m": m, "requests": requests, "k": k, "kind": kind,
+            "eager_rps": se["rps"], "async_rps": sa["rps"],
+            "rps_ratio": ratio, "equivalence_max_rel_err": max_rel_err,
+            "ratio_ok": bool(ok)}
+
+
+def main(argv=None):
+    import sys
+    argv = sys.argv[1:] if argv is None else argv
+    tiny = "--tiny" in argv
+    as_json = "--json" in argv
+    shapes = dict(n=64, m=2_000, requests=24, k=4) if tiny \
+        else dict(n=512, m=25_000, requests=48, k=8)
+
+    rows = []
+
+    def emit(line):
+        print(line)
+        parts = line.split(",", 2)
+        rows.append({"name": parts[0],
+                     "us_per_call": float(parts[1]) if len(parts) > 1
+                     and parts[1] else None,
+                     "derived": parts[2] if len(parts) > 2 else "",
+                     "config": {"section": "serve_dist", "tiny": tiny,
+                                **shapes},
+                     "peak_mem_bytes": None})
+
+    # tiny shapes sit at the thread-dispatch floor; the >=1x req/s gate
+    # runs at the real m >> n shape only (same policy as serve.py)
+    summary = run(emit=emit, assert_ratio=not tiny, **shapes)
+    if as_json:
+        import json
+        with open("BENCH_serve_dist.json", "w") as fh:
+            json.dump(rows, fh, indent=1)
+        print(f"# wrote BENCH_serve_dist.json ({len(rows)} rows)")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -28,20 +28,7 @@ import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:  # jax >= 0.6: top-level export, replication check kwarg is `check_vma`
-    from jax import shard_map as _shard_map_impl
-    _CHECK_KW = "check_vma"
-except ImportError:  # jax 0.4.x: experimental module, kwarg is `check_rep`
-    from jax.experimental.shard_map import shard_map as _shard_map_impl
-    _CHECK_KW = "check_rep"
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    """Version-compatible shard_map with replication checking disabled
-    (the Gram psum deliberately produces replicated outputs from sharded
-    inputs, which the strict checker rejects on some jax versions)."""
-    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, **{_CHECK_KW: False})
+from repro.core.shard_compat import shard_map_compat as _shard_map
 
 __all__ = [
     "sharded_chol_solve",

@@ -1,0 +1,51 @@
+"""Sharded curvature service — the resident factorization as a
+*distributed* asset, served concurrently.
+
+``repro.serve`` keeps the damped-Fisher factorization warm on one device;
+this package lays the same asset out on a mesh and puts a concurrent
+front end on it:
+
+* ``cholupdate`` — distributed rank-k factor maintenance: per-slab Gram
+  cross columns psum'd into the replicated ``replace_factors`` core, the
+  composed update on the replicated factor (plus a ring-of-rank-1-sweeps
+  variant of ``chol_update``/``chol_downdate`` with the update columns
+  themselves sharded), and a per-slab full refresh — for the 1d, 2d, and
+  blocked layouts of ``core.distributed.make_sharded_solver``.
+* ``state``      — ``DistSpec`` (mesh + layout contract) and
+  ``ShardedServeState``: window sharded, factor + FIFO metadata
+  replicated, same checkpoint round-trip guarantees as ``ServeState``.
+* ``server``     — ``AsyncSolveServer``: thread-safe submits, a worker
+  thread that coalesces while the device executes the previous solve
+  (``block_until_ready`` only at the response boundary), and a
+  per-microbatch dispatcher routing uniform-λ batches to the sharded
+  resident-L path and mixed-λ batches to a sharded ``solve_batch``.
+
+``launch.trainer.build_server(mesh=..., layout=..., async_=True)`` and
+``python -m repro.serve --mesh 1d|2d --async`` wire it end to end;
+``benchmarks/serve_dist.py`` gates the async sharded path against the
+eager replicated one.
+"""
+from repro.dist.cholupdate import (
+    make_sharded_fold,
+    make_sharded_refresh,
+    sharded_chol_downdate,
+    sharded_chol_update,
+    sharded_window_cols,
+)
+from repro.dist.server import AsyncSolveServer, make_sharded_coalesced_solve
+from repro.dist.state import (
+    DistSpec,
+    ShardedServeState,
+    init_sharded_serve_state,
+    place_serve_state,
+    restore_sharded_serve_state,
+    save_sharded_serve_state,
+)
+
+__all__ = [
+    "AsyncSolveServer", "DistSpec", "ShardedServeState",
+    "init_sharded_serve_state", "make_sharded_coalesced_solve",
+    "make_sharded_fold", "make_sharded_refresh", "place_serve_state",
+    "restore_sharded_serve_state", "save_sharded_serve_state",
+    "sharded_chol_downdate", "sharded_chol_update", "sharded_window_cols",
+]

@@ -1,0 +1,324 @@
+"""Distributed rank-k Cholesky update — the streaming window under shard_map.
+
+The replicated window algebra (``repro.curvature.update``) splits every
+maintenance operation into two very different kinds of work:
+
+* **m-sized passes over the score window S** — the new Gram cross columns
+  ``cols = S·rows†`` of a sliding-window fold (and the ``W_cross`` input
+  of ``chol_append``). This is the only O(n·m·k) work, and S is exactly
+  the array ``make_sharded_solver`` lays out over the mesh (1d: params on
+  the model axis; 2d: samples×params; blocked: per-layer column slabs).
+* **n-sized factor algebra** — ``replace_factors``' 2k×2k core split and
+  the rank-k ``chol_update``/``chol_downdate`` themselves. O(n²·k), tiny
+  next to the S passes in the paper's m ≫ n regime.
+
+This module keeps the factor replicated (like the tiny Cholesky in
+``core.distributed``) and distributes the S-sized work: per-slab partial
+products are psum'd into replicated cross columns, the replicated core
+split and factor update run identically on every device, and the new rows
+scatter into each device's local slab — all inside one shard_map program,
+so a fold is one dispatch with two small collectives (one psum of n·k,
+one of k²; plus a sample-axis all-gather in the 2d layout).
+
+For the rank-k update itself two distributed variants are provided,
+mirroring the two replicated methods:
+
+* ``method="composed"`` — update columns X column-sharded over the model
+  axis; each slab solves ``P_loc = L⁻¹X_loc`` and the n×n core
+  ``P·P† = Σ_slabs P_loc·P_loc†`` is one psum, followed by the replicated
+  ``L·chol(Ĩ ± P·P†)``.
+* ``method="rotations"`` — a ring of rank-1 sweeps (the LINPACK path):
+  the factor stays put while the column slabs rotate via ppermute; after
+  ``axis_size`` hops every device has swept every column. Devices apply
+  the slabs in different cyclic orders, but the Cholesky factor with a
+  positive diagonal is unique, so they agree to fp rounding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.operator import BlockedScores, LazyBlockedScores
+from repro.core.shard_compat import shard_map_compat
+from repro.curvature.update import chol_downdate, chol_update, replace_factors
+
+__all__ = [
+    "sharded_chol_update",
+    "sharded_chol_downdate",
+    "sharded_window_cols",
+    "make_sharded_fold",
+    "make_sharded_refresh",
+]
+
+_HI = jax.lax.Precision.HIGHEST
+
+LAYOUTS = ("1d", "2d", "blocked")
+
+
+def _ct(A: jax.Array, mode: str) -> jax.Array:
+    return A.conj().T if mode == "complex" else A.T
+
+
+def _check_layout(layout: str) -> None:
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; have {LAYOUTS}")
+
+
+# ---------------------------------------------------------------------------
+# rank-k update/downdate with the update columns themselves sharded
+# ---------------------------------------------------------------------------
+
+def _composed_local(L, X_loc, *, sign: int, axis: str):
+    """Per-slab composed update: core = psum of local P·P† (the only
+    collective), then the replicated level-3 refresh."""
+    n = L.shape[0]
+    complex_ = jnp.issubdtype(L.dtype, jnp.complexfloating)
+    Pl = solve_triangular(L, X_loc, lower=True)              # (n, k_loc)
+    PPt = jnp.matmul(Pl, Pl.conj().T if complex_ else Pl.T, precision=_HI)
+    core = jax.lax.psum(PPt, axis)
+    M = jnp.eye(n, dtype=L.dtype) + sign * core
+    return jnp.matmul(L, jnp.linalg.cholesky(M), precision=_HI)
+
+
+def _ring_local(L, X_loc, *, sign: int, axis: str, axis_size: int,
+                eps: float):
+    """Ring of rank-1 sweeps: each device sweeps its resident slab into
+    the factor, then passes the slab to its ring neighbour; after
+    ``axis_size`` hops every column has been applied everywhere."""
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    apply_ = chol_update if sign > 0 else chol_downdate
+
+    def hop(carry, _):
+        L, X = carry
+        L = apply_(L, X, eps=eps, method="rotations")
+        X = jax.lax.ppermute(X, axis, perm)
+        return (L, X), None
+
+    (L, _), _ = jax.lax.scan(hop, (L, X_loc), None, length=axis_size)
+    return L
+
+
+def _sharded_rank_k(L, X, *, mesh: Mesh, model_axis: str, method: str,
+                    sign: int, eps: float):
+    L, X = jnp.asarray(L), jnp.asarray(X)
+    if X.ndim == 1:
+        X = X[:, None]
+    dtype = jnp.promote_types(jnp.promote_types(L.dtype, X.dtype),
+                              jnp.float32)
+    L, X = L.astype(dtype), X.astype(dtype)
+    size = mesh.shape[model_axis]
+    pad = (-X.shape[1]) % size
+    if pad:                     # zero columns are exact no-ops in both methods
+        X = jnp.pad(X, ((0, 0), (0, pad)))
+    if method == "composed":
+        body = functools.partial(_composed_local, sign=sign, axis=model_axis)
+    elif method == "rotations":
+        body = functools.partial(_ring_local, sign=sign, axis=model_axis,
+                                 axis_size=size, eps=eps)
+    else:
+        raise ValueError(f"method must be 'composed' or 'rotations', "
+                         f"got {method!r}")
+    fn = shard_map_compat(body, mesh=mesh,
+                          in_specs=(P(), P(None, model_axis)),
+                          out_specs=P())
+    return fn(L, X)
+
+
+def sharded_chol_update(L, X, *, mesh: Mesh, model_axis: str = "model",
+                        method: str = "composed", eps: float = 1e-30):
+    """L' = chol(L·L† + X·X†) with X (n, k) column-sharded over
+    ``model_axis``; L replicated in and out."""
+    return _sharded_rank_k(L, X, mesh=mesh, model_axis=model_axis,
+                           method=method, sign=+1, eps=eps)
+
+
+def sharded_chol_downdate(L, X, *, mesh: Mesh, model_axis: str = "model",
+                          method: str = "composed", eps: float = 1e-30):
+    """L' = chol(L·L† − X·X†), sharded like ``sharded_chol_update``."""
+    return _sharded_rank_k(L, X, mesh=mesh, model_axis=model_axis,
+                           method=method, sign=-1, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# the m-sized pass: Gram cross columns of incoming rows, per slab
+# ---------------------------------------------------------------------------
+
+def _cols_local(S_blocks, rows_blocks, *, sum_axes, mode: str):
+    """cols = S·rows† and corner = rows·rows†, accumulated over the local
+    slab of every block, then one psum each."""
+    acc = jnp.promote_types(S_blocks[0].dtype, jnp.float32)
+    cols = sum(jnp.matmul(b.astype(acc), _ct(r.astype(acc), mode),
+                          precision=_HI)
+               for b, r in zip(S_blocks, rows_blocks))
+    corner = sum(jnp.matmul(r.astype(acc), _ct(r.astype(acc), mode),
+                            precision=_HI)
+                 for r in rows_blocks)
+    return jax.lax.psum(cols, sum_axes), jax.lax.psum(corner, sum_axes)
+
+
+def sharded_window_cols(S, rows, *, mesh: Mesh, layout: str = "1d",
+                        model_axis: str = "model", data_axis: str = "data",
+                        mode: str = "real"):
+    """Replicated ``(cols, corner)`` = ``(S·rows†, rows·rows†)`` from a
+    sharded window — the O(n·m·k) input that ``replace_factors`` (and
+    ``chol_append``'s ``W_cross``) consume; the factor algebra itself is
+    n-sized and runs replicated on top of these."""
+    _check_layout(layout)
+    if isinstance(S, LazyBlockedScores):
+        S = S.materialize()
+
+    if layout == "2d":
+        def body(S_loc, rows_loc):
+            part, corner = _cols_local((S_loc,), (rows_loc,),
+                                       sum_axes=(model_axis,), mode=mode)
+            cols = jax.lax.all_gather(part, data_axis, axis=0, tiled=True)
+            return cols, corner
+        in_specs = (P(data_axis, model_axis), P(None, model_axis))
+    else:
+        def body(S_in, rows_in):
+            S_blocks = S_in.blocks if isinstance(S_in, BlockedScores) \
+                else (S_in,)
+            rows_blocks = tuple(rows_in) \
+                if isinstance(rows_in, (tuple, list)) else (rows_in,)
+            return _cols_local(S_blocks, rows_blocks,
+                               sum_axes=(model_axis,), mode=mode)
+        in_specs = (P(None, model_axis), P(None, model_axis))
+
+    fn = shard_map_compat(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=(P(), P()))
+    return fn(S, rows)
+
+
+# ---------------------------------------------------------------------------
+# the full FIFO window fold, distributed end to end
+# ---------------------------------------------------------------------------
+
+def _fold_core(S_blocks, rows_blocks, W, L, slot, *, sum_axes, mode: str,
+               method: str, cols_override=None):
+    """Shared replicated tail of a fold: cross columns → 2k-core split →
+    rank-2k factor refresh → local row scatter indices."""
+    n = W.shape[0]
+    k = rows_blocks[0].shape[0]
+    idx = (slot + jnp.arange(k, dtype=jnp.int32)) % n
+    if cols_override is None:
+        cols, corner = _cols_local(S_blocks, rows_blocks,
+                                   sum_axes=sum_axes, mode=mode)
+    else:
+        cols, corner = cols_override
+    cols = cols.at[idx, :].set(corner)
+    X, Y, Wp = replace_factors(W, cols, idx)
+    Lp = chol_downdate(chol_update(L, X, method=method), Y, method=method)
+    return idx, Wp, Lp, (slot + k) % n
+
+
+def _fold_1d(S, W, L, slot, rows, *, model_axis: str, mode: str,
+             method: str):
+    blocked = isinstance(S, BlockedScores)
+    S_blocks = S.blocks if blocked else (S,)
+    rows_blocks = tuple(rows) if isinstance(rows, (tuple, list)) else (rows,)
+    idx, Wp, Lp, slot2 = _fold_core(S_blocks, rows_blocks, W, L, slot,
+                                    sum_axes=(model_axis,), mode=mode,
+                                    method=method)
+    new_blocks = tuple(b.at[idx, :].set(r.astype(b.dtype))
+                       for b, r in zip(S_blocks, rows_blocks))
+    Sp = BlockedScores(new_blocks, names=S.names) if blocked \
+        else new_blocks[0]
+    return Sp, Wp, Lp, slot2
+
+
+def _fold_2d(S, W, L, slot, rows, *, data_axis: str, model_axis: str,
+             mode: str, method: str):
+    part, corner = _cols_local((S,), (rows,), sum_axes=(model_axis,),
+                               mode=mode)
+    cols = jax.lax.all_gather(part, data_axis, axis=0, tiled=True)
+    idx, Wp, Lp, slot2 = _fold_core((S,), (rows,), W, L, slot,
+                                    sum_axes=(model_axis,), mode=mode,
+                                    method=method,
+                                    cols_override=(cols, corner))
+    # masked scatter: each device owns window rows [off, off + n_loc)
+    n_loc = S.shape[0]
+    off = jax.lax.axis_index(data_axis).astype(jnp.int32) * n_loc
+    Sp = S
+    for j in range(rows.shape[0]):
+        li = idx[j] - off
+        in_slab = (li >= 0) & (li < n_loc)
+        lc = jnp.clip(li, 0, n_loc - 1)
+        Sp = Sp.at[lc, :].set(jnp.where(in_slab, rows[j].astype(S.dtype),
+                                        Sp[lc, :]))
+    return Sp, Wp, Lp, slot2
+
+
+def make_sharded_fold(mesh: Mesh, *, layout: str = "1d",
+                      model_axis: str = "model", data_axis: str = "data",
+                      mode: str = "real", method: str = "composed"):
+    """Build the jitted distributed FIFO fold
+    ``(S, W, L, slot, rows) -> (S', W', L', slot')`` — the shard_map twin
+    of ``repro.serve.adapt._fold_window`` for a window laid out like
+    ``make_sharded_solver(layout=...)``: S sharded, factor + FIFO slot
+    replicated, one dispatch per fold."""
+    _check_layout(layout)
+    if layout == "2d":
+        body = functools.partial(_fold_2d, data_axis=data_axis,
+                                 model_axis=model_axis, mode=mode,
+                                 method=method)
+        s_spec = P(data_axis, model_axis)
+        rows_spec = P(None, model_axis)
+    else:
+        body = functools.partial(_fold_1d, model_axis=model_axis,
+                                 mode=mode, method=method)
+        s_spec = P(None, model_axis)
+        rows_spec = P(None, model_axis)
+    fn = shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(s_spec, P(), P(), P(), rows_spec),
+        out_specs=(s_spec, P(), P(), P()))
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# full refresh (off the request path): per-slab Gram psum + replicated chol
+# ---------------------------------------------------------------------------
+
+def _refresh_1d(S, lam, *, model_axis: str, mode: str, jitter: float):
+    S_blocks = S.blocks if isinstance(S, BlockedScores) else (S,)
+    acc = jnp.promote_types(S_blocks[0].dtype, jnp.float32)
+    W = sum(jnp.matmul(b.astype(acc), _ct(b.astype(acc), mode),
+                       precision=_HI) for b in S_blocks)
+    W = jax.lax.psum(W, model_axis)
+    n = W.shape[0]
+    L = jnp.linalg.cholesky(
+        W + (lam + jitter) * jnp.eye(n, dtype=W.dtype))
+    return W, L
+
+
+def _refresh_2d(S, lam, *, data_axis: str, model_axis: str, mode: str,
+                jitter: float):
+    S_cols = jax.lax.all_gather(S, data_axis, axis=0, tiled=True)
+    return _refresh_1d(S_cols, lam, model_axis=model_axis, mode=mode,
+                       jitter=jitter)
+
+
+def make_sharded_refresh(mesh: Mesh, *, layout: str = "1d",
+                         model_axis: str = "model", data_axis: str = "data",
+                         mode: str = "real", jitter: float = 0.0):
+    """Build the jitted distributed full refactorization
+    ``(S, lam) -> (W, L)``: the O(n²·m) Gram runs per slab with one n²
+    psum, the O(n³) Cholesky replicated — same split as the sharded
+    solvers in ``core.distributed``."""
+    _check_layout(layout)
+    if layout == "2d":
+        body = functools.partial(_refresh_2d, data_axis=data_axis,
+                                 model_axis=model_axis, mode=mode,
+                                 jitter=jitter)
+        s_spec = P(data_axis, model_axis)
+    else:
+        body = functools.partial(_refresh_1d, model_axis=model_axis,
+                                 mode=mode, jitter=jitter)
+        s_spec = P(None, model_axis)
+    fn = shard_map_compat(body, mesh=mesh, in_specs=(s_spec, P()),
+                          out_specs=(P(), P()))
+    return jax.jit(fn)

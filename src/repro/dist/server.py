@@ -1,0 +1,434 @@
+"""``AsyncSolveServer`` — concurrent serving against the sharded window.
+
+Two things change relative to the eager ``repro.serve.SolveServer``; the
+math does not:
+
+* **Concurrency** — requests are submitted from any number of producer
+  threads; a single worker thread drains the ``TokenBudgetBatcher`` and
+  owns all device dispatch. Solves are dispatched asynchronously and
+  ``jax.block_until_ready`` runs only at the response boundary, so the
+  host coalesces/stacks the next microbatch (and producers keep
+  enqueuing) while the device executes the previous one. With no
+  adaptation configured the worker additionally keeps one microbatch in
+  flight (dispatch i+1 before materializing i); with adaptation the
+  eager fold → refresh ordering is pinned so responses stay equivalent
+  to ``SolveServer.flush`` on the same trace.
+
+* **Sharding** — with a ``ShardedServeState`` the per-microbatch
+  dispatcher routes uniform-λ batches to a shard_map resident-L path and
+  mixed-λ batches to a shard_map ``solve_batch`` twin: the two O(n·m·k)
+  window passes run per slab with one psum each, the n-sized triangular
+  work replicated — the serving analogue of
+  ``core.distributed.sharded_chol_solve`` (1d, 2d, and blocked layouts).
+  With a plain ``ServeState`` the worker calls the *same* jitted
+  ``_coalesced_solve`` as the eager server, so replicated async responses
+  are bit-identical to eager ones on identical traces.
+
+``flush()`` keeps the eager server's API: it blocks until every request
+submitted so far has been served and returns their results FIFO — so
+``serve_main`` and the benchmarks drive both servers with one code path.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+from jax.sharding import PartitionSpec as P
+
+from repro.core.operator import BlockedScores
+from repro.core.shard_compat import shard_map_compat
+from repro.dist.state import DistSpec, ShardedServeState
+from repro.serve.batcher import Microbatch, TokenBudgetBatcher
+from repro.serve.server import ServerMetrics, SolveResult, _coalesced_solve
+from repro.serve.state import ServeState, as_factorization, serve_mode
+
+__all__ = ["AsyncSolveServer", "make_sharded_coalesced_solve"]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+def _ct(A: jax.Array, mode: str) -> jax.Array:
+    return A.conj().T if mode == "complex" else A.T
+
+
+# ---------------------------------------------------------------------------
+# the sharded coalesced solve (shard_map twin of server._coalesced_solve)
+# ---------------------------------------------------------------------------
+
+def _serve_local(S_in, W, L, lam0, V_in, lams, *, model_axis: str,
+                 mode: str, jitter: float, uniform: bool, monitor: bool,
+                 refactorize: bool):
+    """One microbatch on the local slab. Collectives: one psum of (n, k)
+    for u = S·V (plus one n² psum under policy="refactorize" and two
+    scalar psums for the monitored residual); everything n-sized runs
+    replicated."""
+    blocked = isinstance(S_in, BlockedScores)
+    S_blocks = S_in.blocks if blocked else (S_in,)
+    V_blocks = tuple(V_in) if isinstance(V_in, (tuple, list)) else (V_in,)
+    acc = jnp.promote_types(S_blocks[0].dtype, jnp.float32)
+    S32 = tuple(b.astype(acc) for b in S_blocks)
+    V32 = tuple(v.astype(jnp.promote_types(v.dtype, acc)) for v in V_blocks)
+    n = W.shape[0]
+    lam0 = jnp.real(jnp.asarray(lam0, acc))
+
+    if refactorize:       # the baseline: fresh per-slab Gram psum + chol
+        W = jax.lax.psum(
+            sum(jnp.matmul(b, _ct(b, mode), precision=_HI) for b in S32),
+            model_axis)
+        L = jnp.linalg.cholesky(
+            W + (lam0 + jitter) * jnp.eye(n, dtype=W.dtype))
+
+    u = jax.lax.psum(
+        sum(jnp.matmul(b, v, precision=_HI) for b, v in zip(S32, V32)),
+        model_axis)                                           # (n, k)
+
+    if uniform:
+        w = solve_triangular(L, u, lower=True)
+        w = solve_triangular(_ct(L, mode), w, lower=False)
+        ys = tuple(jnp.matmul(_ct(b, mode), w, precision=_HI) for b in S32)
+        xs = tuple((v - y) / lam0 for v, y in zip(V32, ys))
+        resid = -jnp.ones((), jnp.float32)
+        if monitor:
+            Sx = jax.lax.psum(
+                sum(jnp.matmul(b, x, precision=_HI)
+                    for b, x in zip(S32, xs)), model_axis)
+            r2 = sum(jnp.sum(jnp.abs(
+                jnp.matmul(_ct(b, mode), Sx, precision=_HI)
+                + lam0 * x - v) ** 2)
+                for b, x, v in zip(S32, xs, V32))
+            v2 = sum(jnp.sum(jnp.abs(v) ** 2) for v in V32)
+            r2 = jax.lax.psum(r2, model_axis)
+            v2 = jax.lax.psum(v2, model_axis)
+            resid = jnp.sqrt(r2 / v2).astype(jnp.float32)
+    else:
+        # mixed per-request λ: batched chols of the cached W, one S pass
+        # each way for the whole batch (solve_batch, sharded)
+        lams = jnp.real(jnp.asarray(lams, acc))
+        eye = jnp.eye(n, dtype=W.dtype)
+        Wd = W[None] + (lams + jitter)[:, None, None] * eye   # (k, n, n)
+        Ls = jnp.linalg.cholesky(Wd)
+        ut = u.T[..., None]                                   # (k, n, 1)
+        w = jax.vmap(lambda Lj, b: solve_triangular(Lj, b, lower=True))(
+            Ls, ut)
+        w = jax.vmap(lambda Lj, b: solve_triangular(
+            _ct(Lj, mode), b, lower=False))(Ls, w)
+        w = w[..., 0].T                                       # (n, k)
+        ys = tuple(jnp.matmul(_ct(b, mode), w, precision=_HI) for b in S32)
+        xs = tuple((v - y) / lams[None, :] for v, y in zip(V32, ys))
+        resid = -jnp.ones((), jnp.float32)
+
+    x = xs if blocked else xs[0]
+    return x, resid
+
+
+def _serve_local_2d(S_loc, W, L, lam0, V_loc, lams, *, data_axis: str,
+                    **kw):
+    """2d layout: all-gather the sample axis (cheap: n·m_loc words), then
+    the 1d path; V/x are replicated over data, sharded over model."""
+    S_cols = jax.lax.all_gather(S_loc, data_axis, axis=0, tiled=True)
+    return _serve_local(S_cols, W, L, lam0, V_loc, lams, **kw)
+
+
+def make_sharded_coalesced_solve(spec: DistSpec, *, mode: str,
+                                 jitter: float, uniform: bool,
+                                 monitor: bool, refactorize: bool):
+    """Build the jitted shard_map request-path solve
+    ``(S, W, L, lam0, V, lams) -> (x, resid)`` for ``spec``'s layout."""
+    if spec.layout == "2d":
+        body = functools.partial(
+            _serve_local_2d, data_axis=spec.data_axis,
+            model_axis=spec.model_axis, mode=mode, jitter=jitter,
+            uniform=uniform, monitor=monitor, refactorize=refactorize)
+    else:
+        body = functools.partial(
+            _serve_local, model_axis=spec.model_axis, mode=mode,
+            jitter=jitter, uniform=uniform, monitor=monitor,
+            refactorize=refactorize)
+    fn = shard_map_compat(
+        body, mesh=spec.mesh,
+        in_specs=(spec.s_spec(), P(), P(), P(), spec.v_spec(), P()),
+        out_specs=(spec.v_spec(), P()))
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# the async front end
+# ---------------------------------------------------------------------------
+
+class AsyncSolveServer:
+    """Thread-safe request front end over the (optionally sharded) window.
+
+    Args:
+      state: a ``ServeState`` (replicated; responses bit-identical to the
+        eager ``SolveServer``) or a ``ShardedServeState`` (requests served
+        through the shard_map paths of its ``DistSpec``).
+      batcher / adaptation / policy / monitor_drift / jitter: as on
+        ``SolveServer``. When the state is sharded and the adaptation has
+        no ``dist`` bound yet, the state's spec is bound automatically so
+        folds and refreshes run through the sharded cholupdate.
+      clock: latency timestamps (injectable for tests).
+
+    The worker thread starts immediately; use as a context manager or
+    call ``shutdown()`` when done.
+    """
+
+    def __init__(self, state, *,
+                 batcher: Optional[TokenBudgetBatcher] = None,
+                 adaptation=None, policy: str = "cached",
+                 monitor_drift: bool = True, jitter: float = 0.0,
+                 clock=time.perf_counter):
+        if policy not in ("cached", "refactorize"):
+            raise ValueError(f"policy must be 'cached' or 'refactorize', "
+                             f"got {policy!r}")
+        if isinstance(state, ShardedServeState):
+            self.state: ServeState = state.state
+            self.spec: Optional[DistSpec] = state.spec
+        else:
+            self.state = state
+            self.spec = None
+        self.batcher = batcher if batcher is not None else TokenBudgetBatcher()
+        if adaptation is not None and self.spec is not None \
+                and getattr(adaptation, "dist", None) is None:
+            # bind the state's layout so folds/refreshes run through the
+            # sharded cholupdate — on a copy, so the caller's adaptation
+            # object stays reusable with other (e.g. eager) servers
+            import copy
+            adaptation = copy.copy(adaptation)
+            adaptation.dist = self.spec
+            adaptation._dist_fns = {}
+        self.adaptation = adaptation
+        self.policy = policy
+        self.monitor_drift = bool(monitor_drift)
+        self.jitter = float(jitter)
+        self.clock = clock
+        self.metrics = ServerMetrics()
+        self.damping_state = None          # read by the worker's refresh
+
+        self._solve_cache: Dict[tuple, Any] = {}
+        self._cv = threading.Condition()
+        self._results: Dict[int, SolveResult] = {}
+        self._pending: Set[int] = set()
+        self._claimed: Set[int] = set()    # uids a result() caller waits on
+        self._cancelled: Set[int] = set()
+        self._error: Optional[BaseException] = None
+        self._stopping = False
+        self._drain_on_stop = True
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="async-solve-server")
+        self._worker.start()
+
+    # -- request intake (any thread) ---------------------------------------
+    def submit(self, v, *, damping: Optional[float] = None, tokens: int = 1,
+               rows=None, payload=None) -> int:
+        """Enqueue one request; returns its uid. Thread-safe."""
+        lam = float(self.state.lam0) if damping is None else float(damping)
+        with self._cv:
+            self._raise_if_failed()
+            if self._stopping:
+                raise RuntimeError("server is shut down")
+            req = self.batcher.submit(v, damping=lam, tokens=tokens,
+                                      rows=rows, payload=payload)
+            req.t_submit = self.clock()
+            self._pending.add(req.uid)
+            self._cv.notify_all()
+        return req.uid
+
+    def result(self, uid: int, *, timeout: Optional[float] = None
+               ) -> SolveResult:
+        """Block until request ``uid`` is served and return its result.
+        Safe against a concurrent ``flush()``: the uid is claimed first,
+        so the flush won't hand it to its own caller."""
+        with self._cv:
+            self._claimed.add(uid)
+            try:
+                ok = self._cv.wait_for(
+                    lambda: (uid in self._results or uid in self._cancelled
+                             or self._error is not None), timeout)
+                self._raise_if_failed()
+                if not ok:
+                    raise TimeoutError(
+                        f"request {uid} not served in {timeout}s")
+                if uid in self._cancelled:
+                    self._cancelled.discard(uid)
+                    raise RuntimeError(f"request {uid} was cancelled by a "
+                                       "non-draining shutdown")
+                return self._results.pop(uid)
+            finally:
+                self._claimed.discard(uid)
+
+    def flush(self, *, damping_state=None,
+              timeout: Optional[float] = None) -> List[SolveResult]:
+        """Block until every request submitted so far is served; return
+        all unclaimed results FIFO (uids a concurrent ``result()`` call
+        is waiting on are left to that caller). API-compatible with the
+        eager ``SolveServer.flush`` (the worker does the solving).
+
+        Note on ``damping_state`` timing under async serving: the worker
+        makes its drift-refresh decisions as microbatches are served, so
+        a state passed here governs *subsequent* refresh checks — unlike
+        the eager server, where flush both solves and refreshes. Assign
+        ``server.damping_state`` before submitting to pin the state a
+        burst is judged against."""
+        if damping_state is not None:
+            self.damping_state = damping_state
+        with self._cv:
+            ok = self._cv.wait_for(
+                lambda: self._error is not None or not self._pending,
+                timeout)
+            self._raise_if_failed()
+            if not ok:
+                raise TimeoutError(
+                    f"{len(self._pending)} request(s) still pending after "
+                    f"{timeout}s")
+            out = [self._results.pop(u)
+                   for u in sorted(set(self._results) - self._claimed)]
+        return out
+
+    # -- lifecycle ---------------------------------------------------------
+    def shutdown(self, *, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop the worker. ``drain=True`` (default) serves every queued
+        request first; ``drain=False`` cancels them."""
+        with self._cv:
+            self._stopping = True
+            self._drain_on_stop = drain
+            if not drain:
+                for req in self.batcher._queue:
+                    self._pending.discard(req.uid)
+                    self._cancelled.add(req.uid)
+                self.batcher._queue.clear()
+            self._cv.notify_all()
+        self._worker.join(timeout)
+        with self._cv:
+            self._raise_if_failed()
+
+    def __enter__(self) -> "AsyncSolveServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(drain=exc_type is None)
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def stats(self):
+        return self.state.stats
+
+    @property
+    def factorization(self):
+        """The resident factorization as a first-class solver object."""
+        return as_factorization(self.state, jitter=self.jitter)
+
+    def sharded_state(self) -> Optional[ShardedServeState]:
+        return None if self.spec is None \
+            else ShardedServeState(self.state, self.spec)
+
+    def _raise_if_failed(self) -> None:
+        if self._error is not None:
+            raise RuntimeError("server worker failed") from self._error
+
+    # -- the worker (single consumer; owns all device dispatch) ------------
+    def _run(self) -> None:
+        try:
+            inflight: Optional[Tuple[Microbatch, tuple]] = None
+            while True:
+                mb = None
+                with self._cv:
+                    while (len(self.batcher) == 0 and not self._stopping
+                           and inflight is None):
+                        self._cv.wait()
+                    if len(self.batcher):
+                        mb = self.batcher.next_microbatch()
+                    stop_now = self._stopping and len(self.batcher) == 0
+                if mb is not None:
+                    handle = self._dispatch(mb)
+                    if self.adaptation is not None:
+                        # the fold reads state, never the solve's outputs:
+                        # dispatching it before materializing responses
+                        # keeps the device stream contiguous while
+                        # preserving the eager solve → fold → refresh
+                        # value ordering. Results release only once the
+                        # refresh decision is in, so flush() doubles as a
+                        # state-snapshot barrier.
+                        self._adapt_folds(mb)
+                        results = self._finalize(mb, handle)
+                        self._maybe_refresh()
+                        self._release(results)
+                    elif inflight is not None:
+                        nxt = (mb, handle)
+                        self._release(self._finalize(*inflight))
+                        inflight = nxt              # i+1 runs while i lands
+                    else:
+                        inflight = (mb, handle)
+                elif inflight is not None:
+                    self._release(self._finalize(*inflight))
+                    inflight = None
+                elif stop_now:
+                    return
+        except BaseException as e:           # surfaced on the caller side
+            with self._cv:
+                self._error = e
+                self._cv.notify_all()
+
+    def _dispatch(self, mb: Microbatch) -> tuple:
+        """Launch the coalesced solve; returns unmaterialized arrays."""
+        st = self.state
+        lam0 = float(st.lam0)
+        uniform = all(r.damping == lam0 for r in mb.requests)
+        monitor = self.monitor_drift and self.policy == "cached"
+        refactorize = self.policy == "refactorize"
+        if self.spec is None:
+            return _coalesced_solve(
+                st.S, st.W, st.L, st.lam0, mb.V, mb.dampings,
+                mode=serve_mode(st), jitter=self.jitter, uniform=uniform,
+                monitor=monitor, refactorize=refactorize)
+        key = (uniform, monitor, refactorize)
+        fn = self._solve_cache.get(key)
+        if fn is None:
+            fn = make_sharded_coalesced_solve(
+                self.spec, mode=serve_mode(st), jitter=self.jitter,
+                uniform=uniform, monitor=monitor, refactorize=refactorize)
+            self._solve_cache[key] = fn
+        return fn(st.S, st.W, st.L, st.lam0, mb.V, mb.dampings)
+
+    def _finalize(self, mb: Microbatch, handle: tuple) -> List[SolveResult]:
+        """The response boundary: the only block_until_ready."""
+        x, resid = handle
+        jax.block_until_ready(x)
+        t_done = self.clock()
+        st = self.state
+        stats = st.stats._replace(
+            served=st.stats.served + jnp.asarray(mb.k, jnp.int32),
+            microbatches=st.stats.microbatches + 1,
+            last_residual=jnp.where(resid >= 0, resid,
+                                    st.stats.last_residual))
+        self.state = st._replace(age=st.age + 1, stats=stats)
+        results = []
+        for j, req in enumerate(mb.requests):
+            xj = tuple(xb[:, j] for xb in x) \
+                if isinstance(x, (tuple, list)) else x[:, j]
+            self.metrics.record(req.t_submit, t_done, req.tokens)
+            results.append(SolveResult(uid=req.uid, x=xj,
+                                       damping=req.damping,
+                                       latency_s=t_done - req.t_submit))
+        return results
+
+    def _release(self, results: List[SolveResult]) -> None:
+        with self._cv:
+            for r in results:
+                self._results[r.uid] = r
+                self._pending.discard(r.uid)
+            self._cv.notify_all()
+
+    def _adapt_folds(self, mb: Microbatch) -> None:
+        for req in mb.requests:
+            if req.rows is not None:
+                self.state = self.adaptation.fold(self.state, req.rows)
+
+    def _maybe_refresh(self) -> None:
+        self.state, _ = self.adaptation.maybe_refresh(
+            self.state, damping_state=self.damping_state)

@@ -1,0 +1,148 @@
+"""``ShardedServeState`` — the resident serving asset, laid out on a mesh.
+
+The sharding contract mirrors the training-side solvers
+(``core.distributed``) exactly: the big thing (the (n, m) score window S)
+is sharded — 1d over the model axis, 2d over (data, model), or per-layer
+blocked slabs — while everything n-sized (the undamped Gram W, the
+resident factor L, the FIFO slot/age/stats metadata) stays replicated on
+every device. A ``DistSpec`` names that layout once; state placement, the
+distributed fold/refresh builders (``dist.cholupdate``) and the sharded
+request path (``dist.server``) all read it.
+
+The underlying pytree is the *same* ``ServeState`` the replicated server
+uses, so the checkpoint round-trip guarantees carry over unchanged:
+``save_sharded_serve_state`` writes the plain pytree and
+``restore_sharded_serve_state`` re-places it onto the mesh — a restarted
+sharded server resumes with the same factor and produces the same solves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.operator import is_blocked
+from repro.serve.state import (
+    ServeState,
+    init_serve_state,
+    restore_serve_state,
+    save_serve_state,
+    serve_mode,
+)
+
+__all__ = ["DistSpec", "ShardedServeState", "init_sharded_serve_state",
+           "place_serve_state", "save_sharded_serve_state",
+           "restore_sharded_serve_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSpec:
+    """A mesh plus the window layout (matching ``make_sharded_solver``)."""
+    mesh: Mesh
+    layout: str = "1d"            # "1d" | "2d" | "blocked"
+    model_axis: str = "model"
+    data_axis: str = "data"
+
+    def __post_init__(self):
+        from repro.dist.cholupdate import _check_layout
+        _check_layout(self.layout)
+        if self.layout == "2d" and self.data_axis not in self.mesh.axis_names:
+            raise ValueError(f"layout='2d' needs a {self.data_axis!r} mesh "
+                             f"axis; mesh has {self.mesh.axis_names}")
+        if self.model_axis not in self.mesh.axis_names:
+            raise ValueError(f"mesh has no {self.model_axis!r} axis: "
+                             f"{self.mesh.axis_names}")
+
+    # -- PartitionSpecs of the moving parts --------------------------------
+    def s_spec(self) -> P:
+        """The window: (n, m) rows×params, or a prefix spec over per-layer
+        (n, m_b) blocks."""
+        if self.layout == "2d":
+            return P(self.data_axis, self.model_axis)
+        return P(None, self.model_axis)
+
+    def rows_spec(self) -> P:
+        """Incoming fold rows (k, m): params sharded, rows replicated."""
+        return P(None, self.model_axis)
+
+    def v_spec(self) -> P:
+        """Stacked RHS columns (m, k): the parameter axis is sharded like
+        S's columns; solutions come back in the same layout."""
+        return P(self.model_axis, None)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+class ShardedServeState:
+    """A ``ServeState`` paired with its ``DistSpec`` placement.
+
+    Not itself a pytree — the mesh isn't data. Field reads delegate to
+    the wrapped state so server code can treat both uniformly.
+    """
+
+    def __init__(self, state: ServeState, spec: DistSpec):
+        self.state = state
+        self.spec = spec
+
+    def __getattr__(self, name):
+        return getattr(self.state, name)
+
+    def _replace(self, **kw) -> "ShardedServeState":
+        return ShardedServeState(self.state._replace(**kw), self.spec)
+
+
+def place_serve_state(state: ServeState, spec: DistSpec) -> ServeState:
+    """device_put the pytree per the contract: S sharded, rest replicated."""
+    repl = spec.sharding(P())
+
+    def put(t):
+        return jax.tree.map(lambda x: jax.device_put(x, repl), t)
+
+    return ServeState(
+        S=jax.device_put(state.S, spec.sharding(spec.s_spec())),
+        W=put(state.W), L=put(state.L), lam0=put(state.lam0),
+        slot=put(state.slot), age=put(state.age), stats=put(state.stats))
+
+
+def init_sharded_serve_state(S, damping, *, spec: DistSpec,
+                             jitter: float = 0.0, mode: str = "auto"
+                             ) -> ShardedServeState:
+    """Build the resident state and lay it out on the mesh. The one-time
+    seeding Gram runs replicated (``init_serve_state``); every later
+    refresh is the sharded per-slab psum (``make_sharded_refresh``)."""
+    if spec.layout == "blocked" and not is_blocked(S):
+        raise ValueError("layout='blocked' needs a BlockedScores window; "
+                         "use layout='1d' for dense S")
+    if spec.layout != "blocked" and is_blocked(S):
+        raise ValueError(f"layout={spec.layout!r} needs a dense window; "
+                         "use layout='blocked' for BlockedScores")
+    state = init_serve_state(S, damping, jitter=jitter, mode=mode)
+    return ShardedServeState(place_serve_state(state, spec), spec)
+
+
+def save_sharded_serve_state(ckpt_dir, step: int, state: ShardedServeState,
+                             *, metadata: Optional[dict] = None,
+                             keep: int = 3):
+    """Checkpoint the plain pytree (placement is not data — a restore may
+    target a different mesh)."""
+    meta = {"layout": state.spec.layout, **(metadata or {})}
+    return save_serve_state(ckpt_dir, step, state.state, metadata=meta,
+                            keep=keep)
+
+
+def restore_sharded_serve_state(ckpt_dir, step: int, like: ShardedServeState,
+                                *, spec: Optional[DistSpec] = None):
+    """Restore and re-place onto ``spec``'s mesh (default: ``like``'s own
+    spec — elastic re-meshing picks a new one). Returns (state, meta)."""
+    spec = like.spec if spec is None else spec
+    restored, meta = restore_serve_state(ckpt_dir, step, like.state)
+    return ShardedServeState(place_serve_state(restored, spec), spec), meta
+
+
+def sharded_serve_mode(state) -> str:
+    """``serve_mode`` for either state flavour."""
+    return serve_mode(state.state if isinstance(state, ShardedServeState)
+                      else state)

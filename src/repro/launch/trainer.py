@@ -140,8 +140,13 @@ class ServeHandles:
         self._decoders = {}                # (b, plen, new) -> jitted step
 
     def apply_update(self, x_flat, *, lr: float):
-        """θ ← θ − lr·x for a flat natural-gradient solve result."""
-        delta = self.unravel(jnp.asarray(x_flat))
+        """θ ← θ − lr·x for a flat natural-gradient solve result.
+
+        ``x`` is gathered to host first: a sharded server returns it laid
+        out over the model axis, and folding that placement into the
+        replicated live params would commit them to mismatched shardings.
+        """
+        delta = self.unravel(jnp.asarray(np.asarray(x_flat)))
         self.params = jax.tree.map(
             lambda p, d: (p - lr * d.astype(p.dtype)).astype(p.dtype),
             self.params, delta)
@@ -179,8 +184,9 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                  max_tokens: int = 4096, max_requests: int = 8,
                  refresh_every: int = 64, drift_tol=None, drift_frac=0.25,
                  jitter: float = 0.0, score_chunk=None, policy: str = "cached",
+                 layout=None, async_: bool = False, oversize: str = "split",
                  seed: int = 0):
-    """Config → mesh → model → resident curvature window → ``SolveServer``.
+    """Config → mesh → model → resident curvature window → server.
 
     The serving twin of ``build_trainer``: builds the jitted serve steps
     (prefill + one-token decode from ``launch.train``, plus the score-grad
@@ -188,6 +194,14 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
     window from synthetic data, factorizes it once, and wraps it in a
     request-driven server with token-budget batching and the age/drift
     online-adaptation policy. Returns ``(server, handles)``.
+
+    ``async_=True`` returns the concurrent ``repro.dist.AsyncSolveServer``
+    (thread-safe submits, device/host overlap) instead of the eager
+    ``SolveServer``; ``layout`` ("1d" | "2d") additionally shards the
+    resident window over ``mesh`` per ``repro.dist.DistSpec`` — the
+    request path and the adaptation folds then run through the shard_map
+    solve and the distributed cholupdate. A sharded window requires the
+    async server (the eager one is the replicated baseline).
     """
     from jax.flatten_util import ravel_pytree
 
@@ -210,15 +224,30 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                                   scale=1.0 / np.sqrt(window))
 
     _, _, S0 = jscore(params, sample)
-    state = init_serve_state(S0, damping, jitter=jitter)
     adaptation = OnlineAdaptation(refresh_every=refresh_every,
                                   drift_tol=drift_tol, drift_frac=drift_frac,
                                   jitter=jitter)
-    server = SolveServer(
-        state,
-        batcher=TokenBudgetBatcher(max_tokens=max_tokens,
-                                   max_requests=max_requests),
-        adaptation=adaptation, policy=policy, jitter=jitter)
+    batcher = TokenBudgetBatcher(max_tokens=max_tokens,
+                                 max_requests=max_requests,
+                                 oversize=oversize)
+    if layout is not None and not async_:
+        raise ValueError(
+            f"layout={layout!r} shards the resident window, which only the "
+            "async server serves; pass async_=True (the eager SolveServer "
+            "is the replicated baseline)")
+    if async_:
+        from repro.dist import (AsyncSolveServer, DistSpec,
+                                init_sharded_serve_state)
+        state = init_serve_state(S0, damping, jitter=jitter) \
+            if layout is None else init_sharded_serve_state(
+                S0, damping, spec=DistSpec(mesh, layout), jitter=jitter)
+        server = AsyncSolveServer(state, batcher=batcher,
+                                  adaptation=adaptation, policy=policy,
+                                  jitter=jitter)
+    else:
+        server = SolveServer(init_serve_state(S0, damping, jitter=jitter),
+                             batcher=batcher, adaptation=adaptation,
+                             policy=policy, jitter=jitter)
     handles = ServeHandles(api=api, params=params, data=data,
                            score_grads=jscore, unravel=unravel, mesh=mesh)
     return server, handles

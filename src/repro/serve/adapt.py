@@ -89,13 +89,18 @@ class OnlineAdaptation:
     def __init__(self, *, refresh_every: int = 64,
                  drift_tol: Optional[float] = None,
                  drift_frac: Optional[float] = 0.25,
-                 jitter: float = 0.0):
+                 jitter: float = 0.0, dist=None):
         if refresh_every < 1:
             raise ValueError("refresh_every must be >= 1")
         self.refresh_every = int(refresh_every)
         self.drift_tol = None if drift_tol is None else float(drift_tol)
         self.drift_frac = None if drift_frac is None else float(drift_frac)
         self.jitter = float(jitter)
+        # optional repro.dist.DistSpec: folds and refreshes then run
+        # through the sharded cholupdate (per-slab psums, replicated
+        # factor) instead of the single-device jit
+        self.dist = dist
+        self._dist_fns = {}            # (kind, mode) -> jitted shard_map fn
 
     @classmethod
     def from_policy(cls, policy, *, jitter: Optional[float] = None
@@ -130,13 +135,39 @@ class OnlineAdaptation:
             raise ValueError(
                 f"{len(row_blocks)} row blocks for a "
                 f"{len(state.S.blocks)}-block window")
-        Sp, Wp, Lp, slot = _fold_window(
-            state.S, state.W, state.L, state.slot,
-            rows if isinstance(rows, (tuple, list)) else jnp.asarray(rows),
-            mode=serve_mode(state))
+        rows_in = rows if isinstance(rows, (tuple, list)) \
+            else jnp.asarray(rows)
+        if self.dist is not None:
+            fold = self._dist_fn("fold", serve_mode(state))
+            Sp, Wp, Lp, slot = fold(state.S, state.W, state.L, state.slot,
+                                    rows_in)
+        else:
+            Sp, Wp, Lp, slot = _fold_window(
+                state.S, state.W, state.L, state.slot, rows_in,
+                mode=serve_mode(state))
         stats = state.stats._replace(
             adapted=state.stats.adapted + jnp.asarray(k, jnp.int32))
         return state._replace(S=Sp, W=Wp, L=Lp, slot=slot, stats=stats)
+
+    def _dist_fn(self, kind: str, mode: str):
+        """Build-once cache of the sharded fold/refresh for ``self.dist``."""
+        fn = self._dist_fns.get((kind, mode))
+        if fn is None:
+            from repro.dist.cholupdate import (make_sharded_fold,
+                                               make_sharded_refresh)
+            spec = self.dist
+            if kind == "fold":
+                fn = make_sharded_fold(
+                    spec.mesh, layout=spec.layout,
+                    model_axis=spec.model_axis, data_axis=spec.data_axis,
+                    mode=mode)
+            else:
+                fn = make_sharded_refresh(
+                    spec.mesh, layout=spec.layout,
+                    model_axis=spec.model_axis, data_axis=spec.data_axis,
+                    mode=mode, jitter=self.jitter)
+            self._dist_fns[(kind, mode)] = fn
+        return fn
 
     def maybe_refresh(self, state: ServeState, *, damping_state=None,
                       force: bool = False) -> Tuple[ServeState, bool]:
@@ -149,11 +180,16 @@ class OnlineAdaptation:
         drift_due = tol is not None and r >= 0.0 and r > float(tol)
         if not (force or age_due or drift_due):
             return state, False
-        fac = chol_factorize(state.S, state.lam0, mode=serve_mode(state),
-                             jitter=self.jitter)
+        if self.dist is not None:
+            W, L = self._dist_fn("refresh", serve_mode(state))(
+                state.S, state.lam0)
+        else:
+            fac = chol_factorize(state.S, state.lam0, mode=serve_mode(state),
+                                 jitter=self.jitter)
+            W, L = fac.W, fac.L
         stats = state.stats._replace(
             refreshes=state.stats.refreshes + 1,
             last_residual=-jnp.ones((), jnp.float32))
-        return state._replace(W=fac.W, L=fac.L,
+        return state._replace(W=W, L=L,
                               age=jnp.zeros((), jnp.int32),
                               stats=stats), True

@@ -11,8 +11,12 @@ over S serves the whole microbatch (``CholFactorization.solve`` /
 
 Two admission limits bound a microbatch: ``max_tokens`` (the serving-loop
 budget — a microbatch closes before the next request would exceed it) and
-``max_requests`` (the solver-side RHS width). A single oversized request
-is still admitted alone — the budget shapes batches, it never starves.
+``max_requests`` (the solver-side RHS width). A request bigger than the
+whole token budget is handled per the explicit ``oversize`` policy:
+``"split"`` (default) splits it off into its own single-request
+microbatch once it reaches the queue head — the budget shapes batches,
+it never starves; ``"reject"`` refuses it at ``submit`` time with a
+``ValueError`` so the caller can shed load instead.
 
 ``bucket=True`` pads the stacked RHS with zero columns up to power-of-two
 widths (λ padding 1.0), so the jitted solve path compiles O(log
@@ -94,12 +98,16 @@ class TokenBudgetBatcher:
     """FIFO coalescing of solve requests under a token budget."""
 
     def __init__(self, *, max_tokens: int = 4096, max_requests: int = 16,
-                 bucket: bool = True):
+                 bucket: bool = True, oversize: str = "split"):
         if max_tokens < 1 or max_requests < 1:
             raise ValueError("max_tokens and max_requests must be >= 1")
+        if oversize not in ("split", "reject"):
+            raise ValueError(f"oversize must be 'split' or 'reject', "
+                             f"got {oversize!r}")
         self.max_tokens = int(max_tokens)
         self.max_requests = int(max_requests)
         self.bucket = bool(bucket)
+        self.oversize = oversize
         self._queue: List[SolveRequest] = []
         self._uid = itertools.count()
 
@@ -113,9 +121,15 @@ class TokenBudgetBatcher:
     def submit(self, v, *, damping: float, tokens: int = 1, rows=None,
                payload=None, uid: Optional[int] = None) -> SolveRequest:
         """Enqueue one request; returns the (uid-stamped) request object."""
+        tokens = max(int(tokens), 1)
+        if tokens > self.max_tokens and self.oversize == "reject":
+            raise ValueError(
+                f"request of {tokens} tokens exceeds the {self.max_tokens}-"
+                f"token budget (oversize='reject'; use oversize='split' to "
+                f"admit oversized requests in solo microbatches)")
         req = SolveRequest(
             uid=next(self._uid) if uid is None else uid, v=v,
-            damping=float(damping), tokens=max(int(tokens), 1),
+            damping=float(damping), tokens=tokens,
             rows=rows, payload=payload)
         self._queue.append(req)
         return req
@@ -124,7 +138,11 @@ class TokenBudgetBatcher:
         """Coalesce the queue head into one microbatch (None when empty).
 
         Admission is FIFO: requests join until the next one would blow the
-        token budget or the RHS width; the first request always fits.
+        token budget or the RHS width. The queue-head request always
+        starts a microbatch — an oversized one (under the default
+        ``oversize='split'`` policy) is therefore split off alone rather
+        than starving; with ``oversize='reject'`` it was already refused
+        at ``submit``.
         """
         if not self._queue:
             return None

@@ -74,6 +74,17 @@ def serve_main(argv=None):
                     help="autotuned drift bound fraction "
                          "(repro.core.auto_drift_tol)")
     ap.add_argument("--mesh-shape", default="1,1")
+    ap.add_argument("--mesh", choices=["replicated", "1d", "2d"],
+                    default="replicated",
+                    help="window layout: replicated (eager-compatible), or "
+                         "sharded over the mesh per repro.dist.DistSpec "
+                         "(1d: params on the model axis; 2d: samples x "
+                         "params). Sharded layouts imply --async.")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="serve through repro.dist.AsyncSolveServer: "
+                         "thread-safe submits, the device executes the "
+                         "previous coalesced solve while the host batches "
+                         "the next")
     ap.add_argument("--ckpt-dir", default="artifacts/serve_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=8,
                     help="checkpoint cadence in flush rounds (0: off)")
@@ -87,15 +98,19 @@ def serve_main(argv=None):
         else ("pod", "data", "model")
     mesh = make_mesh(shape, axes)
 
+    layout = None if args.mesh == "replicated" else args.mesh
+    async_ = args.async_ or layout is not None
+
     t0 = time.perf_counter()
     server, h = build_server(
         cfg, mesh=mesh, window=args.window, seq=args.seq,
         damping=args.damping, max_tokens=args.max_tokens,
         max_requests=args.max_requests, refresh_every=args.refresh_every,
         drift_tol=args.drift_tol, drift_frac=args.drift_frac,
-        seed=args.seed)
+        layout=layout, async_=async_, seed=args.seed)
+    kind = f"async {layout or 'replicated'}" if async_ else "eager"
     print(f"resident window factorized: n={args.window} "
-          f"m={server.state.S.shape[1]} λ0={args.damping} "
+          f"m={server.state.S.shape[1]} λ0={args.damping} [{kind}] "
           f"({(time.perf_counter() - t0) * 1e3:.0f} ms)", flush=True)
 
     lm = LevenbergMarquardtDamping(args.damping)
@@ -105,6 +120,11 @@ def serve_main(argv=None):
     pending = {}      # uid -> (v, loss_before, batch)
 
     for r in range(args.requests):
+        if async_:
+            # the async worker serves (and drift-checks) microbatches as
+            # they arrive — pin the damping state before submitting, not
+            # at flush time
+            server.damping_state = dstate
         # one synthetic request: adaptation examples + a prompt
         full = h.data.batch_at(r + 1)
         take = rng.choice(args.window, size=args.adapt_examples,
@@ -164,6 +184,8 @@ def serve_main(argv=None):
                   metadata={"arch": cfg.name})
         print(f"checkpointed ServeState+params at round {rounds} "
               f"-> {args.ckpt_dir}")
+    if async_:
+        server.shutdown()
     return server, losses
 
 

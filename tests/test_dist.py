@@ -1,0 +1,470 @@
+"""Sharded curvature service: distributed rank-k cholupdate equivalence
+(composed psum + ring-of-rank-1-sweeps, 1d/2d/blocked window folds),
+AsyncSolveServer vs the eager replicated SolveServer (bit-level at matched
+λ on a replicated window; ≤5e-3 on sharded ones, the ``benchmarks/
+serve.py`` gate), thread-safe concurrent submission, and shutdown
+semantics.
+
+Multi-device tests spawn a subprocess so ``XLA_FLAGS`` can force 4 host
+devices (the multi-host-shaped CPU harness — same pattern as
+``test_distributed.py``); pure-concurrency tests run in process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+ENV = {**os.environ,
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+       "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+
+
+def run_py(body: str, timeout=420):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       env=ENV, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# distributed rank-k cholupdate (4 forced host devices)
+# ---------------------------------------------------------------------------
+
+def test_sharded_cholupdate_matches_replicated():
+    """Composed (per-slab P·P† psum) and ring-of-rank-1-sweeps variants
+    both reproduce the replicated update/downdate to ≤1e-6 — including a
+    column count that does not divide the axis (zero-pad path)."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.curvature.update import chol_update, chol_downdate
+        from repro.dist import sharded_chol_update, sharded_chol_downdate
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("model",))
+        rng = np.random.default_rng(0)
+        n = 12
+        S = jnp.asarray(rng.normal(size=(n, 64)) / 8.0, jnp.float32)
+        L = jnp.linalg.cholesky(S @ S.T + 0.1 * jnp.eye(n))
+        for k in (3, 4):                      # 3: pad path; 4: even split
+            X = jnp.asarray(rng.normal(size=(n, k)) * 0.1, jnp.float32)
+            up_ref = chol_update(L, X)
+            dn_ref = chol_downdate(up_ref, X)
+            for method in ("composed", "rotations"):
+                up = sharded_chol_update(L, X, mesh=mesh, method=method)
+                err = float(jnp.abs(up - up_ref).max())
+                assert err < 1e-6, (method, k, err)
+                dn = sharded_chol_downdate(up, X, mesh=mesh, method=method)
+                err = float(jnp.abs(dn - dn_ref).max())
+                assert err < 1e-6, (method, k, err)
+                # downdating what was added recovers the original factor
+                err = float(jnp.abs(dn - L).max())
+                assert err < 1e-5, (method, k, err)
+        print("ok")
+    """)
+
+
+def test_sharded_fold_matches_replicated_all_layouts():
+    """The distributed FIFO fold (cols psum → 2k-core split → rank-2k
+    factor refresh → local scatter) equals the replicated
+    ``adapt._fold_window`` on 1d, 2d, and blocked layouts, ≤1e-6 factor
+    error, through a slot wrap."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.operator import BlockedScores
+        from repro.dist import make_sharded_fold
+        from repro.launch.mesh import make_mesh
+        from repro.serve.adapt import _fold_window
+        rng = np.random.default_rng(1)
+        n, m, k = 12, 96, 3
+        S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+        W = S @ S.T
+        L = jnp.linalg.cholesky(W + 0.1 * jnp.eye(n))
+        rows = jnp.asarray(rng.normal(size=(k, m)) / np.sqrt(m), jnp.float32)
+        slot = jnp.asarray(10, jnp.int32)          # 10 + 3 wraps n=12
+
+        mesh1 = make_mesh((4,), ("model",))
+        mesh2 = make_mesh((2, 2), ("data", "model"))
+        widths = [32, 16, 48]
+        cases = [
+            ("1d", mesh1, S, rows),
+            ("2d", mesh2, S, rows),
+            ("blocked", mesh1, BlockedScores.from_dense(S, widths),
+             tuple(rows[:, o:o + w] for o, w in
+                   zip(np.cumsum([0] + widths[:-1]), widths))),
+        ]
+        for layout, mesh, S_in, rows_in in cases:
+            ref = _fold_window(S_in, W, L, slot, rows_in, mode="real")
+            out = make_sharded_fold(mesh, layout=layout)(
+                S_in, W, L, slot, rows_in)
+            ref_S = ref[0].blocks if layout == "blocked" else (ref[0],)
+            out_S = out[0].blocks if layout == "blocked" else (out[0],)
+            for a, b in zip(out_S, ref_S):
+                assert float(jnp.abs(np.asarray(a)
+                                     - np.asarray(b)).max()) == 0.0, layout
+            for a, b, what in zip(out[1:], ref[1:], ("W", "L", "slot")):
+                err = float(jnp.abs(np.asarray(a) - np.asarray(b)).max())
+                assert err < 1e-6, (layout, what, err)
+        print("ok")
+    """)
+
+
+def test_sharded_refresh_and_state_roundtrip():
+    """Sharded full refresh equals the replicated factorization; a
+    ShardedServeState checkpoint round-trips bit-identically and the
+    restored sharded server produces the same solves."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from repro.dist import (AsyncSolveServer, DistSpec,
+                                init_sharded_serve_state, make_sharded_refresh,
+                                restore_sharded_serve_state,
+                                save_sharded_serve_state)
+        from repro.launch.mesh import make_mesh
+        from repro.serve import OnlineAdaptation, TokenBudgetBatcher
+        rng = np.random.default_rng(2)
+        n, m = 8, 64
+        S = jnp.asarray(rng.normal(size=(n, m)) / 8.0, jnp.float32)
+        W = S @ S.T
+        L = jnp.linalg.cholesky(W + 0.2 * jnp.eye(n))
+        mesh = make_mesh((4,), ("model",))
+        Wr, Lr = make_sharded_refresh(mesh, layout="1d")(S, jnp.float32(0.2))
+        assert float(jnp.abs(Wr - W).max()) < 1e-6
+        assert float(jnp.abs(Lr - L).max()) < 1e-6
+
+        spec = DistSpec(mesh, "1d")
+        sstate = init_sharded_serve_state(S, 0.2, spec=spec)
+        adapt = OnlineAdaptation(refresh_every=10 ** 6, drift_frac=None)
+        srv = AsyncSolveServer(sstate, batcher=TokenBudgetBatcher(),
+                               adaptation=adapt)
+        rows = jnp.asarray(rng.normal(size=(2, m)) / 8.0, jnp.float32)
+        srv.submit(jnp.asarray(rng.normal(size=(m,)), jnp.float32),
+                   rows=rows)
+        srv.flush()                          # state has evolved via a fold
+        evolved = srv.sharded_state()
+
+        with tempfile.TemporaryDirectory() as d:
+            save_sharded_serve_state(d, 5, evolved)
+            restored, meta = restore_sharded_serve_state(d, 5, evolved)
+            assert meta["layout"] == "1d"
+            for a, b in zip(jax.tree_util.tree_leaves(evolved.state),
+                            jax.tree_util.tree_leaves(restored.state)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            v2 = jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+            u_live = srv.submit(v2)
+            x_live = srv.flush()[0]
+            srv2 = AsyncSolveServer(restored, batcher=TokenBudgetBatcher())
+            srv2.submit(v2)
+            x_restored = srv2.flush()[0]
+            np.testing.assert_array_equal(np.asarray(x_live.x),
+                                          np.asarray(x_restored.x))
+            srv2.shutdown()
+        srv.shutdown()
+        print("ok")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# AsyncSolveServer vs the eager replicated SolveServer (4 devices)
+# ---------------------------------------------------------------------------
+
+def test_async_replicated_bit_identical_to_eager():
+    """With a replicated window the async worker calls the same jitted
+    solve as the eager server: at matched λ (the resident λ0), responses
+    on an identical trace — including after a ``replace_factors`` window
+    fold — agree bit for bit."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist import AsyncSolveServer
+        from repro.serve import (OnlineAdaptation, SolveServer,
+                                 TokenBudgetBatcher, init_serve_state)
+        rng = np.random.default_rng(3)
+        n, m = 12, 160
+        S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+        vs = [jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+              for _ in range(6)]
+        rows = jnp.asarray(rng.normal(size=(2, m)) / np.sqrt(m), jnp.float32)
+
+        def drive(server):
+            out = {}
+            for i, v in enumerate(vs):      # fold after request 2 exercises
+                uid = server.submit(v, rows=rows if i == 2 else None)
+                out[uid] = i                # the rank-k-maintained factor
+            return {out[r.uid]: np.asarray(r.x) for r in server.flush()}
+
+        mk = lambda: (init_serve_state(S, 0.1),
+                      TokenBudgetBatcher(max_requests=1),
+                      OnlineAdaptation(refresh_every=10 ** 6,
+                                       drift_frac=None))
+        st, b, a = mk()
+        ref = drive(SolveServer(st, batcher=b, adaptation=a))
+        st, b, a = mk()
+        srv = AsyncSolveServer(st, batcher=b, adaptation=a)
+        got = drive(srv)
+        srv.shutdown()
+        assert sorted(got) == sorted(ref)
+        for i in ref:
+            np.testing.assert_array_equal(got[i], ref[i])
+        print("ok")
+    """)
+
+
+def test_async_sharded_server_equivalent_to_eager():
+    """1d- and 2d-sharded async serving reproduces the eager replicated
+    server on an identical request trace (mixed per-request λ, window
+    folds included) to ≤5e-3 — the same bound ``benchmarks/serve.py``
+    gates the cached path with."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist import (AsyncSolveServer, DistSpec,
+                                init_sharded_serve_state)
+        from repro.launch.mesh import make_mesh
+        from repro.serve import (OnlineAdaptation, SolveServer,
+                                 TokenBudgetBatcher, init_serve_state)
+        rng = np.random.default_rng(4)
+        n, m = 12, 160
+        S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+        vs = [jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+              for _ in range(8)]
+        lams = [None, 0.3, None, None, 0.05, None, 0.3, None]
+        rows = jnp.asarray(rng.normal(size=(3, m)) / np.sqrt(m), jnp.float32)
+
+        def drive(server):
+            sub = {}
+            for i, (v, lam) in enumerate(zip(vs, lams)):
+                sub[server.submit(v, damping=lam,
+                                  rows=rows if i in (3, 5) else None)] = i
+            return {sub[r.uid]: np.asarray(r.x) for r in server.flush()}
+
+        adapt = lambda: OnlineAdaptation(refresh_every=10 ** 6,
+                                         drift_frac=None)
+        ref = drive(SolveServer(init_serve_state(S, 0.1),
+                                batcher=TokenBudgetBatcher(max_requests=2),
+                                adaptation=adapt()))
+        mesh1 = make_mesh((4,), ("model",))
+        mesh2 = make_mesh((2, 2), ("data", "model"))
+        for spec in (DistSpec(mesh1, "1d"), DistSpec(mesh2, "2d")):
+            srv = AsyncSolveServer(
+                init_sharded_serve_state(S, 0.1, spec=spec),
+                batcher=TokenBudgetBatcher(max_requests=2),
+                adaptation=adapt())
+            got = drive(srv)
+            srv.shutdown()
+            for i in ref:
+                rel = (np.linalg.norm(got[i] - ref[i])
+                       / np.linalg.norm(ref[i]))
+                assert rel < 5e-3, (spec.layout, i, rel)
+        print("ok")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# concurrency semantics (in process; single device suffices)
+# ---------------------------------------------------------------------------
+
+def _mk(n=12, m=160, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+
+
+def _async_server(S, lam0=0.1, max_requests=4, **kw):
+    from repro.dist import AsyncSolveServer
+    from repro.serve import TokenBudgetBatcher, init_serve_state
+    return AsyncSolveServer(
+        init_serve_state(S, lam0),
+        batcher=TokenBudgetBatcher(max_tokens=10 ** 6,
+                                   max_requests=max_requests), **kw)
+
+
+def test_concurrent_submit_matches_serial():
+    """N producer threads against one server yield the same response set
+    (order-insensitive, keyed by request payload) as serial submission
+    through the eager server."""
+    from repro.serve import SolveServer, TokenBudgetBatcher, init_serve_state
+
+    S = _mk()
+    rng = np.random.default_rng(7)
+    n_threads, per_thread = 4, 6
+    vs = [jnp.asarray(rng.normal(size=(S.shape[1],)), jnp.float32)
+          for _ in range(n_threads * per_thread)]
+
+    serial = SolveServer(init_serve_state(S, 0.1),
+                         batcher=TokenBudgetBatcher(max_requests=4))
+    sub = {serial.submit(v): i for i, v in enumerate(vs)}
+    ref = {sub[r.uid]: np.asarray(r.x) for r in serial.flush()}
+
+    srv = _async_server(S)
+    uid_to_i = {}
+    lock = threading.Lock()
+
+    def producer(t):
+        for j in range(per_thread):
+            i = t * per_thread + j
+            uid = srv.submit(vs[i])
+            with lock:
+                uid_to_i[uid] = i
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    results = srv.flush()
+    srv.shutdown()
+
+    assert sorted(uid_to_i.values()) == list(range(len(vs)))
+    got = {uid_to_i[r.uid]: np.asarray(r.x) for r in results}
+    assert sorted(got) == sorted(ref)
+    for i in ref:       # same solves, microbatch composition-independent
+        np.testing.assert_allclose(got[i], ref[i], rtol=1e-5, atol=1e-6)
+
+
+def test_shutdown_drains_queue():
+    """shutdown(drain=True) serves every queued request before stopping;
+    afterwards submits are refused."""
+    S = _mk()
+    srv = _async_server(S, max_requests=2)
+    vs = [jnp.asarray(np.random.default_rng(i).normal(size=(S.shape[1],)),
+                      jnp.float32) for i in range(5)]
+    uids = [srv.submit(v) for v in vs]
+    srv.shutdown(drain=True)
+    for uid in uids:
+        assert isinstance(srv.result(uid, timeout=0).x, jnp.ndarray)
+    assert srv.metrics.summary()["served"] == 5
+    assert len(srv.batcher) == 0
+    with pytest.raises(RuntimeError):
+        srv.submit(vs[0])
+
+
+def test_shutdown_without_drain_cancels_pending():
+    """drain=False cancels still-queued requests (their result() raises)
+    while the one already in flight completes."""
+    S = _mk()
+    srv = _async_server(S, max_requests=1)
+    gate = threading.Event()
+    orig = srv._dispatch
+
+    def gated(mb):
+        gate.wait(30)
+        return orig(mb)
+
+    srv._dispatch = gated
+    u1 = srv.submit(jnp.ones(S.shape[1]))
+    deadline = time.time() + 30        # wait until the worker holds u1
+    while len(srv.batcher) and time.time() < deadline:
+        time.sleep(0.01)
+    assert len(srv.batcher) == 0
+    u2 = srv.submit(jnp.ones(S.shape[1]))
+
+    stopper = threading.Thread(target=lambda: srv.shutdown(drain=False))
+    stopper.start()
+    time.sleep(0.05)
+    gate.set()
+    stopper.join(30)
+    assert not stopper.is_alive()
+    assert np.all(np.isfinite(np.asarray(srv.result(u1, timeout=5).x)))
+    with pytest.raises(RuntimeError, match="cancelled"):
+        srv.result(u2, timeout=5)
+
+
+def test_flush_does_not_steal_claimed_results():
+    """A concurrent flush() must leave results that a result(uid) caller
+    is already waiting on to that caller."""
+    S = _mk()
+    srv = _async_server(S, max_requests=1)
+    gate = threading.Event()
+    orig = srv._dispatch
+
+    def gated(mb):
+        gate.wait(30)
+        return orig(mb)
+
+    srv._dispatch = gated
+    uid = srv.submit(jnp.ones(S.shape[1]))
+    got = {}
+
+    def waiter():
+        got["res"] = srv.result(uid, timeout=30)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    while uid not in srv._claimed:         # waiter registered its claim
+        time.sleep(0.005)
+    gate.set()
+    flushed = srv.flush(timeout=30)        # must not grab uid's result
+    t.join(30)
+    srv.shutdown()
+    assert flushed == []
+    assert got["res"].uid == uid
+
+
+def test_async_server_does_not_mutate_callers_adaptation():
+    """Binding the sharded fold path happens on a copy — the caller's
+    OnlineAdaptation stays reusable with an eager/replicated server."""
+    from repro.dist import AsyncSolveServer, DistSpec, init_sharded_serve_state
+    from repro.launch.mesh import make_mesh
+    from repro.serve import OnlineAdaptation, init_serve_state
+
+    S = _mk()
+    adapt = OnlineAdaptation(refresh_every=10 ** 6, drift_frac=None)
+    mesh = make_mesh((1,), ("model",))
+    srv = AsyncSolveServer(
+        init_sharded_serve_state(S, 0.1, spec=DistSpec(mesh, "1d")),
+        adaptation=adapt)
+    assert adapt.dist is None                       # caller's untouched
+    assert srv.adaptation is not adapt
+    assert srv.adaptation.dist is not None
+    srv.shutdown()
+    # and the original still folds through the replicated path
+    state = adapt.fold(init_serve_state(S, 0.1),
+                       jnp.zeros((2, S.shape[1]), jnp.float32))
+    assert int(state.stats.adapted) == 2
+
+
+def test_worker_error_surfaces_to_callers():
+    """A failure inside the worker is re-raised on flush/submit instead
+    of hanging the caller."""
+    S = _mk()
+    srv = _async_server(S)
+
+    def boom(mb):
+        raise RuntimeError("injected dispatch failure")
+
+    srv._dispatch = boom
+    srv.submit(jnp.ones(S.shape[1]))
+    with pytest.raises(RuntimeError):
+        srv.flush(timeout=30)
+    with pytest.raises(RuntimeError):
+        srv.submit(jnp.ones(S.shape[1]))
+
+
+def test_build_server_async_wiring():
+    """build_server(async_=True) returns the concurrent server wired to
+    the same handles; layout without async_ is rejected."""
+    from repro import configs
+    from repro.dist import AsyncSolveServer
+    from repro.launch.mesh import make_mesh
+    from repro.launch.trainer import build_server
+
+    cfg = configs.get_smoke("llama3.2-3b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError):
+        build_server(cfg, mesh=mesh, window=4, seq=8, layout="1d")
+    server, h = build_server(cfg, mesh=mesh, window=4, seq=8, damping=1e-2,
+                             max_tokens=64, max_requests=2, async_=True)
+    assert isinstance(server, AsyncSolveServer)
+    try:
+        ex = {k: v[:2] for k, v in h.data.batch_at(1).items()}
+        loss, v, rows = h.score_grads(h.params, ex)
+        uid = server.submit(v, tokens=16, rows=rows)
+        (res,) = server.flush()
+        assert res.uid == uid
+        assert np.isfinite(float(jnp.linalg.norm(res.x)))
+        assert int(server.stats.adapted) == 2
+    finally:
+        server.shutdown()

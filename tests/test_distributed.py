@@ -236,10 +236,7 @@ def test_gradient_compression_collectives():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np, functools
         from jax.sharding import PartitionSpec as P
-        try:
-            from jax import shard_map
-        except ImportError:
-            from jax.experimental.shard_map import shard_map
+        from repro.core.shard_compat import shard_map_compat
         from repro.launch.mesh import make_mesh
         from repro.optim.compress import bf16_allreduce, Int8ErrorFeedback
 
@@ -247,11 +244,11 @@ def test_gradient_compression_collectives():
         g = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)),
                         jnp.float32)
 
-        exact = shard_map(lambda x: jax.lax.psum(x, "data"), mesh=mesh,
-                          in_specs=P("data"), out_specs=P())(g)
+        exact = shard_map_compat(lambda x: jax.lax.psum(x, "data"), mesh=mesh,
+                                 in_specs=P("data"), out_specs=P())(g)
 
-        bf = shard_map(lambda x: bf16_allreduce(x, "data"), mesh=mesh,
-                       in_specs=P("data"), out_specs=P())(g)
+        bf = shard_map_compat(lambda x: bf16_allreduce(x, "data"), mesh=mesh,
+                              in_specs=P("data"), out_specs=P())(g)
         rel = float(jnp.abs(bf - exact).max() / jnp.abs(exact).max())
         assert rel < 2e-2, rel
 
@@ -260,9 +257,8 @@ def test_gradient_compression_collectives():
         def int8_fn(x):
             out, _ = comp.allreduce(x[0], comp.init(x[0]), "data")
             return out
-        from repro.core.distributed import _shard_map
-        q = _shard_map(int8_fn, mesh=mesh, in_specs=P(None),
-                       out_specs=P())(g[None][:, :1])
+        q = shard_map_compat(int8_fn, mesh=mesh, in_specs=P(None),
+                             out_specs=P())(g[None][:, :1])
         # int8 with equal shards: quantization error bounded by scale
         assert jnp.all(jnp.isfinite(q))
         print("ok")

@@ -121,6 +121,55 @@ def test_batcher_bucket_padding_and_lambda_columns():
     np.testing.assert_allclose(np.asarray(mb.V[:, 3]), 0.0)  # zero pad col
 
 
+def test_batcher_empty_queue_boundaries():
+    b = TokenBudgetBatcher(max_tokens=10, max_requests=4)
+    assert len(b) == 0 and b.pending_tokens == 0
+    assert b.next_microbatch() is None
+    assert list(b.drain()) == []
+
+
+def test_batcher_oversize_split_policy_is_explicit():
+    # default policy: an oversized request is split off alone once it
+    # reaches the queue head — mid-queue it must not ride along
+    b = TokenBudgetBatcher(max_tokens=10, max_requests=8, bucket=False,
+                           oversize="split")
+    b.submit(jnp.zeros(6), damping=0.1, tokens=4)
+    b.submit(jnp.zeros(6), damping=0.1, tokens=25)          # oversized
+    b.submit(jnp.zeros(6), damping=0.1, tokens=4)
+    mbs = list(b.drain())
+    assert [mb.k for mb in mbs] == [1, 1, 1]
+    assert [mb.tokens for mb in mbs] == [4, 25, 4]
+
+
+def test_batcher_oversize_reject_policy():
+    b = TokenBudgetBatcher(max_tokens=10, max_requests=8, oversize="reject")
+    b.submit(jnp.zeros(6), damping=0.1, tokens=10)          # exact: fine
+    with pytest.raises(ValueError, match="exceeds"):
+        b.submit(jnp.zeros(6), damping=0.1, tokens=11)
+    assert len(b) == 1                                      # queue untouched
+    b.submit(jnp.zeros(6), damping=0.1, tokens=1)           # still accepts
+    assert len(b) == 2
+    with pytest.raises(ValueError):
+        TokenBudgetBatcher(oversize="nonsense")
+
+
+def test_batcher_exact_budget_boundary():
+    # 6 + 4 lands exactly on the budget and coalesces; 6 + 5 splits
+    b = TokenBudgetBatcher(max_tokens=10, max_requests=8, bucket=False)
+    b.submit(jnp.zeros(6), damping=0.1, tokens=6)
+    b.submit(jnp.zeros(6), damping=0.1, tokens=4)
+    mb = b.next_microbatch()
+    assert mb.k == 2 and mb.tokens == 10
+    b.submit(jnp.zeros(6), damping=0.1, tokens=6)
+    b.submit(jnp.zeros(6), damping=0.1, tokens=5)
+    assert [mb.k for mb in b.drain()] == [1, 1]
+    # a single request at exactly max_tokens is admitted under both policies
+    for policy in ("split", "reject"):
+        b2 = TokenBudgetBatcher(max_tokens=10, oversize=policy)
+        b2.submit(jnp.zeros(6), damping=0.1, tokens=10)
+        assert b2.next_microbatch().k == 1
+
+
 def test_batcher_stacks_blocked_rhs():
     b = TokenBudgetBatcher(max_tokens=100, max_requests=2)
     vb = tuple(jnp.ones(w) for w in WIDTHS)
