@@ -104,6 +104,16 @@ def main(argv=None) -> None:
     serve_dist.run(emit=emit, assert_ratio=not tiny, **sv)
     serve_rows += rows
 
+    from benchmarks import serve_fleet
+    fv = dict(n=64, m=2_000, requests=16, k=4) if tiny \
+        else dict(n=512, m=25_000, requests=48, k=8)
+    rows, emit = _collector({"section": "serve_fleet", **fv})
+    # subprocess workers + real sockets: the >=1.5x 2-worker scaling gate
+    # runs at the real shape on >=4-core hosts; reconciled-agreement
+    # asserts run at every shape, and all rows are trend-guarded.
+    serve_fleet.run(emit=emit, assert_ratio=not tiny, **fv)
+    serve_rows += rows
+
     from benchmarks import roofline
     rows, emit = _collector({"section": "roofline"})
     roofline.run(emit=emit)

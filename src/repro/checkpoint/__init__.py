@@ -1,3 +1,10 @@
 from repro.checkpoint.checkpoint import all_steps, latest_step, restore, save
+from repro.checkpoint.fleet import (
+    latest_fleet_step,
+    load_fleet_manifest,
+    save_fleet_manifest,
+)
 
-__all__ = ["all_steps", "latest_step", "restore", "save"]
+__all__ = ["all_steps", "latest_step", "restore", "save",
+           "latest_fleet_step", "load_fleet_manifest",
+           "save_fleet_manifest"]

@@ -1,0 +1,51 @@
+"""Fleet checkpoint manifest — the dispatcher's system-of-record file.
+
+A fleet checkpoint is per-worker ``ServeState`` checkpoints (each written
+by its worker through ``repro.checkpoint`` — atomic, keep-last-k) plus
+one small JSON manifest the dispatcher writes after collecting every
+worker's ack: routing mode, gossip head, and where each worker's state
+and fold journal landed. Restore reads the manifest to know what fleet
+shape produced the checkpoint before re-seeding workers from the
+per-worker directories.
+
+Same atomicity discipline as the tensor checkpoints: write to ``.tmp``,
+fsync, rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Optional
+
+__all__ = ["save_fleet_manifest", "load_fleet_manifest",
+           "latest_fleet_step"]
+
+_NAME = "fleet_{step:09d}.json"
+
+
+def save_fleet_manifest(ckpt_dir, step: int, manifest: dict
+                        ) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / _NAME.format(step=int(step))
+    tmp = final.with_suffix(".json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    tmp.rename(final)
+    return final
+
+
+def load_fleet_manifest(ckpt_dir, step: int) -> dict:
+    path = pathlib.Path(ckpt_dir) / _NAME.format(step=int(step))
+    return json.loads(path.read_text())
+
+
+def latest_fleet_step(ckpt_dir) -> Optional[int]:
+    d = pathlib.Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.stem.split("_")[1]) for p in d.glob("fleet_*.json"))
+    return steps[-1] if steps else None

@@ -14,11 +14,18 @@ front end on it:
 * ``state``      — ``DistSpec`` (mesh + layout contract) and
   ``ShardedServeState``: window sharded, factor + FIFO metadata
   replicated, same checkpoint round-trip guarantees as ``ServeState``.
+  Uneven windows zero-pad to the mesh at init (``pad_window_to_mesh``;
+  exact no-ops in the Gram and rank-k sweeps) with RHS/solution
+  pad/unpad at the request boundary — m (and n for 2d) need not divide
+  the mesh axes.
 * ``server``     — ``AsyncSolveServer``: thread-safe submits, a worker
   thread that coalesces while the device executes the previous solve
-  (``block_until_ready`` only at the response boundary), and a
+  (``block_until_ready`` only at the response boundary), a
   per-microbatch dispatcher routing uniform-λ batches to the sharded
-  resident-L path and mixed-λ batches to a sharded ``solve_batch``.
+  resident-L path and mixed-λ batches to a sharded ``solve_batch``, an
+  ordered ``apply_fold`` maintenance queue (gossip-replay entry point),
+  and SIGTERM/atexit draining shutdown
+  (``install_shutdown_handlers``).
 
 ``launch.trainer.build_server(mesh=..., layout=..., async_=True)`` and
 ``python -m repro.serve --mesh 1d|2d --async`` wire it end to end;
@@ -37,6 +44,7 @@ from repro.dist.state import (
     DistSpec,
     ShardedServeState,
     init_sharded_serve_state,
+    pad_window_to_mesh,
     place_serve_state,
     restore_sharded_serve_state,
     save_sharded_serve_state,
@@ -45,7 +53,8 @@ from repro.dist.state import (
 __all__ = [
     "AsyncSolveServer", "DistSpec", "ShardedServeState",
     "init_sharded_serve_state", "make_sharded_coalesced_solve",
-    "make_sharded_fold", "make_sharded_refresh", "place_serve_state",
-    "restore_sharded_serve_state", "save_sharded_serve_state",
-    "sharded_chol_downdate", "sharded_chol_update", "sharded_window_cols",
+    "make_sharded_fold", "make_sharded_refresh", "pad_window_to_mesh",
+    "place_serve_state", "restore_sharded_serve_state",
+    "save_sharded_serve_state", "sharded_chol_downdate",
+    "sharded_chol_update", "sharded_window_cols",
 ]

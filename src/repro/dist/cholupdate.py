@@ -171,6 +171,28 @@ def sharded_window_cols(S, rows, *, mesh: Mesh, layout: str = "1d",
     if isinstance(S, LazyBlockedScores):
         S = S.materialize()
 
+    # uneven shapes: zero columns (and, for 2d, zero sample rows) are
+    # exact no-ops in S·rows† and rows·rows† — pad to the mesh, slice the
+    # gathered sample axis back at the end (same rule as dist.state's
+    # pad_window_to_mesh / serve.adapt's pad_to_window_cols)
+    from repro.dist.state import ceil_to, pad_axis
+
+    def _pad(x, axis, mult):
+        return pad_axis(x, axis, ceil_to(x.shape[axis], mult))
+
+    m_mult = mesh.shape[model_axis]
+    n = S.blocks[0].shape[0] if isinstance(S, BlockedScores) else S.shape[0]
+    if isinstance(S, BlockedScores):
+        S = BlockedScores(tuple(_pad(b, 1, m_mult) for b in S.blocks),
+                          names=S.names)
+        rows = tuple(_pad(r, 1, m_mult) for r in rows)
+    else:
+        S = _pad(S, 1, m_mult)
+        rows = tuple(_pad(r, 1, m_mult) for r in rows) \
+            if isinstance(rows, (tuple, list)) else _pad(rows, 1, m_mult)
+    if layout == "2d":
+        S = _pad(S, 0, mesh.shape[data_axis])
+
     if layout == "2d":
         def body(S_loc, rows_loc):
             part, corner = _cols_local((S_loc,), (rows_loc,),
@@ -190,7 +212,8 @@ def sharded_window_cols(S, rows, *, mesh: Mesh, layout: str = "1d",
 
     fn = shard_map_compat(body, mesh=mesh, in_specs=in_specs,
                           out_specs=(P(), P()))
-    return fn(S, rows)
+    cols, corner = fn(S, rows)
+    return cols[:n], corner
 
 
 # ---------------------------------------------------------------------------
@@ -198,10 +221,17 @@ def sharded_window_cols(S, rows, *, mesh: Mesh, layout: str = "1d",
 # ---------------------------------------------------------------------------
 
 def _fold_core(S_blocks, rows_blocks, W, L, slot, *, sum_axes, mode: str,
-               method: str, cols_override=None):
+               method: str, cols_override=None, fifo_n=None):
     """Shared replicated tail of a fold: cross columns → 2k-core split →
-    rank-2k factor refresh → local row scatter indices."""
-    n = W.shape[0]
+    rank-2k factor refresh → local row scatter indices.
+
+    ``fifo_n``: FIFO modulus when it differs from W's size — an uneven
+    2d window stores zero-padded sample rows, but the FIFO must cycle
+    over the *logical* n so pad rows stay zero forever and the padded
+    window remains exactly equivalent to the unpadded one (a modulus of
+    padded n would hold a genuinely different sample set after the
+    first wrap)."""
+    n = W.shape[0] if fifo_n is None else fifo_n
     k = rows_blocks[0].shape[0]
     idx = (slot + jnp.arange(k, dtype=jnp.int32)) % n
     if cols_override is None:
@@ -231,14 +261,15 @@ def _fold_1d(S, W, L, slot, rows, *, model_axis: str, mode: str,
 
 
 def _fold_2d(S, W, L, slot, rows, *, data_axis: str, model_axis: str,
-             mode: str, method: str):
+             mode: str, method: str, fifo_n=None):
     part, corner = _cols_local((S,), (rows,), sum_axes=(model_axis,),
                                mode=mode)
     cols = jax.lax.all_gather(part, data_axis, axis=0, tiled=True)
     idx, Wp, Lp, slot2 = _fold_core((S,), (rows,), W, L, slot,
                                     sum_axes=(model_axis,), mode=mode,
                                     method=method,
-                                    cols_override=(cols, corner))
+                                    cols_override=(cols, corner),
+                                    fifo_n=fifo_n)
     # masked scatter: each device owns window rows [off, off + n_loc)
     n_loc = S.shape[0]
     off = jax.lax.axis_index(data_axis).astype(jnp.int32) * n_loc
@@ -254,17 +285,20 @@ def _fold_2d(S, W, L, slot, rows, *, data_axis: str, model_axis: str,
 
 def make_sharded_fold(mesh: Mesh, *, layout: str = "1d",
                       model_axis: str = "model", data_axis: str = "data",
-                      mode: str = "real", method: str = "composed"):
+                      mode: str = "real", method: str = "composed",
+                      fifo_n=None):
     """Build the jitted distributed FIFO fold
     ``(S, W, L, slot, rows) -> (S', W', L', slot')`` — the shard_map twin
     of ``repro.serve.adapt._fold_window`` for a window laid out like
     ``make_sharded_solver(layout=...)``: S sharded, factor + FIFO slot
-    replicated, one dispatch per fold."""
+    replicated, one dispatch per fold. ``fifo_n`` pins the FIFO modulus
+    to the logical sample count when the 2d layout zero-padded the
+    sample axis (see ``_fold_core``)."""
     _check_layout(layout)
     if layout == "2d":
         body = functools.partial(_fold_2d, data_axis=data_axis,
                                  model_axis=model_axis, mode=mode,
-                                 method=method)
+                                 method=method, fifo_n=fifo_n)
         s_spec = P(data_axis, model_axis)
         rows_spec = P(None, model_axis)
     else:

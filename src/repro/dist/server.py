@@ -188,9 +188,18 @@ class AsyncSolveServer:
         if isinstance(state, ShardedServeState):
             self.state: ServeState = state.state
             self.spec: Optional[DistSpec] = state.spec
+            # logical column widths of an uneven (zero-padded) window:
+            # RHS pads up / solutions slice back at the request boundary
+            self.widths: Optional[tuple] = state.widths if state.padded \
+                else None
+            # logical sample count: the FIFO modulus of a 2d-padded
+            # window (pad rows must never be folded over)
+            self.fifo_n: Optional[int] = state.n_logical
         else:
             self.state = state
             self.spec = None
+            self.widths = None
+            self.fifo_n = None
         self.batcher = batcher if batcher is not None else TokenBudgetBatcher()
         if adaptation is not None and self.spec is not None \
                 and getattr(adaptation, "dist", None) is None:
@@ -200,6 +209,7 @@ class AsyncSolveServer:
             import copy
             adaptation = copy.copy(adaptation)
             adaptation.dist = self.spec
+            adaptation.fifo_n = self.fifo_n
             adaptation._dist_fns = {}
         self.adaptation = adaptation
         self.policy = policy
@@ -215,9 +225,11 @@ class AsyncSolveServer:
         self._pending: Set[int] = set()
         self._claimed: Set[int] = set()    # uids a result() caller waits on
         self._cancelled: Set[int] = set()
+        self._maintenance: List[tuple] = []   # queued apply_fold events
         self._error: Optional[BaseException] = None
         self._stopping = False
         self._drain_on_stop = True
+        self._handlers_installed = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="async-solve-server")
         self._worker.start()
@@ -261,6 +273,25 @@ class AsyncSolveServer:
             finally:
                 self._claimed.discard(uid)
 
+    def apply_fold(self, rows, *, slots=None, record: bool = True) -> int:
+        """Enqueue one (possibly remote) fold event for the worker thread
+        — the gossip-replay entry point (``repro.fleet``). Thread-safe;
+        events apply strictly in submission order, between microbatches,
+        through the same ``OnlineAdaptation.fold`` as request-carried
+        rows (so sharded windows route through the sharded cholupdate).
+        ``flush()`` doubles as the application barrier. Returns the queue
+        position."""
+        if self.adaptation is None:
+            raise RuntimeError("apply_fold needs an OnlineAdaptation")
+        with self._cv:
+            self._raise_if_failed()
+            if self._stopping:
+                raise RuntimeError("server is shut down")
+            self._maintenance.append((rows, slots, record))
+            pos = len(self._maintenance)
+            self._cv.notify_all()
+        return pos
+
     def flush(self, *, damping_state=None,
               timeout: Optional[float] = None) -> List[SolveResult]:
         """Block until every request submitted so far is served; return
@@ -278,12 +309,14 @@ class AsyncSolveServer:
             self.damping_state = damping_state
         with self._cv:
             ok = self._cv.wait_for(
-                lambda: self._error is not None or not self._pending,
+                lambda: self._error is not None
+                or (not self._pending and not self._maintenance),
                 timeout)
             self._raise_if_failed()
             if not ok:
                 raise TimeoutError(
-                    f"{len(self._pending)} request(s) still pending after "
+                    f"{len(self._pending)} request(s) / "
+                    f"{len(self._maintenance)} fold(s) still pending after "
                     f"{timeout}s")
             out = [self._results.pop(u)
                    for u in sorted(set(self._results) - self._claimed)]
@@ -302,10 +335,46 @@ class AsyncSolveServer:
                     self._pending.discard(req.uid)
                     self._cancelled.add(req.uid)
                 self.batcher._queue.clear()
+                self._maintenance.clear()
             self._cv.notify_all()
         self._worker.join(timeout)
         with self._cv:
             self._raise_if_failed()
+
+    def install_shutdown_handlers(self, *, signals=None) -> None:
+        """Drain on process exit: registers an atexit hook and signal
+        handlers (default SIGTERM) that run ``shutdown(drain=True)`` —
+        queued requests are served, gossiped folds applied, and the
+        worker thread joined instead of leaked. Call from the main thread
+        (CPython restricts ``signal.signal`` to it); the handler then
+        chains to any previously installed handler, or exits 0 — the
+        clean-drain contract fleet workers rely on."""
+        import atexit
+        import signal as _signal
+        if self._handlers_installed:
+            return
+        self._handlers_installed = True
+        atexit.register(self._shutdown_quietly)
+        for sig in (signals if signals is not None else (_signal.SIGTERM,)):
+            prev = _signal.getsignal(sig)
+
+            def _handler(signum, frame, _prev=prev):
+                self._shutdown_quietly()
+                if callable(_prev) and _prev not in (_signal.SIG_IGN,
+                                                     _signal.SIG_DFL):
+                    _prev(signum, frame)
+                else:
+                    raise SystemExit(0)
+
+            _signal.signal(sig, _handler)
+
+    def _shutdown_quietly(self) -> None:
+        """Idempotent draining shutdown that never raises (atexit/signal
+        context); worker errors were already surfaced to callers."""
+        try:
+            self.shutdown(drain=True)
+        except BaseException:
+            pass
 
     def __enter__(self) -> "AsyncSolveServer":
         return self
@@ -325,7 +394,8 @@ class AsyncSolveServer:
 
     def sharded_state(self) -> Optional[ShardedServeState]:
         return None if self.spec is None \
-            else ShardedServeState(self.state, self.spec)
+            else ShardedServeState(self.state, self.spec, self.widths,
+                                   self.fifo_n)
 
     def _raise_if_failed(self) -> None:
         if self._error is not None:
@@ -339,11 +409,24 @@ class AsyncSolveServer:
                 mb = None
                 with self._cv:
                     while (len(self.batcher) == 0 and not self._stopping
-                           and inflight is None):
+                           and inflight is None and not self._maintenance):
                         self._cv.wait()
+                    maint = self._maintenance[:]
                     if len(self.batcher):
                         mb = self.batcher.next_microbatch()
-                    stop_now = self._stopping and len(self.batcher) == 0
+                    stop_now = (self._stopping and len(self.batcher) == 0
+                                and not maint)
+                if maint:
+                    # gossiped folds apply in order, between microbatches
+                    # — same boundary as request-carried rows; the next
+                    # dispatch sees the reconciled window
+                    for rows, slots, record in maint:
+                        self.state = self.adaptation.fold(
+                            self.state, rows, slots=slots, record=record)
+                    self._maybe_refresh()
+                    with self._cv:
+                        del self._maintenance[:len(maint)]
+                        self._cv.notify_all()
                 if mb is not None:
                     handle = self._dispatch(mb)
                     if self.adaptation is not None:
@@ -393,11 +476,29 @@ class AsyncSolveServer:
                 self.spec, mode=serve_mode(st), jitter=self.jitter,
                 uniform=uniform, monitor=monitor, refactorize=refactorize)
             self._solve_cache[key] = fn
-        return fn(st.S, st.W, st.L, st.lam0, mb.V, mb.dampings)
+        return fn(st.S, st.W, st.L, st.lam0, self._pad_rhs(mb.V),
+                  mb.dampings)
+
+    def _pad_rhs(self, V):
+        """Zero-pad stacked RHS columns to the padded window widths (an
+        uneven window carries zero pad columns — exact no-ops)."""
+        if self.widths is None:
+            return V
+        from repro.serve.adapt import pad_to_window_cols
+        return pad_to_window_cols(self.state.S, V, axis=0)
+
+    def _unpad_x(self, x):
+        """Slice solutions back to the logical parameter count."""
+        if self.widths is None:
+            return x
+        if isinstance(x, (tuple, list)):
+            return tuple(xb[:w] for xb, w in zip(x, self.widths))
+        return x[:self.widths[0]]
 
     def _finalize(self, mb: Microbatch, handle: tuple) -> List[SolveResult]:
         """The response boundary: the only block_until_ready."""
         x, resid = handle
+        x = self._unpad_x(x)
         jax.block_until_ready(x)
         t_done = self.clock()
         st = self.state

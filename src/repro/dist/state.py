@@ -32,9 +32,22 @@ from repro.serve.state import (
     serve_mode,
 )
 
-__all__ = ["DistSpec", "ShardedServeState", "init_sharded_serve_state",
+__all__ = ["DistSpec", "ShardedServeState", "ceil_to",
+           "init_sharded_serve_state", "pad_axis", "pad_window_to_mesh",
            "place_serve_state", "save_sharded_serve_state",
            "restore_sharded_serve_state"]
+
+
+def ceil_to(x: int, mult: int) -> int:
+    return -(-int(x) // int(mult)) * int(mult) if mult > 1 else int(x)
+
+
+def pad_axis(x, axis: int, size: int):
+    if x.shape[axis] == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, size - x.shape[axis])
+    return jax.numpy.pad(x, pad)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,23 +88,97 @@ class DistSpec:
     def sharding(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
 
+    # -- uneven-shard padding ----------------------------------------------
+    @property
+    def m_mult(self) -> int:
+        """The window's parameter axis must be a multiple of this to lay
+        out evenly; zero columns make up the difference (exact no-ops in
+        the Gram and the rank-k sweeps)."""
+        return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def n_mult(self) -> int:
+        """Sample-axis multiple (2d layout only; 1 otherwise)."""
+        return int(self.mesh.shape[self.data_axis]) \
+            if self.layout == "2d" else 1
+
+    def padded_m(self, m: int) -> int:
+        return ceil_to(m, self.m_mult)
+
+    def padded_n(self, n: int) -> int:
+        return ceil_to(n, self.n_mult)
+
+
+def pad_window_to_mesh(S, spec: DistSpec):
+    """Zero-pad a score window so its axes divide ``spec``'s mesh.
+
+    Parameter columns pad to a multiple of the model-axis size (per block
+    for a blocked window); for the 2d layout the sample axis additionally
+    pads to the data-axis size — the pad rows are zero *samples*, so the
+    padded window is exactly equivalent: zero columns/rows contribute
+    nothing to the Gram, the factor block-structure keeps solves exact,
+    and the FIFO keeps cycling over the *logical* n (``n_logical`` on
+    the returned state → ``fifo_n`` on the fold path) so pad rows are
+    never folded over and stay zero forever.
+
+    Returns ``(S_padded, widths)`` where ``widths`` is the tuple of
+    logical per-block column counts ((m,) for dense) the serving tier
+    uses to pad incoming RHS columns and un-pad outgoing solutions.
+    """
+    if is_blocked(S):
+        widths = tuple(int(b.shape[1]) for b in S.blocks)
+        blocks = tuple(pad_axis(b, 1, spec.padded_m(b.shape[1]))
+                       for b in S.blocks)
+        if all(b is o for b, o in zip(blocks, S.blocks)):
+            return S, widths
+        return type(S)(blocks, names=S.names), widths
+    widths = (int(S.shape[1]),)
+    S = pad_axis(S, 1, spec.padded_m(S.shape[1]))
+    S = pad_axis(S, 0, spec.padded_n(S.shape[0]))
+    return S, widths
+
 
 class ShardedServeState:
     """A ``ServeState`` paired with its ``DistSpec`` placement.
 
     Not itself a pytree — the mesh isn't data. Field reads delegate to
     the wrapped state so server code can treat both uniformly.
+
+    ``widths``: logical per-block column counts of the window before any
+    uneven-shard zero padding ((m,) for dense; None means the stored
+    shapes are the logical shapes). The async server pads incoming RHS
+    columns and un-pads outgoing solutions against these.
+
+    ``n_logical``: sample count before 2d sample-axis padding — the FIFO
+    modulus window folds must cycle over so pad rows stay zero forever
+    (None: the stored sample count is the logical one).
     """
 
-    def __init__(self, state: ServeState, spec: DistSpec):
+    def __init__(self, state: ServeState, spec: DistSpec,
+                 widths: Optional[tuple] = None,
+                 n_logical: Optional[int] = None):
         self.state = state
         self.spec = spec
+        self.widths = None if widths is None \
+            else tuple(int(w) for w in widths)
+        self.n_logical = None if n_logical is None else int(n_logical)
 
     def __getattr__(self, name):
         return getattr(self.state, name)
 
     def _replace(self, **kw) -> "ShardedServeState":
-        return ShardedServeState(self.state._replace(**kw), self.spec)
+        return ShardedServeState(self.state._replace(**kw), self.spec,
+                                 self.widths, self.n_logical)
+
+    @property
+    def padded(self) -> bool:
+        """True when the stored window carries zero pad columns."""
+        if self.widths is None:
+            return False
+        S = self.state.S
+        blocks = S.blocks if is_blocked(S) else (S,)
+        return any(int(b.shape[1]) != w
+                   for b, w in zip(blocks, self.widths))
 
 
 def place_serve_state(state: ServeState, spec: DistSpec) -> ServeState:
@@ -112,15 +199,24 @@ def init_sharded_serve_state(S, damping, *, spec: DistSpec,
                              ) -> ShardedServeState:
     """Build the resident state and lay it out on the mesh. The one-time
     seeding Gram runs replicated (``init_serve_state``); every later
-    refresh is the sharded per-slab psum (``make_sharded_refresh``)."""
+    refresh is the sharded per-slab psum (``make_sharded_refresh``).
+
+    The window need not divide the mesh: ``pad_window_to_mesh`` zero-pads
+    the parameter columns (and, for 2d, the sample rows) up front, the
+    logical widths ride on the returned state, and the request path pads
+    RHS / un-pads solutions against them."""
     if spec.layout == "blocked" and not is_blocked(S):
         raise ValueError("layout='blocked' needs a BlockedScores window; "
                          "use layout='1d' for dense S")
     if spec.layout != "blocked" and is_blocked(S):
         raise ValueError(f"layout={spec.layout!r} needs a dense window; "
                          "use layout='blocked' for BlockedScores")
+    n0 = int(S.blocks[0].shape[0] if is_blocked(S) else S.shape[0])
+    S, widths = pad_window_to_mesh(S, spec)
     state = init_serve_state(S, damping, jitter=jitter, mode=mode)
-    return ShardedServeState(place_serve_state(state, spec), spec)
+    n_logical = n0 if int(state.W.shape[0]) != n0 else None
+    return ShardedServeState(place_serve_state(state, spec), spec, widths,
+                             n_logical)
 
 
 def save_sharded_serve_state(ckpt_dir, step: int, state: ShardedServeState,
@@ -139,7 +235,8 @@ def restore_sharded_serve_state(ckpt_dir, step: int, like: ShardedServeState,
     spec — elastic re-meshing picks a new one). Returns (state, meta)."""
     spec = like.spec if spec is None else spec
     restored, meta = restore_serve_state(ckpt_dir, step, like.state)
-    return ShardedServeState(place_serve_state(restored, spec), spec), meta
+    return ShardedServeState(place_serve_state(restored, spec), spec,
+                             like.widths, like.n_logical), meta
 
 
 def sharded_serve_mode(state) -> str:

@@ -1,0 +1,46 @@
+"""Fleet serving — a multi-process front tier over the curvature service.
+
+``repro.serve`` made the damped-Fisher factorization a served asset;
+``repro.dist`` sharded it over one process's mesh. This package adds the
+layer above: N serving *processes*, each holding a window replica (eager
+or async, replicated or sharded), behind a ``Dispatcher`` that owns no
+mesh — it routes ``SolveRequest``s over localhost sockets and reconciles
+the replicas' online windows by gossiping fold *events*.
+
+* ``wire``       — length-prefixed msgpack/npz frames; ``Channel`` over
+  any stream socket; the only coupling between fleet processes.
+* ``gossip``     — ``GossipLog``: the dispatcher-owned total order of
+  fold events (global FIFO slots allocated at admission), and
+  ``ReplayBuffer``: strictly ordered ingestion at each replica. Replicas
+  exchange the rank-k fold columns — O(k·m) — never factors or Grams;
+  each replays them through the same ``replace_factors`` path, so
+  identical initial windows + identical order ⇒ bit-identical windows.
+* ``worker``     — ``FleetWorker``: the frame loop around one replica
+  (inline-seeded from the dispatcher or self-built via
+  ``launch.trainer.build_server``); drains on SIGTERM.
+* ``dispatcher`` — ``Dispatcher``: routing (``round_robin``,
+  ``least_loaded`` off streamed heartbeats, ``by_adapter`` sticky
+  hashing), failure rerouting with ledger replay, the ``reconcile()``
+  barrier, fleet checkpoint (per-worker ServeState + manifest), draining
+  shutdown; ``launch_fleet`` spawns the subprocess workers.
+
+``launch.trainer.build_fleet(...)`` wires a config end to end;
+``python -m repro.serve --fleet N --route ...`` serves with it;
+``benchmarks/serve_fleet.py`` gates 2-worker scaling and cross-replica
+agreement.
+"""
+from repro.fleet.dispatcher import (
+    Dispatcher,
+    ROUTES,
+    WorkerHandle,
+    launch_fleet,
+)
+from repro.fleet.gossip import GossipLog, ReplayBuffer
+from repro.fleet.wire import Channel, Message, WireError, connect, listen
+from repro.fleet.worker import FleetWorker
+
+__all__ = [
+    "Channel", "Dispatcher", "FleetWorker", "GossipLog", "Message",
+    "ROUTES", "ReplayBuffer", "WireError", "WorkerHandle", "connect",
+    "launch_fleet", "listen",
+]

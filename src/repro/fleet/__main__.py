@@ -1,0 +1,10 @@
+"""``python -m repro.fleet`` — run one fleet worker process.
+
+(The dispatcher spawns these; see ``repro.fleet.launch_fleet``. A
+dedicated ``__main__`` avoids runpy re-executing ``worker`` after the
+package import already loaded it.)
+"""
+from repro.fleet.worker import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Wire protocol for the fleet tier — length-prefixed msgpack/npz frames.
+
+Everything the dispatcher and its workers exchange is one ``Message``: a
+``kind`` tag, a small metadata dict, and zero or more numpy arrays. On
+the wire that is a single length-prefixed frame::
+
+    u32 frame_len | u32 header_len | codec byte | header | npz body
+
+* **header** — the metadata dict, msgpack-encoded when msgpack is
+  available (the codec byte says which; a pure-stdlib JSON fallback keeps
+  the protocol dependency-free, and both ends negotiate per frame, so
+  mixed installations interoperate).
+* **body** — the arrays as one uncompressed ``.npz`` (``numpy.savez``),
+  loaded with ``allow_pickle=False``: no code, only data, crosses the
+  socket. Omitted entirely for array-free frames (acks, pings).
+
+``Channel`` wraps any connected stream socket (TCP or a ``socketpair``)
+with blocking ``send``/``recv``, a ``poll`` for batch-draining readers,
+and big-frame safety caps. Blocked (per-layer tuple) arrays flatten to
+``name.0, name.1, ...`` entries via ``put_blocks``/``get_blocks`` so the
+frame format stays a flat dict.
+
+Frames are the *only* coupling between fleet processes — workers and
+dispatcher share no memory, which is what makes the tier's failure model
+(kill a worker, replay its in-flight requests elsewhere) tractable.
+"""
+from __future__ import annotations
+
+import io
+import json
+import socket
+import struct
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+try:                              # optional: stdlib JSON is the fallback
+    import msgpack as _msgpack
+except ImportError:               # pragma: no cover - env without msgpack
+    _msgpack = None
+
+__all__ = ["Message", "Channel", "WireError", "put_blocks", "get_blocks",
+           "connect", "listen"]
+
+_LEN = struct.Struct(">I")
+MAX_FRAME = 1 << 31               # hard cap: refuse absurd frames early
+
+
+class WireError(ConnectionError):
+    """Peer closed or the stream is corrupt — callers treat the channel
+    as dead (the dispatcher's failure-rerouting trigger)."""
+
+
+class Message(NamedTuple):
+    kind: str
+    meta: Dict[str, Any]
+    arrays: Dict[str, np.ndarray]
+
+
+def _encode_header(meta: Dict[str, Any]) -> bytes:
+    if _msgpack is not None:
+        return b"M" + _msgpack.packb(meta, use_bin_type=True)
+    return b"J" + json.dumps(meta).encode("utf-8")
+
+
+def _decode_header(raw: bytes) -> Dict[str, Any]:
+    codec, body = raw[:1], raw[1:]
+    if codec == b"M":
+        if _msgpack is None:
+            raise WireError("peer sent a msgpack header but msgpack is "
+                            "not installed here; reinstall or let the "
+                            "peer fall back to JSON")
+        return _msgpack.unpackb(body, raw=False)
+    if codec == b"J":
+        return json.loads(body.decode("utf-8"))
+    raise WireError(f"unknown header codec {codec!r}")
+
+
+def _encode_arrays(arrays: Dict[str, np.ndarray]) -> bytes:
+    if not arrays:
+        return b""
+    buf = io.BytesIO()
+    np.savez(buf, **{k: np.asarray(v) for k, v in arrays.items()})
+    return buf.getvalue()
+
+
+def _decode_arrays(raw: bytes) -> Dict[str, np.ndarray]:
+    if not raw:
+        return {}
+    with np.load(io.BytesIO(raw), allow_pickle=False) as z:
+        return {k: z[k] for k in z.files}
+
+
+def put_blocks(arrays: Dict[str, np.ndarray], meta: Dict[str, Any],
+               name: str, value) -> None:
+    """Store a dense array or a tuple of per-layer blocks under ``name``
+    (blocks become ``name.i``; ``meta[name_blocks]`` records the count)."""
+    if value is None:
+        return
+    if isinstance(value, (tuple, list)):
+        meta[f"{name}_blocks"] = len(value)
+        for i, b in enumerate(value):
+            arrays[f"{name}.{i}"] = np.asarray(b)
+    else:
+        arrays[name] = np.asarray(value)
+
+
+def get_blocks(msg: Message, name: str):
+    """Inverse of ``put_blocks`` (None when absent)."""
+    nb = msg.meta.get(f"{name}_blocks")
+    if nb is not None:
+        return tuple(msg.arrays[f"{name}.{i}"] for i in range(nb))
+    return msg.arrays.get(name)
+
+
+class Channel:
+    """One duplex frame stream over a connected socket."""
+
+    def __init__(self, sock: socket.socket, *, name: str = ""):
+        self.sock = sock
+        self.name = name
+        self._closed = False
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass                  # socketpair / AF_UNIX: no Nagle to kill
+
+    # -- sending -----------------------------------------------------------
+    def send(self, kind: str, meta: Optional[Dict[str, Any]] = None,
+             arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
+        header = _encode_header({"kind": kind, **(meta or {})})
+        body = _encode_arrays(arrays or {})
+        frame = _LEN.pack(4 + len(header) + len(body)) \
+            + _LEN.pack(len(header)) + header + body
+        try:
+            self.sock.sendall(frame)
+        except (OSError, ValueError) as e:
+            raise WireError(f"send({kind}) on dead channel "
+                            f"{self.name or id(self)}: {e}") from e
+
+    # -- receiving ---------------------------------------------------------
+    def _recv_exact(self, count: int) -> bytes:
+        chunks = []
+        while count:
+            try:
+                chunk = self.sock.recv(min(count, 1 << 20))
+            except (OSError, ValueError) as e:
+                raise WireError(f"recv on dead channel "
+                                f"{self.name or id(self)}: {e}") from e
+            if not chunk:
+                raise WireError(f"peer closed channel "
+                                f"{self.name or id(self)}")
+            chunks.append(chunk)
+            count -= len(chunk)
+        return b"".join(chunks)
+
+    def recv(self, timeout: Optional[float] = None) -> Message:
+        """Block for the next frame (raises ``socket.timeout`` after
+        ``timeout`` seconds, ``WireError`` on EOF/corruption)."""
+        prev = self.sock.gettimeout()
+        try:
+            self.sock.settimeout(timeout)
+            (frame_len,) = _LEN.unpack(self._recv_exact(4))
+            if not 4 <= frame_len <= MAX_FRAME:
+                raise WireError(f"corrupt frame length {frame_len}")
+            payload = self._recv_exact(frame_len)
+        finally:
+            try:
+                self.sock.settimeout(prev)
+            except OSError:
+                pass
+        (header_len,) = _LEN.unpack(payload[:4])
+        if not 1 <= header_len <= frame_len - 4:
+            raise WireError(f"corrupt header length {header_len}")
+        meta = _decode_header(payload[4:4 + header_len])
+        arrays = _decode_arrays(payload[4 + header_len:])
+        kind = meta.pop("kind", None)
+        if not isinstance(kind, str):
+            raise WireError("frame header carries no kind")
+        return Message(kind=kind, meta=meta, arrays=arrays)
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        """True when a frame (or EOF) is ready to read without blocking."""
+        import select
+        if self._closed:
+            return False
+        r, _, _ = select.select([self.sock], [], [], timeout)
+        return bool(r)
+
+    def fileno(self) -> int:
+        return self.sock.fileno()
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            try:
+                self.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            self.sock.close()
+
+
+def listen(host: str = "127.0.0.1", port: int = 0
+           ) -> Tuple[socket.socket, int]:
+    """Bind a listener (port 0 → ephemeral); returns (socket, port)."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind((host, port))
+    srv.listen(64)
+    return srv, srv.getsockname()[1]
+
+
+def connect(host: str, port: int, *, timeout: float = 30.0,
+            name: str = "") -> Channel:
+    sock = socket.create_connection((host, port), timeout=timeout)
+    sock.settimeout(None)
+    return Channel(sock, name=name)

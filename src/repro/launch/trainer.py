@@ -28,7 +28,8 @@ from repro.launch.supervisor import SupervisorConfig, run_supervised
 from repro.models.api import get_api
 from repro.optim import AdamW, NaturalGradient, warmup_cosine
 
-__all__ = ["train_main", "build_trainer", "build_server", "ServeHandles"]
+__all__ = ["train_main", "build_trainer", "build_server", "build_fleet",
+           "ServeHandles"]
 
 
 def build_trainer(cfg, *, mesh, optimizer_name: str, lr: float,
@@ -180,6 +181,34 @@ class ServeHandles:
         return jnp.concatenate(out, axis=1)
 
 
+def _build_serve_front(cfg, *, mesh, window: int, seq: int,
+                       score_chunk=None, seed: int = 0):
+    """The model-side half of serving: api + params + jitted score-grad
+    pass + seeded window. Shared by ``build_server`` (which pairs it with
+    an in-process solve server) and ``build_fleet`` (which ships the
+    window to worker processes and keeps only the traffic-side model)."""
+    from jax.flatten_util import ravel_pytree
+
+    api = get_api(cfg)
+    data = SyntheticLM(cfg, batch=window, seq=seq, seed=seed)
+    params = api.init_params(jax.random.key(seed))
+    _, unravel = ravel_pytree(params)
+
+    sample = data.batch_at(0)
+    specs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), sample)
+    pspecs = api.param_specs()
+    # request rows carry the window's 1/√n normalization so folds are
+    # exchangeable with the seeded rows
+    jscore, _ = T.jit_score_grads(api, mesh, param_specs=pspecs,
+                                  input_specs=specs, score_chunk=score_chunk,
+                                  scale=1.0 / np.sqrt(window))
+    _, _, S0 = jscore(params, sample)
+    handles = ServeHandles(api=api, params=params, data=data,
+                           score_grads=jscore, unravel=unravel, mesh=mesh)
+    return handles, S0
+
+
 def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                  max_tokens: int = 4096, max_requests: int = 8,
                  refresh_every: int = 64, drift_tol=None, drift_frac=0.25,
@@ -203,27 +232,11 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
     solve and the distributed cholupdate. A sharded window requires the
     async server (the eager one is the replicated baseline).
     """
-    from jax.flatten_util import ravel_pytree
-
     from repro.serve import (OnlineAdaptation, SolveServer,
                              TokenBudgetBatcher, init_serve_state)
 
-    api = get_api(cfg)
-    data = SyntheticLM(cfg, batch=window, seq=seq, seed=seed)
-    params = api.init_params(jax.random.key(seed))
-    _, unravel = ravel_pytree(params)
-
-    sample = data.batch_at(0)
-    specs = jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), sample)
-    pspecs = api.param_specs()
-    # request rows carry the window's 1/√n normalization so folds are
-    # exchangeable with the seeded rows
-    jscore, _ = T.jit_score_grads(api, mesh, param_specs=pspecs,
-                                  input_specs=specs, score_chunk=score_chunk,
-                                  scale=1.0 / np.sqrt(window))
-
-    _, _, S0 = jscore(params, sample)
+    handles, S0 = _build_serve_front(cfg, mesh=mesh, window=window, seq=seq,
+                                     score_chunk=score_chunk, seed=seed)
     adaptation = OnlineAdaptation(refresh_every=refresh_every,
                                   drift_tol=drift_tol, drift_frac=drift_frac,
                                   jitter=jitter)
@@ -248,9 +261,56 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
         server = SolveServer(init_serve_state(S0, damping, jitter=jitter),
                              batcher=batcher, adaptation=adaptation,
                              policy=policy, jitter=jitter)
-    handles = ServeHandles(api=api, params=params, data=data,
-                           score_grads=jscore, unravel=unravel, mesh=mesh)
     return server, handles
+
+
+def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
+                reconcile: bool = True, window: int, seq: int,
+                damping: float = 1e-3, max_tokens: int = 4096,
+                max_requests: int = 8, refresh_every: int = 64,
+                drift_tol=None, drift_frac=0.25, jitter: float = 0.0,
+                score_chunk=None, policy: str = "cached",
+                async_workers: bool = False, worker_layout=None,
+                seed: int = 0):
+    """Config → model → seeded window → N-process serving fleet.
+
+    The fleet twin of ``build_server``: the model (score-grad pass,
+    decode, live params) stays on this side as the traffic source, while
+    the resident curvature window is shipped — as bytes, over the init
+    frame — to ``n_workers`` local worker processes that each factorize
+    the *identical* window (the precondition for gossip convergence).
+    Returns ``(dispatcher, handles)``; drive it exactly like a server
+    (``submit``/``flush``), plus ``reconcile()``/``probe()``/
+    ``checkpoint()``.
+
+    ``route``: "round_robin" | "least_loaded" | "by_adapter" (pass
+    ``adapter=`` at submit for sticky routing). ``reconcile=True`` gossips
+    every request's fold columns fleet-wide through the dispatcher's
+    ``GossipLog`` so all windows converge; ``False`` partitions folds —
+    each worker's window sees only its own requests' rows (meaningful
+    under ``by_adapter``, where each adapter's curvature then lives on
+    its sticky worker). ``async_workers``/``worker_layout`` select the
+    inner server flavour each worker wraps (eager replicated by default;
+    async; async + window sharded over the worker's own devices).
+    """
+    from repro.fleet import launch_fleet
+    from repro.fleet.wire import put_blocks
+
+    handles, S0 = _build_serve_front(cfg, mesh=mesh, window=window, seq=seq,
+                                     score_chunk=score_chunk, seed=seed)
+    meta = {"mode": "inline", "damping": float(damping),
+            "jitter": float(jitter), "policy": policy,
+            "max_tokens": int(max_tokens), "max_requests": int(max_requests),
+            "refresh_every": int(refresh_every), "drift_tol": drift_tol,
+            "drift_frac": drift_frac, "async": bool(async_workers),
+            "layout": worker_layout}
+    arrays = {}
+    from repro.core.operator import is_blocked
+    put_blocks(arrays, meta, "S0",
+               tuple(S0.blocks) if is_blocked(S0) else S0)
+    dispatcher = launch_fleet(n_workers, init_meta=meta, init_arrays=arrays,
+                              route=route, gossip=reconcile)
+    return dispatcher, handles
 
 
 def train_main(argv=None):

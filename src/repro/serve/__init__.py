@@ -14,6 +14,10 @@ artifact (``repro.curvature``); this package turns it into a *service*:
   window via the rank-k ``replace_factors`` algebra; staleness bounded by
   the same age/drift thresholds as the training-side ``CurvatureCache``
   (drift threshold autotuned from the damping schedule by default).
+* ``journal``  — ``FoldEvent``/``FoldJournal``: every applied fold as a
+  replayable, serializable event — replaying a journal on the same
+  initial state reproduces the factor bit for bit (what the fleet tier
+  gossips; ``repro.fleet``).
 * ``state``    — ``ServeState``: the whole resident asset as one
   checkpointable pytree (bit-identical solves across restarts).
 * ``main``     — ``serve_main``: the CLI serving loop (decode + online
@@ -25,6 +29,7 @@ refactorize-per-request baseline with p50/p99 latency tracking.
 """
 from repro.serve.adapt import OnlineAdaptation
 from repro.serve.batcher import Microbatch, SolveRequest, TokenBudgetBatcher
+from repro.serve.journal import FoldEvent, FoldJournal
 from repro.serve.server import ServerMetrics, SolveResult, SolveServer
 from repro.serve.state import (
     ServeState,
@@ -38,6 +43,7 @@ from repro.serve.state import (
 
 __all__ = [
     "OnlineAdaptation", "Microbatch", "SolveRequest", "TokenBudgetBatcher",
+    "FoldEvent", "FoldJournal",
     "ServerMetrics", "SolveResult", "SolveServer", "ServeState", "ServeStats",
     "as_factorization", "init_serve_state", "restore_serve_state",
     "save_serve_state", "serve_mode",

@@ -20,6 +20,14 @@ a full refactorization when the factor's age exceeds ``refresh_every``
 microbatches or the last monitored solve residual exceeds the drift
 threshold — static ``drift_tol`` if set, else the ``drift_frac``
 autotune against the damping schedule (``repro.core.auto_drift_tol``).
+
+Folds are also *events*: with a ``journal`` attached (or an ``on_fold``
+callback) every applied fold is emitted as a ``FoldEvent`` — the rows
+plus the FIFO slots they landed in — and ``fold(..., slots=...)`` replays
+such an event, verifying the slots against the local FIFO cursor so a
+replica ingesting a remote log (``repro.fleet``) can only apply it in
+order. Replaying the same events onto the same initial state reproduces
+the origin's factor bit for bit (``FoldJournal.replay``).
 """
 from __future__ import annotations
 
@@ -35,7 +43,32 @@ from repro.core.solvers import chol_factorize
 from repro.curvature.update import chol_downdate, chol_update, replace_factors
 from repro.serve.state import ServeState, serve_mode
 
-__all__ = ["OnlineAdaptation"]
+__all__ = ["OnlineAdaptation", "pad_to_window_cols"]
+
+
+def pad_to_window_cols(S, values, *, axis: int):
+    """Zero-pad ``values`` (dense array or per-block tuple) along ``axis``
+    up to the resident window's column widths — the single place the
+    pad-to-mesh rule is applied to incoming data. A sharded window may
+    carry zero pad columns (``repro.dist`` uneven-shard support); zeros
+    are exact no-ops in every S pass, so fold rows (axis=1: (k, m)) and
+    stacked RHS (axis=0: (m, k)) pad here and stay exact."""
+    S_blocks = S.blocks if is_blocked(S) else (S,)
+    val_blocks = tuple(values) if isinstance(values, (tuple, list)) \
+        else (values,)
+
+    def pad(v, width):
+        if v.shape[axis] >= width:
+            return v
+        spec = [(0, 0)] * v.ndim
+        spec[axis] = (0, width - v.shape[axis])
+        return jnp.pad(v, spec)
+
+    padded = tuple(pad(v, b.shape[1])
+                   for b, v in zip(S_blocks, val_blocks))
+    if isinstance(values, (tuple, list)):
+        return padded
+    return padded[0]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -89,7 +122,8 @@ class OnlineAdaptation:
     def __init__(self, *, refresh_every: int = 64,
                  drift_tol: Optional[float] = None,
                  drift_frac: Optional[float] = 0.25,
-                 jitter: float = 0.0, dist=None):
+                 jitter: float = 0.0, dist=None, journal=None,
+                 on_fold=None):
         if refresh_every < 1:
             raise ValueError("refresh_every must be >= 1")
         self.refresh_every = int(refresh_every)
@@ -100,6 +134,16 @@ class OnlineAdaptation:
         # through the sharded cholupdate (per-slab psums, replicated
         # factor) instead of the single-device jit
         self.dist = dist
+        # FIFO modulus override: an uneven 2d window stores zero-padded
+        # sample rows, but the FIFO must cycle over the *logical* n so
+        # pad rows stay zero (set by the async server when it binds a
+        # padded ShardedServeState; None: W's size is the modulus)
+        self.fifo_n = None
+        # optional serve.journal.FoldJournal: every applied fold/refresh
+        # is recorded as a replayable event; on_fold(event) additionally
+        # fires per fold (the fleet tier's gossip emission hook)
+        self.journal = journal
+        self.on_fold = on_fold
         self._dist_fns = {}            # (kind, mode) -> jitted shard_map fn
 
     @classmethod
@@ -118,35 +162,68 @@ class OnlineAdaptation:
             return auto_drift_tol(damping_state, frac=self.drift_frac)
         return None
 
-    def fold(self, state: ServeState, rows) -> ServeState:
+    def fold(self, state: ServeState, rows, *, slots=None,
+             record: bool = True) -> ServeState:
         """Fold one request's score rows into the window (FIFO replace).
 
         ``rows``: (k, m) dense — or a tuple of per-block (k, m_b) pieces
         matching a blocked window. Requires k ≤ n (a single request never
         displaces more than the whole window).
+
+        ``slots``: optional explicit FIFO slot indices from a replayed
+        ``FoldEvent``. The fold always lands at the local cursor — slots
+        are *verified* against it (raising on divergence) so a gossip
+        replayer can only apply a log in its recorded order, which is
+        what makes replay bit-identical to the origin.
+
+        ``record=False`` suppresses journal/on_fold emission (used by the
+        replayer itself so ingested events aren't re-logged as local).
         """
         row_blocks = tuple(rows) if isinstance(rows, (tuple, list)) \
             else (rows,)
         k = int(row_blocks[0].shape[0])
-        n = int(state.W.shape[0])
+        n = self.fifo_n if self.fifo_n is not None \
+            else int(state.W.shape[0])
         if k > n:
             raise ValueError(f"cannot fold {k} rows into an n={n} window")
         if is_blocked(state.S) and len(row_blocks) != len(state.S.blocks):
             raise ValueError(
                 f"{len(row_blocks)} row blocks for a "
                 f"{len(state.S.blocks)}-block window")
+        emit = record and (self.journal is not None
+                           or self.on_fold is not None)
+        if slots is not None or emit:
+            # host-side cursor read: only when an event identity is needed
+            cursor = int(state.slot)
+            expect = tuple((cursor + i) % n for i in range(k))
+            if slots is not None and tuple(int(s) for s in slots) != expect:
+                raise ValueError(
+                    f"fold replay out of order: event slots "
+                    f"{tuple(int(s) for s in slots)} vs local FIFO cursor "
+                    f"{expect} (apply events in journal order)")
         rows_in = rows if isinstance(rows, (tuple, list)) \
             else jnp.asarray(rows)
         if self.dist is not None:
             fold = self._dist_fn("fold", serve_mode(state))
             Sp, Wp, Lp, slot = fold(state.S, state.W, state.L, state.slot,
-                                    rows_in)
+                                    pad_to_window_cols(state.S, rows_in,
+                                                       axis=1))
         else:
             Sp, Wp, Lp, slot = _fold_window(
                 state.S, state.W, state.L, state.slot, rows_in,
                 mode=serve_mode(state))
         stats = state.stats._replace(
             adapted=state.stats.adapted + jnp.asarray(k, jnp.int32))
+        if emit:
+            ev = None
+            if self.journal is not None:
+                ev = self.journal.append_fold(expect, rows_in)
+            if self.on_fold is not None:
+                if ev is None:
+                    from repro.serve.journal import FoldEvent
+                    ev = FoldEvent(seq=-1, kind="fold", slots=expect,
+                                   rows=rows_in)
+                self.on_fold(ev)
         return state._replace(S=Sp, W=Wp, L=Lp, slot=slot, stats=stats)
 
     def _dist_fn(self, kind: str, mode: str):
@@ -160,7 +237,7 @@ class OnlineAdaptation:
                 fn = make_sharded_fold(
                     spec.mesh, layout=spec.layout,
                     model_axis=spec.model_axis, data_axis=spec.data_axis,
-                    mode=mode)
+                    mode=mode, fifo_n=self.fifo_n)
             else:
                 fn = make_sharded_refresh(
                     spec.mesh, layout=spec.layout,
@@ -170,7 +247,8 @@ class OnlineAdaptation:
         return fn
 
     def maybe_refresh(self, state: ServeState, *, damping_state=None,
-                      force: bool = False) -> Tuple[ServeState, bool]:
+                      force: bool = False, record: bool = True
+                      ) -> Tuple[ServeState, bool]:
         """Full W refactorization when the staleness bound is hit — called
         between microbatches, never on the request path. Returns
         (state', refreshed)."""
@@ -180,6 +258,8 @@ class OnlineAdaptation:
         drift_due = tol is not None and r >= 0.0 and r > float(tol)
         if not (force or age_due or drift_due):
             return state, False
+        if record and self.journal is not None:
+            self.journal.append_refresh()
         if self.dist is not None:
             W, L = self._dist_fn("refresh", serve_mode(state))(
                 state.S, state.lam0)

@@ -1,0 +1,146 @@
+"""Fold journal — the window's maintenance history as replayable events.
+
+Every mutation of the resident window is one of two things: a FIFO fold
+(``replace_factors``: k rows enter at explicit slots, k leave) or a full
+refresh (``chol_factorize`` of the current S). Both are deterministic
+functions of the state they act on, so a log of them *is* the window: a
+fresh ``ServeState`` seeded from the same initial window and driven
+through the same event sequence lands on the bit-identical S/W/L.
+
+That replayability is what the fleet tier trades on. A serving replica's
+``OnlineAdaptation`` appends each applied fold (its rows plus the slot
+indices they landed in) to its journal; the events — not factors, not
+Grams — are what peers exchange, because a fold event is O(k·m) where the
+factor is O(n²) *per replica per update* and carries no information the
+rows don't (the paper's rank-k ``replace_factors`` path reconstructs the
+factor from them at O(n·m·k)). ``repro.fleet.GossipLog`` sequences these
+events fleet-wide; this module is the model-free core: the event record,
+an append-only journal with npz serialization, and ``replay``.
+
+Slot indices ride in the event rather than being recomputed at replay so
+a replayer can *verify* it is applying the log in order: ``fold(...,
+slots=...)`` raises on any divergence from the local FIFO cursor instead
+of silently corrupting the window.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["FoldEvent", "FoldJournal", "event_rows_blocks"]
+
+
+class FoldEvent(NamedTuple):
+    """One window maintenance event.
+
+    ``kind``: "fold" (rows enter the FIFO at ``slots``) or "refresh" (full
+    refactorization; ``slots``/``rows`` empty). ``seq``: position in the
+    journal's total order. ``origin``: opaque id of the replica that first
+    applied it (fleet bookkeeping; not part of the algebra).
+    """
+    seq: int
+    kind: str
+    slots: Tuple[int, ...]
+    rows: Any                    # (k, m) array, tuple of per-block pieces,
+    origin: Optional[str] = None  # or None for refresh events
+
+    @property
+    def k(self) -> int:
+        return len(self.slots)
+
+
+def event_rows_blocks(rows) -> Tuple[np.ndarray, ...]:
+    """Normalize an event's rows to a tuple of (k, m_b) numpy blocks."""
+    if rows is None:
+        return ()
+    if isinstance(rows, (tuple, list)):
+        return tuple(np.asarray(b) for b in rows)
+    return (np.asarray(rows),)
+
+
+class FoldJournal:
+    """Append-only, serializable log of window maintenance events."""
+
+    def __init__(self, events: Optional[List[FoldEvent]] = None):
+        self.events: List[FoldEvent] = list(events or [])
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    @property
+    def head(self) -> int:
+        """The next sequence number (== number of recorded events)."""
+        return len(self.events)
+
+    def append_fold(self, slots, rows, *, origin: Optional[str] = None
+                    ) -> FoldEvent:
+        ev = FoldEvent(seq=len(self.events), kind="fold",
+                       slots=tuple(int(s) for s in slots), rows=rows,
+                       origin=origin)
+        self.events.append(ev)
+        return ev
+
+    def append_refresh(self, *, origin: Optional[str] = None) -> FoldEvent:
+        ev = FoldEvent(seq=len(self.events), kind="refresh", slots=(),
+                       rows=None, origin=origin)
+        self.events.append(ev)
+        return ev
+
+    def append_event(self, ev: FoldEvent) -> FoldEvent:
+        """Append an externally sequenced event (gossip ingest). The
+        event's ``seq`` must continue this journal's order."""
+        if ev.seq != len(self.events):
+            raise ValueError(f"event seq {ev.seq} does not continue the "
+                             f"journal (head {len(self.events)})")
+        self.events.append(ev)
+        return ev
+
+    # -- serialization (npz arrays + json meta: the wire/checkpoint form) --
+    def save(self, path) -> None:
+        """One .npz: per-event row blocks plus a json manifest entry."""
+        meta, arrays = [], {}
+        for ev in self.events:
+            blocks = event_rows_blocks(ev.rows)
+            meta.append({"seq": ev.seq, "kind": ev.kind,
+                         "slots": list(ev.slots), "origin": ev.origin,
+                         "n_blocks": len(blocks)})
+            for b, arr in enumerate(blocks):
+                arrays[f"ev{ev.seq}_b{b}"] = arr
+        arrays["__meta__"] = np.frombuffer(
+            json.dumps(meta).encode("utf-8"), np.uint8)
+        np.savez(path, **arrays)
+
+    @classmethod
+    def load(cls, path) -> "FoldJournal":
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"]).decode("utf-8"))
+            events = []
+            for e in meta:
+                blocks = tuple(z[f"ev{e['seq']}_b{b}"]
+                               for b in range(e["n_blocks"]))
+                rows = None if not blocks else \
+                    (blocks[0] if e["n_blocks"] == 1 else blocks)
+                events.append(FoldEvent(seq=e["seq"], kind=e["kind"],
+                                        slots=tuple(e["slots"]), rows=rows,
+                                        origin=e.get("origin")))
+        return cls(events)
+
+    # -- replay -------------------------------------------------------------
+    def replay(self, state, adaptation, *, record: bool = False):
+        """Drive a fresh ``ServeState`` through the journal. With the same
+        initial state this reproduces the origin replica's S/W/L bit for
+        bit (same jitted fold, same inputs, same order — verified in
+        ``tests/test_fleet.py``). ``record=False`` keeps the adaptation's
+        own journal out of the loop while replaying."""
+        for ev in self.events:
+            if ev.kind == "fold":
+                state = adaptation.fold(state, ev.rows, slots=ev.slots,
+                                        record=record)
+            elif ev.kind == "refresh":
+                state, _ = adaptation.maybe_refresh(state, force=True,
+                                                    record=record)
+            else:
+                raise ValueError(f"unknown event kind {ev.kind!r}")
+        return state

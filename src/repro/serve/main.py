@@ -85,6 +85,17 @@ def serve_main(argv=None):
                          "thread-safe submits, the device executes the "
                          "previous coalesced solve while the host batches "
                          "the next")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve through N worker processes behind the "
+                         "repro.fleet.Dispatcher (0: in-process server)")
+    ap.add_argument("--route", choices=["round_robin", "least_loaded",
+                                        "by_adapter"],
+                    default="round_robin",
+                    help="fleet routing policy (--fleet)")
+    ap.add_argument("--no-reconcile", action="store_true",
+                    help="fleet: do not gossip window folds between "
+                         "workers — folds partition by routed worker "
+                         "(meaningful with --route by_adapter)")
     ap.add_argument("--ckpt-dir", default="artifacts/serve_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=8,
                     help="checkpoint cadence in flush rounds (0: off)")
@@ -97,6 +108,9 @@ def serve_main(argv=None):
     axes = ("data", "model")[:len(shape)] if len(shape) <= 2 \
         else ("pod", "data", "model")
     mesh = make_mesh(shape, axes)
+
+    if args.fleet:
+        return _serve_fleet(args, cfg, mesh)
 
     layout = None if args.mesh == "replicated" else args.mesh
     async_ = args.async_ or layout is not None
@@ -187,6 +201,93 @@ def serve_main(argv=None):
     if async_:
         server.shutdown()
     return server, losses
+
+
+def _serve_fleet(args, cfg, mesh):
+    """The serving loop against a multi-process fleet: the model (score
+    pass + decode + live params) stays here as the traffic source; solves
+    and window maintenance happen in the worker processes, folds
+    reconciled through the dispatcher's gossip log. ``--async`` /
+    ``--mesh 1d|2d`` select each worker's inner server flavour (the
+    fleet tier composes with the dist tier: every worker then shards its
+    replica over its own devices)."""
+    from repro.launch.trainer import build_fleet
+
+    worker_layout = None if args.mesh == "replicated" else args.mesh
+    t0 = time.perf_counter()
+    dispatcher, h = build_fleet(
+        cfg, mesh=mesh, n_workers=args.fleet, route=args.route,
+        reconcile=not args.no_reconcile, window=args.window, seq=args.seq,
+        damping=args.damping, max_tokens=args.max_tokens,
+        max_requests=args.max_requests, refresh_every=args.refresh_every,
+        drift_tol=args.drift_tol, drift_frac=args.drift_frac,
+        async_workers=args.async_ or worker_layout is not None,
+        worker_layout=worker_layout, seed=args.seed)
+    print(f"fleet up: {args.fleet} workers, route={args.route}, "
+          f"reconcile={not args.no_reconcile}, n={args.window} "
+          f"({(time.perf_counter() - t0) * 1e3:.0f} ms)", flush=True)
+
+    rng = np.random.default_rng(args.seed)
+    losses, rounds = [], 0
+    pending = {}
+    try:
+        for r in range(args.requests):
+            full = h.data.batch_at(r + 1)
+            take = rng.choice(args.window, size=args.adapt_examples,
+                              replace=False)
+            ex = jax.tree.map(lambda x: x[np.sort(take)], full)
+            loss, v, rows = h.score_grads(h.params, ex)
+            lam = args.damping * (4.0 if r % 5 == 4 else 1.0)
+            uid = dispatcher.submit(
+                np.asarray(v), damping=lam,
+                tokens=args.adapt_examples * args.seq,
+                rows=np.asarray(rows), adapter=f"user{r % 4}")
+            pending[uid] = (float(loss), ex)
+
+            if (r + 1) % args.burst and r != args.requests - 1:
+                continue
+            results = dispatcher.flush()
+            for res in results:
+                loss_before, ex_req = pending.pop(res.uid)
+                h.apply_update(res.x, lr=args.lr)
+                losses.append(loss_before)
+                if args.decode_tokens > 0:
+                    prompt = jnp.asarray(ex_req["inputs"][:1, :args.seq])
+                    gen = h.decode(prompt, new_tokens=args.decode_tokens)
+                    ids = np.asarray(gen[0])
+                    print(f"req {res.uid:3d} λ={res.damping:.3g} "
+                          f"loss {loss_before:8.4f} "
+                          f"solve {res.latency_s * 1e3:6.1f} ms "
+                          f"tokens {ids[:8].tolist()}", flush=True)
+            if results:
+                rounds += 1
+                if args.ckpt_every and rounds % args.ckpt_every == 0:
+                    dispatcher.checkpoint(args.ckpt_dir, rounds)
+
+        dispatcher.reconcile()
+        if not args.no_reconcile and len(dispatcher.workers) > 1:
+            m = int(np.asarray(v).shape[0])
+            probe = dispatcher.probe(
+                rng.normal(size=(m,)).astype(np.float32))
+            xs = [np.asarray(x) for x in probe.values()]
+            worst = max(np.linalg.norm(a - xs[0])
+                        / max(np.linalg.norm(xs[0]), 1e-30) for a in xs[1:])
+            print(f"reconciled probe agreement across "
+                  f"{len(xs)} workers: max rel diff {worst:.2e}")
+        s = dispatcher.metrics.summary()
+        print(f"served {s['served']} requests: "
+              f"p50 {s['p50_ms']:.1f} ms  p99 {s['p99_ms']:.1f} ms  "
+              f"{s['rps']:.1f} req/s")
+        for wid, rep in sorted(dispatcher.heartbeat().items()):
+            print(f"  worker {wid}: served {rep['served']}, "
+                  f"applied {rep['applied']} fold events")
+        if args.ckpt_every and rounds:
+            path = dispatcher.checkpoint(args.ckpt_dir, rounds)
+            print(f"fleet checkpoint (per-worker ServeState + manifest) "
+                  f"-> {path}")
+    finally:
+        dispatcher.shutdown()
+    return dispatcher, losses
 
 
 if __name__ == "__main__":

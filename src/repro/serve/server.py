@@ -217,6 +217,17 @@ class SolveServer:
         return results
 
     # -- maintenance -------------------------------------------------------
+    def apply_fold(self, rows, *, slots=None, record: bool = True) -> None:
+        """Apply one fold event to the resident window outside the request
+        path — the gossip-replay entry point (``repro.fleet``): a remote
+        replica's fold columns enter this window through the same
+        ``replace_factors`` algebra as local ones. ``slots`` (from the
+        event) are verified against the local FIFO cursor."""
+        if self.adaptation is None:
+            raise RuntimeError("apply_fold needs an OnlineAdaptation")
+        self.state = self.adaptation.fold(self.state, rows, slots=slots,
+                                          record=record)
+
     def refresh(self) -> None:
         """Force a full refactorization now (ops hook; not request-path)."""
         if self.adaptation is not None:

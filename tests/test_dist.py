@@ -262,6 +262,129 @@ def test_async_sharded_server_equivalent_to_eager():
     """)
 
 
+def test_uneven_shapes_zero_pad_across_layouts():
+    """m (and n for 2d) need not divide the mesh: the window zero-pads
+    per slab at init (exact no-ops in the Gram and the rank-k sweeps),
+    RHS pads/solutions un-pad at the request boundary, and the served
+    trace — mixed λ, window folds included, enough of them to wrap the
+    FIFO past the logical n (the padded window must keep folding at the
+    unpadded modulus or the sample sets diverge) — still agrees with the
+    eager replicated server to ≤5e-3 at the caller-visible logical m."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist import (AsyncSolveServer, DistSpec,
+                                init_sharded_serve_state, sharded_window_cols)
+        from repro.launch.mesh import make_mesh
+        from repro.serve import (OnlineAdaptation, SolveServer,
+                                 TokenBudgetBatcher, init_serve_state)
+        rng = np.random.default_rng(11)
+        n, m = 9, 151                  # 151 % 4 != 0, 9 % 2 != 0
+        S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+        vs = [jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+              for _ in range(8)]
+        lams = [None, 0.3, None, 0.05, None, None, 0.3, None]
+        # 4 requests x k=3 = 12 folded rows > n=9 by request 4, so
+        # requests 6-7 solve *after* the FIFO wrapped (a padded-n modulus
+        # diverges 7e-2 here; the logical modulus stays ~3e-7)
+        fold_at = {1, 2, 3, 4}
+        rows = [jnp.asarray(rng.normal(size=(3, m)) / np.sqrt(m),
+                            jnp.float32) for _ in range(8)]
+
+        def drive(server):
+            sub = {}
+            for i, (v, lam) in enumerate(zip(vs, lams)):
+                sub[server.submit(v, damping=lam,
+                                  rows=rows[i] if i in fold_at
+                                  else None)] = i
+            return {sub[r.uid]: np.asarray(r.x) for r in server.flush()}
+
+        adapt = lambda: OnlineAdaptation(refresh_every=10 ** 6,
+                                         drift_frac=None)
+        ref = drive(SolveServer(init_serve_state(S, 0.1),
+                                batcher=TokenBudgetBatcher(max_requests=2),
+                                adaptation=adapt()))
+        mesh1 = make_mesh((4,), ("model",))
+        mesh2 = make_mesh((2, 2), ("data", "model"))
+        for spec in (DistSpec(mesh1, "1d"), DistSpec(mesh2, "2d")):
+            st = init_sharded_serve_state(S, 0.1, spec=spec)
+            assert st.padded, spec.layout
+            assert st.state.S.shape[1] % spec.m_mult == 0
+            srv = AsyncSolveServer(st,
+                                   batcher=TokenBudgetBatcher(max_requests=2),
+                                   adaptation=adapt())
+            got = drive(srv)
+            srv.shutdown()
+            for i in ref:
+                assert got[i].shape == (m,), (spec.layout, got[i].shape)
+                rel = (np.linalg.norm(got[i] - ref[i])
+                       / np.linalg.norm(ref[i]))
+                assert rel < 5e-3, (spec.layout, i, rel)
+
+        # standalone cols helper pads internally too (1d and 2d)
+        ref_cols = np.asarray(S @ rows[0].T)
+        for mesh, layout in ((mesh1, "1d"), (mesh2, "2d")):
+            cols, corner = sharded_window_cols(S, rows[0], mesh=mesh,
+                                               layout=layout)
+            assert cols.shape == (n, 3)
+            assert float(jnp.abs(cols - ref_cols).max()) < 1e-6, layout
+        print("ok")
+    """)
+
+
+def test_uneven_blocked_window_pads_per_block():
+    """Blocked layout: per-layer block widths that do not divide the mesh
+    zero-pad per block; blocked RHS/rows keep their logical widths at the
+    API surface."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.operator import BlockedScores
+        from repro.dist import (AsyncSolveServer, DistSpec,
+                                init_sharded_serve_state)
+        from repro.launch.mesh import make_mesh
+        from repro.serve import (OnlineAdaptation, SolveServer,
+                                 TokenBudgetBatcher, init_serve_state)
+        rng = np.random.default_rng(12)
+        n, widths = 8, [33, 16, 47]            # 33, 47 not divisible by 4
+        m = sum(widths)
+        Sd = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+        S = BlockedScores.from_dense(Sd, widths)
+        offs = np.cumsum([0] + widths[:-1])
+        def split(x):
+            return tuple(jnp.asarray(x[..., o:o + w])
+                         for o, w in zip(offs, widths))
+        vs = [split(rng.normal(size=(m,)).astype(np.float32))
+              for _ in range(4)]
+        rows = split((rng.normal(size=(2, m)) / np.sqrt(m)
+                      ).astype(np.float32))
+
+        def drive(server):
+            sub = {}
+            for i, v in enumerate(vs):
+                sub[server.submit(v, rows=rows if i == 1 else None)] = i
+            return {sub[r.uid]:
+                    np.concatenate([np.asarray(b) for b in r.x])
+                    for r in server.flush()}
+
+        adapt = lambda: OnlineAdaptation(refresh_every=10 ** 6,
+                                         drift_frac=None)
+        ref = drive(SolveServer(init_serve_state(S, 0.1),
+                                batcher=TokenBudgetBatcher(max_requests=2),
+                                adaptation=adapt()))
+        mesh = make_mesh((4,), ("model",))
+        st = init_sharded_serve_state(S, 0.1, spec=DistSpec(mesh, "blocked"))
+        assert st.padded and st.widths == tuple(widths)
+        srv = AsyncSolveServer(st, batcher=TokenBudgetBatcher(max_requests=2),
+                               adaptation=adapt())
+        got = drive(srv)
+        srv.shutdown()
+        for i in ref:
+            assert got[i].shape == (m,)
+            rel = np.linalg.norm(got[i] - ref[i]) / np.linalg.norm(ref[i])
+            assert rel < 5e-3, (i, rel)
+        print("ok")
+    """)
+
+
 # ---------------------------------------------------------------------------
 # concurrency semantics (in process; single device suffices)
 # ---------------------------------------------------------------------------
@@ -424,6 +547,59 @@ def test_async_server_does_not_mutate_callers_adaptation():
     state = adapt.fold(init_serve_state(S, 0.1),
                        jnp.zeros((2, S.shape[1]), jnp.float32))
     assert int(state.stats.adapted) == 2
+
+
+def test_async_apply_fold_matches_eager_bit_for_bit():
+    """apply_fold through the async worker's ordered maintenance queue
+    equals the eager server's apply_fold exactly; flush() is the
+    application barrier."""
+    from repro.serve import OnlineAdaptation, SolveServer, init_serve_state
+
+    S = _mk()
+    rng = np.random.default_rng(9)
+    rows = [jnp.asarray(rng.normal(size=(2, S.shape[1])) / 12.0, jnp.float32)
+            for _ in range(3)]
+    v = jnp.asarray(rng.normal(size=(S.shape[1],)), jnp.float32)
+
+    adapt = lambda: OnlineAdaptation(refresh_every=10 ** 6, drift_frac=None)
+    eager = SolveServer(init_serve_state(S, 0.1), adaptation=adapt())
+    for r in rows:
+        eager.apply_fold(r)
+    x_ref = eager.solve_one(v)
+
+    srv = _async_server(S, adaptation=adapt())
+    for r in rows:
+        srv.apply_fold(r)
+    srv.flush()
+    assert int(srv.stats.adapted) == 6
+    srv.submit(v)
+    (res,) = srv.flush()
+    srv.shutdown()
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(x_ref))
+
+
+def test_sigterm_drains_async_server():
+    """install_shutdown_handlers: SIGTERM triggers a draining shutdown —
+    queued requests are served and the process exits 0 instead of
+    leaking the worker thread (the fleet worker lifecycle contract)."""
+    out = run_py("""
+        import os, signal, numpy as np, jax.numpy as jnp
+        from repro.dist import AsyncSolveServer
+        from repro.serve import TokenBudgetBatcher, init_serve_state
+        S = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)) / 8.0,
+                        jnp.float32)
+        srv = AsyncSolveServer(init_serve_state(S, 0.1),
+                               batcher=TokenBudgetBatcher(max_requests=2))
+        def after_drain(signum, frame):      # chained by the installed
+            print("served", srv.metrics.summary()["served"])  # handler
+            raise SystemExit(0)
+        signal.signal(signal.SIGTERM, after_drain)
+        srv.install_shutdown_handlers()
+        uids = [srv.submit(jnp.ones(64)) for _ in range(5)]
+        os.kill(os.getpid(), signal.SIGTERM)   # handler drains, exits 0
+        raise SystemExit("unreachable: SIGTERM handler should have exited")
+    """)
+    assert "served 5" in out
 
 
 def test_worker_error_surfaces_to_callers():
