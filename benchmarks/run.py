@@ -16,8 +16,12 @@ import sys
 _MEM_ROW = re.compile(r"(\d+)\s*B?\)?$")
 
 
-def _collector(config):
-    """(rows, emit): emit prints the CSV line and parses it into a row."""
+def _collector(config, peaks=None):
+    """(rows, emit): emit prints the CSV line and parses it into a row.
+
+    ``peaks``: dtype -> compiled peak bytes of the section's request path
+    (``benchmarks/memutil``) — the default ``peak_mem_bytes`` for rows
+    that don't state their own memory number."""
     rows = []
 
     def emit(line):
@@ -31,6 +35,9 @@ def _collector(config):
             m = _MEM_ROW.search(derived.strip())
             if m:
                 peak = int(m.group(1))
+        if peak is None and peaks:
+            from benchmarks import memutil
+            peak = memutil.peak_for_row(name, peaks)
         rows.append({"name": name,
                      "us_per_call": float(us) if us else None,
                      "derived": derived,
@@ -88,17 +95,24 @@ def main(argv=None) -> None:
         amortized.run_trainer(emit=emit)
     ngd_rows += rows
 
-    from benchmarks import serve
+    from benchmarks import memutil, serve
     sv = dict(n=64, m=2_000, requests=24, k=4) if tiny \
         else dict(n=512, m=25_000, requests=48, k=8)
-    rows, emit = _collector({"section": "serve", **sv})
+    peaks = {"fp32": memutil.serve_request_peak_bytes(**sv),
+             "bf16": memutil.serve_request_peak_bytes(
+                 window_dtype="bfloat16", **sv)}
+    rows, emit = _collector({"section": "serve", **sv}, peaks=peaks)
     # tiny shapes sit at the dispatch floor (see benchmarks/serve.py);
     # the >=5x request-path gate runs at the real m >> n shape only.
     serve.run(emit=emit, assert_speedup=not tiny, **sv)
+    # fused-vs-compositional + bf16-window pair: the req/s gate is
+    # TPU-only (CPU dispatches the same jnp reference both ways); the
+    # bf16 byte-ratio and 5e-3 equivalence asserts run at every shape.
+    serve.run_fused_dtypes(emit=emit, assert_fused=not tiny, **sv)
     serve_rows += rows
 
     from benchmarks import serve_dist
-    rows, emit = _collector({"section": "serve_dist", **sv})
+    rows, emit = _collector({"section": "serve_dist", **sv}, peaks=peaks)
     # same dispatch-floor policy: the async >= 1x eager req/s gate runs
     # at the real shape only; tiny rows are still trend-guarded.
     serve_dist.run(emit=emit, assert_ratio=not tiny, **sv)
@@ -107,7 +121,7 @@ def main(argv=None) -> None:
     from benchmarks import serve_fleet
     fv = dict(n=64, m=2_000, requests=16, k=4) if tiny \
         else dict(n=512, m=25_000, requests=48, k=8)
-    rows, emit = _collector({"section": "serve_fleet", **fv})
+    rows, emit = _collector({"section": "serve_fleet", **fv}, peaks=peaks)
     # subprocess workers + real sockets: the >=1.5x 2-worker scaling gate
     # runs at the real shape on >=4-core hosts; reconciled-agreement
     # asserts run at every shape, and all rows are trend-guarded.

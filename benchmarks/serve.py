@@ -15,7 +15,15 @@ Reported per path: p50/p99 request latency, requests/sec; plus coalesced
 throughput (token-budget batcher at width k) and the mixed-λ batched path
 (per-request damping through ``solve_batch``).
 
+``run_fused_dtypes`` adds the kernel-tier claims: the fused resident-L
+serve kernel vs the compositional solve (≥1.3× req/s, gated on TPU —
+CPU dispatches the same jnp reference both ways), and bf16 window
+storage vs fp32 (≤0.55× resident window bytes, solves within 5e-3 of
+the fp32 trace — always asserted). Every row carries the compiled peak
+of the request path (``benchmarks/memutil``).
+
     PYTHONPATH=src:. python benchmarks/serve.py [--tiny] [--json]
+                                                [--window-dtype fp32|bf16]
 """
 from __future__ import annotations
 
@@ -24,19 +32,20 @@ import numpy as np
 
 
 def _drive(S, vs, damping, *, policy, max_requests, adapt_every, adapt_rows,
-           lams=None):
+           lams=None, window_dtype=None, fused=True):
     """Stream ``vs`` through a fresh server; returns (server, {i: x})."""
     from repro.serve import (OnlineAdaptation, SolveServer,
                              TokenBudgetBatcher, init_serve_state)
 
-    state = init_serve_state(S, damping)
+    state = init_serve_state(S, damping, window_dtype=window_dtype)
     adaptation = OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
                                   drift_frac=None)
     server = SolveServer(
         state,
         batcher=TokenBudgetBatcher(max_tokens=2 ** 30,
                                    max_requests=max_requests),
-        adaptation=adaptation, policy=policy, monitor_drift=False)
+        adaptation=adaptation, policy=policy, monitor_drift=False,
+        fused=fused)
 
     # compile warmup (both bucket widths), then measure clean
     server.solve_one(vs[0])
@@ -145,29 +154,150 @@ def run(emit=print, n=512, m=25_000, requests=48, k=8, damping=1e-2,
             "speedup_ok": bool(ok)}
 
 
+def run_fused_dtypes(emit=print, n=512, m=25_000, requests=48, k=8,
+                     damping=1e-2, low_dtype="bfloat16", min_fused=1.3,
+                     max_window_ratio=0.55, assert_fused=True, seed=0):
+    """The fused-kernel and low-precision-window claims, measured end to
+    end through the coalesced request path on identical traces:
+
+    * **fused** — the fused resident-L serve kernel must sustain
+      ≥ ``min_fused``× the compositional ``CholFactorization.solve``
+      req/s. Gated on TPU only: on CPU both routes dispatch the same jnp
+      reference, so the ratio is report-only there (and when
+      ``assert_fused=False`` — tiny dispatch-floor shapes).
+    * **bf16 window** — storing the resident window in ``low_dtype``
+      must cut window bytes to ≤ ``max_window_ratio``× fp32 while the
+      served solves stay within 5e-3 of the fp32 trace (arithmetic stays
+      fp32; only storage narrows). Always asserted.
+
+    ``low_dtype=None`` skips the low-precision half (fp32-only rows).
+    """
+    import jax.numpy as jnp
+
+    from benchmarks import memutil
+    from repro.kernels import ops as kernel_ops
+
+    rng = np.random.default_rng(seed)
+    S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    vs = [jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+          for _ in range(requests)]
+
+    def drive(window_dtype, fused):
+        srv, xs = _drive(S, vs, damping, policy="cached", max_requests=k,
+                         adapt_every=0, adapt_rows=[],
+                         window_dtype=window_dtype, fused=fused)
+        return srv.metrics.summary(), xs, int(srv.state.S.nbytes)
+
+    sf, x_fused, bytes32 = drive(None, True)
+    sc, x_comp, _ = drive(None, False)
+    emit(f"serve/fused_k{k}_n{n}_m{m}_fp32,{sf['p50_ms'] * 1e3:.0f},"
+         f"{sf['rps']:.1f} req/s (p99={sf['p99_ms'] * 1e3:.0f}us)")
+    emit(f"serve/compositional_k{k}_n{n}_m{m}_fp32,"
+         f"{sc['p50_ms'] * 1e3:.0f},"
+         f"{sc['rps']:.1f} req/s (p99={sc['p99_ms'] * 1e3:.0f}us)")
+    fused_ratio = sf["rps"] / sc["rps"]
+    on_tpu = kernel_ops.on_tpu()
+    gate_fused = bool(assert_fused) and on_tpu
+    why = "" if gate_fused else \
+        ("; report-only: CPU ref dispatch" if not on_tpu
+         else "; report-only: tiny shape")
+    fused_ok = fused_ratio >= min_fused
+    emit(f"serve/fused_vs_compositional,,{fused_ratio:.2f}x req/s "
+         f"({'OK' if fused_ok else 'NOT'} >= {min_fused:g}{why})")
+    emit(f"serve/window_mem_bytes_n{n}_m{m}_fp32,,{bytes32}")
+
+    out = {"n": n, "m": m, "requests": requests, "k": k,
+           "fused_rps": sf["rps"], "compositional_rps": sc["rps"],
+           "fused_ratio": fused_ratio, "fused_ok": bool(fused_ok),
+           "fused_gated": gate_fused, "window_bytes_fp32": bytes32}
+    peak32 = memutil.serve_request_peak_bytes(n, m, k, damping=damping,
+                                              seed=seed)
+    if peak32 is not None:
+        emit(f"serve/solve_peak_mem_bytes_n{n}_m{m}_fp32,,{peak32}")
+        out["solve_peak_bytes_fp32"] = peak32
+
+    if low_dtype is not None:
+        tag = "bf16" if "bfloat16" in str(jnp.dtype(low_dtype)) \
+            else str(jnp.dtype(low_dtype))
+        sl, x_low, bytes_low = drive(low_dtype, True)
+        low_err = max(
+            float(jnp.linalg.norm(x_low[i] - x_fused[i])
+                  / jnp.linalg.norm(x_fused[i]))
+            for i in range(requests))
+        wratio = bytes_low / bytes32
+        wok = wratio <= max_window_ratio
+        emit(f"serve/fused_k{k}_n{n}_m{m}_{tag},{sl['p50_ms'] * 1e3:.0f},"
+             f"{sl['rps']:.1f} req/s (p99={sl['p99_ms'] * 1e3:.0f}us)")
+        emit(f"serve/{tag}_vs_fp32_max_rel_err,,{low_err:.2e} over "
+             f"{requests} requests")
+        emit(f"serve/window_mem_bytes_n{n}_m{m}_{tag},,{bytes_low}")
+        emit(f"serve/{tag}_window_mem_ratio,,{wratio:.3f}x "
+             f"({'OK' if wok else 'NOT'} <= {max_window_ratio:g})")
+        peak_low = memutil.serve_request_peak_bytes(
+            n, m, k, damping=damping, window_dtype=low_dtype, seed=seed)
+        if peak_low is not None:
+            emit(f"serve/solve_peak_mem_bytes_n{n}_m{m}_{tag},,{peak_low}")
+            out["solve_peak_bytes_" + tag] = peak_low
+        assert low_err < 5e-3, (
+            f"{tag} window storage drifted the served solves off the fp32 "
+            f"trace: max rel err {low_err} (arithmetic must stay fp32)")
+        assert wok, (
+            f"{tag} window storage must cut resident window bytes to "
+            f"<= {max_window_ratio:g}x fp32: got {wratio:.3f}x "
+            f"({bytes_low} vs {bytes32} B)")
+        out.update({"low_dtype": tag, "low_rps": sl["rps"],
+                    "low_max_rel_err": low_err,
+                    "window_bytes_low": bytes_low,
+                    "window_bytes_ratio": wratio})
+
+    if gate_fused:
+        assert fused_ok, (
+            f"fused serve kernel must sustain >= {min_fused:g}x the "
+            f"compositional req/s on TPU: got {fused_ratio:.2f}x "
+            f"({sf['rps']:.1f} vs {sc['rps']:.1f} req/s)")
+    return out
+
+
 def main(argv=None):
     import sys
     argv = sys.argv[1:] if argv is None else argv
     tiny = "--tiny" in argv
     as_json = "--json" in argv
+    wd = "bf16"
+    if "--window-dtype" in argv:
+        wd = argv[argv.index("--window-dtype") + 1]
+        if wd not in ("fp32", "bf16"):
+            raise SystemExit(f"--window-dtype must be fp32|bf16, got {wd!r}")
     shapes = dict(n=64, m=2_000, requests=24, k=4) if tiny \
         else dict(n=512, m=25_000, requests=48, k=8)
 
+    from benchmarks import memutil
+    peaks = {"fp32": memutil.serve_request_peak_bytes(**shapes)}
+    if wd == "bf16":
+        peaks["bf16"] = memutil.serve_request_peak_bytes(
+            window_dtype="bfloat16", **shapes)
     rows = []
 
     def emit(line):
         print(line)
         parts = line.split(",", 2)
-        rows.append({"name": parts[0],
+        name = parts[0]
+        derived = parts[2] if len(parts) > 2 else ""
+        peak = int(derived) if "mem" in name and derived.isdigit() \
+            else memutil.peak_for_row(name, peaks)
+        rows.append({"name": name,
                      "us_per_call": float(parts[1]) if len(parts) > 1
                      and parts[1] else None,
-                     "derived": parts[2] if len(parts) > 2 else "",
+                     "derived": derived,
                      "config": {"section": "serve", "tiny": tiny, **shapes},
-                     "peak_mem_bytes": None})
+                     "peak_mem_bytes": peak})
 
     # tiny CI shapes sit near the dispatch floor where the O(n²m)-vs-O(nm)
     # separation compresses; the 5x gate runs at the real m >> n shape
     summary = run(emit=emit, assert_speedup=not tiny, **shapes)
+    summary["fused_dtypes"] = run_fused_dtypes(
+        emit=emit, assert_fused=not tiny,
+        low_dtype="bfloat16" if wd == "bf16" else None, **shapes)
     if as_json:
         import json
         with open("BENCH_serve.json", "w") as fh:

@@ -138,6 +138,10 @@ def main(argv=None):
     shapes = dict(n=64, m=2_000, requests=24, k=4) if tiny \
         else dict(n=512, m=25_000, requests=48, k=8)
 
+    # compiled peak of the replicated request path at this shape — the
+    # per-shard footprint of the sharded flavour is bounded by it
+    from benchmarks import memutil
+    peak = memutil.serve_request_peak_bytes(**shapes)
     rows = []
 
     def emit(line):
@@ -149,7 +153,7 @@ def main(argv=None):
                      "derived": parts[2] if len(parts) > 2 else "",
                      "config": {"section": "serve_dist", "tiny": tiny,
                                 **shapes},
-                     "peak_mem_bytes": None})
+                     "peak_mem_bytes": peak})
 
     # tiny shapes sit at the thread-dispatch floor; the >=1x req/s gate
     # runs at the real m >> n shape only (same policy as serve.py)

@@ -239,6 +239,10 @@ def main(argv=None):
     shapes = dict(n=64, m=2_000, requests=16, k=4) if tiny \
         else dict(n=512, m=25_000, requests=48, k=8)
 
+    # compiled peak of each worker's local solve at this shape (workers
+    # run the same _coalesced_solve the in-process server does)
+    from benchmarks import memutil
+    peak = memutil.serve_request_peak_bytes(**shapes)
     rows = []
 
     def emit(line):
@@ -250,7 +254,7 @@ def main(argv=None):
                      "derived": parts[2] if len(parts) > 2 else "",
                      "config": {"section": "serve_fleet", "tiny": tiny,
                                 **shapes},
-                     "peak_mem_bytes": None})
+                     "peak_mem_bytes": peak})
 
     # tiny shapes sit at the process/wire dispatch floor; the >=1.5x
     # scaling gate runs at the real m >> n shape only — the agreement

@@ -4,8 +4,11 @@ Closes the perf-tracking loop opened by ``benchmarks/run.py --json``: rows
 are matched by ``name`` across a previous and a current artifact, and any
 named row whose ``us_per_call`` grew by more than ``--threshold`` (default
 1.5×) fails the gate (exit code 1). Rows present in only one artifact are
-ignored (shapes and sections evolve across PRs), as are rows without a
-numeric timing and — via ``--min-us`` — rows sitting at the dispatch
+never gated: rows that vanished are dropped silently (shapes and sections
+evolve across PRs) and new rows — e.g. the dtype-suffixed serving rows a
+PR introduces — are listed as ``bootstrap`` so their first measurement is
+visible, then compared normally from the next run on. Also ignored are
+rows without a numeric timing and — via ``--min-us`` — rows sitting at the dispatch
 floor, where scheduler noise swamps any real signal.
 
     python benchmarks/trend.py PREV.json CUR.json [--threshold 1.5]
@@ -73,6 +76,9 @@ def main(argv=None) -> int:
     print(f"# trend: {compared} comparable rows "
           f"({len(prev)} prev / {len(cur)} cur, threshold "
           f"{args.threshold:g}x, min {args.min_us:g}us)")
+    for name in sorted(set(cur) - set(prev)):
+        print(f"bootstrap  {name}: {cur[name]:.0f} us (new row, "
+              f"gated from the next run)")
     for name, p, c, r in improvements:
         print(f"improved   {name}: {p:.0f} -> {c:.0f} us ({r:.2f}x)")
     for name, p, c, r in regressions:

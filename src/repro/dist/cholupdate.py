@@ -149,14 +149,14 @@ def sharded_chol_downdate(L, X, *, mesh: Mesh, model_axis: str = "model",
 
 def _cols_local(S_blocks, rows_blocks, *, sum_axes, mode: str):
     """cols = S·rows† and corner = rows·rows†, accumulated over the local
-    slab of every block, then one psum each."""
-    acc = jnp.promote_types(S_blocks[0].dtype, jnp.float32)
-    cols = sum(jnp.matmul(b.astype(acc), _ct(r.astype(acc), mode),
-                          precision=_HI)
-               for b, r in zip(S_blocks, rows_blocks))
-    corner = sum(jnp.matmul(r.astype(acc), _ct(r.astype(acc), mode),
-                            precision=_HI)
-                 for r in rows_blocks)
+    slab of every block via the fused fold kernel (jnp reference off-TPU;
+    fp32 accumulation either way), then one psum each."""
+    from repro.kernels import ops as kernel_ops
+    cols = corner = None
+    for b, r in zip(S_blocks, rows_blocks):
+        cb, kb = kernel_ops.fold_cols(b, r)
+        cols = cb if cols is None else cols + cb
+        corner = kb if corner is None else corner + kb
     return jax.lax.psum(cols, sum_axes), jax.lax.psum(corner, sum_axes)
 
 
@@ -170,6 +170,12 @@ def sharded_window_cols(S, rows, *, mesh: Mesh, layout: str = "1d",
     _check_layout(layout)
     if isinstance(S, LazyBlockedScores):
         S = S.materialize()
+
+    # shared dtype-aware cast (+ width pad) point with
+    # ``OnlineAdaptation.fold``: fold rows round to the window storage
+    # dtype exactly once, before any cross-column algebra
+    from repro.serve.adapt import pad_to_window_cols
+    rows = pad_to_window_cols(S, rows, axis=1)
 
     # uneven shapes: zero columns (and, for 2d, zero sample rows) are
     # exact no-ops in S·rows† and rows·rows† — pad to the mesh, slice the

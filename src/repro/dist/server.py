@@ -43,6 +43,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.operator import BlockedScores
 from repro.core.shard_compat import shard_map_compat
 from repro.dist.state import DistSpec, ShardedServeState
+from repro.kernels import ops as kernel_ops
 from repro.serve.batcher import Microbatch, TokenBudgetBatcher
 from repro.serve.server import ServerMetrics, SolveResult, _coalesced_solve
 from repro.serve.state import ServeState, as_factorization, serve_mode
@@ -83,15 +84,19 @@ def _serve_local(S_in, W, L, lam0, V_in, lams, *, model_axis: str,
         L = jnp.linalg.cholesky(
             W + (lam0 + jitter) * jnp.eye(n, dtype=W.dtype))
 
+    # the two m-sized S passes run per slab through the serve kernels
+    # (fused Pallas on TPU, identical-algebra jnp reference elsewhere);
+    # the psum between them is why the sharded path composes the split
+    # kernels instead of the single fused invocation
     u = jax.lax.psum(
-        sum(jnp.matmul(b, v, precision=_HI) for b, v in zip(S32, V32)),
+        sum(kernel_ops.sv_cross(b, v) for b, v in zip(S_blocks, V_blocks)),
         model_axis)                                           # (n, k)
 
     if uniform:
         w = solve_triangular(L, u, lower=True)
         w = solve_triangular(_ct(L, mode), w, lower=False)
-        ys = tuple(jnp.matmul(_ct(b, mode), w, precision=_HI) for b in S32)
-        xs = tuple((v - y) / lam0 for v, y in zip(V32, ys))
+        xs = tuple(kernel_ops.serve_apply(b, w, v, lam0)
+                   for b, v in zip(S_blocks, V_blocks))
         resid = -jnp.ones((), jnp.float32)
         if monitor:
             Sx = jax.lax.psum(

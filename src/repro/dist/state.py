@@ -195,8 +195,8 @@ def place_serve_state(state: ServeState, spec: DistSpec) -> ServeState:
 
 
 def init_sharded_serve_state(S, damping, *, spec: DistSpec,
-                             jitter: float = 0.0, mode: str = "auto"
-                             ) -> ShardedServeState:
+                             jitter: float = 0.0, mode: str = "auto",
+                             window_dtype=None) -> ShardedServeState:
     """Build the resident state and lay it out on the mesh. The one-time
     seeding Gram runs replicated (``init_serve_state``); every later
     refresh is the sharded per-slab psum (``make_sharded_refresh``).
@@ -204,7 +204,9 @@ def init_sharded_serve_state(S, damping, *, spec: DistSpec,
     The window need not divide the mesh: ``pad_window_to_mesh`` zero-pads
     the parameter columns (and, for 2d, the sample rows) up front, the
     logical widths ride on the returned state, and the request path pads
-    RHS / un-pads solutions against them."""
+    RHS / un-pads solutions against them. ``window_dtype``: low-precision
+    window storage, as on ``init_serve_state`` (the per-slab S passes
+    still accumulate fp32)."""
     if spec.layout == "blocked" and not is_blocked(S):
         raise ValueError("layout='blocked' needs a BlockedScores window; "
                          "use layout='1d' for dense S")
@@ -213,7 +215,8 @@ def init_sharded_serve_state(S, damping, *, spec: DistSpec,
                          "use layout='blocked' for BlockedScores")
     n0 = int(S.blocks[0].shape[0] if is_blocked(S) else S.shape[0])
     S, widths = pad_window_to_mesh(S, spec)
-    state = init_serve_state(S, damping, jitter=jitter, mode=mode)
+    state = init_serve_state(S, damping, jitter=jitter, mode=mode,
+                             window_dtype=window_dtype)
     n_logical = n0 if int(state.W.shape[0]) != n0 else None
     return ShardedServeState(place_serve_state(state, spec), spec, widths,
                              n_logical)

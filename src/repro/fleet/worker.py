@@ -100,6 +100,7 @@ class FleetWorker:
                 jitter=adaptation.jitter,
                 policy=meta.get("policy", "cached"),
                 layout=meta.get("layout"), async_=self._async,
+                window_dtype=meta.get("window_dtype"),
                 seed=int(meta.get("seed", 0)))
             # share the worker's journal so gossiped replays are recorded
             self.server.adaptation.journal = self.journal
@@ -114,6 +115,7 @@ class FleetWorker:
                 S0 = jnp.asarray(S0)
             damping = float(meta["damping"])
             jitter = adaptation.jitter
+            window_dtype = meta.get("window_dtype")
             batcher = TokenBudgetBatcher(
                 max_tokens=int(meta.get("max_tokens", 4096)),
                 max_requests=int(meta.get("max_requests", 8)))
@@ -127,15 +129,17 @@ class FleetWorker:
                     mesh = make_mesh((jax.device_count(),), ("model",))
                     state = init_sharded_serve_state(
                         S0, damping, spec=DistSpec(mesh, layout),
-                        jitter=jitter)
+                        jitter=jitter, window_dtype=window_dtype)
                 else:
-                    state = init_serve_state(S0, damping, jitter=jitter)
+                    state = init_serve_state(S0, damping, jitter=jitter,
+                                             window_dtype=window_dtype)
                 self.server = AsyncSolveServer(
                     state, batcher=batcher, adaptation=adaptation,
                     policy=meta.get("policy", "cached"), jitter=jitter)
             else:
                 self.server = SolveServer(
-                    init_serve_state(S0, damping, jitter=jitter),
+                    init_serve_state(S0, damping, jitter=jitter,
+                                     window_dtype=window_dtype),
                     batcher=batcher, adaptation=adaptation,
                     policy=meta.get("policy", "cached"), jitter=jitter)
             if meta.get("restore_dir"):

@@ -10,19 +10,39 @@ oracles):
 * ``cholesky``  — blocked in-VMEM factorization (the paper's "chol" step).
 * ``cholupdate`` — rank-k factor update/downdate L·Lᵀ ± X·Xᵀ (the
   streaming-curvature refresh, O(n²k) instead of re-factorizing).
+* ``serve_solve`` — the whole cached uniform-λ serve request path
+  (S·V cross pass → in-kernel triangular substitution against the
+  resident L → (V − Sᵀw)/λ apply pass) in one invocation; ``sv_cross`` /
+  ``serve_apply`` are the two S passes standalone for the blocked and
+  sharded per-slab paths.
+* ``fold_cols`` — fused fold cross columns (S·rows†, rows·rows†) feeding
+  the ``replace_factors`` 2k-core of the FIFO window update.
 * ``flash_attention`` — causal/windowed GQA attention forward (the model
   zoo's dominant compute op; online softmax in VMEM scratch).
+
+Low-precision invariant: the window storage dtype is a free axis (fp32 or
+bf16 — ``window_dtype`` on the serving stack), but every kernel and every
+reference accumulates in fp32 (``preferred_element_type`` on the MXU,
+explicit upcasts in jnp) and emits fp32 Gram/solve results. Only storage
+narrows; arithmetic never does. fp8 window storage (following the
+low-precision curvature literature in PAPERS.md) is the stretch goal —
+the dtype plumbing is in place, blocked on accumulated-scale handling.
 """
 from repro.kernels.ops import (
     chol_solve_fused,
     cholesky,
     cholupdate,
     flash_attention,
+    fold_cols,
     gram,
     gram_sv,
     ngd_apply,
     on_tpu,
+    serve_apply,
+    serve_solve,
+    sv_cross,
 )
 
 __all__ = ["chol_solve_fused", "cholesky", "cholupdate", "flash_attention",
-           "gram", "gram_sv", "ngd_apply", "on_tpu"]
+           "fold_cols", "gram", "gram_sv", "ngd_apply", "on_tpu",
+           "serve_apply", "serve_solve", "sv_cross"]

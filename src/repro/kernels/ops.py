@@ -22,13 +22,16 @@ from repro.core.operator import BlockedScores, is_blocked
 from repro.kernels import ref
 from repro.kernels.cholesky import MAX_SINGLE_BLOCK_N, cholesky_pallas
 from repro.kernels.cholupdate import cholupdate_pallas
+from repro.kernels.fold import fold_cols_pallas
 from repro.kernels.gram import gram_acc_pallas, gram_pallas
 from repro.kernels.gram_sv import gram_sv_pallas
 from repro.kernels.ngd_apply import ngd_apply_pallas
+from repro.kernels.serve_solve import (serve_apply_pallas, serve_solve_pallas,
+                                       sv_cross_pallas)
 
 __all__ = ["gram", "gram_blocks", "gram_sv", "ngd_apply", "cholesky",
            "cholupdate", "chol_solve_fused", "flash_attention", "on_tpu",
-           "pad_to"]
+           "pad_to", "sv_cross", "serve_apply", "serve_solve", "fold_cols"]
 
 
 def on_tpu() -> bool:
@@ -218,6 +221,112 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
                                interpret=(mode == "interpret"))
     o = o[:, :Tq].reshape(B, H, Tq, hd).transpose(0, 2, 1, 3)
     return o
+
+
+def _any_complex(*arrays) -> bool:
+    return any(jnp.issubdtype(a.dtype, jnp.complexfloating) for a in arrays)
+
+
+def sv_cross(S: jax.Array, V, *, mode: Optional[str] = None):
+    """U = S @ V with fp32(+) accumulation — the serve cross pass over one
+    window block (complex windows route to the reference; Mosaic has no
+    complex arithmetic)."""
+    squeeze = V.ndim == 1
+    V2 = V[:, None] if squeeze else V
+    if not _use_kernels(mode) or _any_complex(S, V2):
+        u = ref.sv_cross_ref(S, V2)
+    else:
+        n, m = S.shape
+        _, bk = _pick_blocks(n, m)
+        Sp = pad_to(S, (1, bk))
+        Vp = pad_to(V2, (bk, 1))
+        u = sv_cross_pallas(Sp, Vp, bk=bk, interpret=(mode == "interpret"))
+    return u[:, 0] if squeeze else u
+
+
+def serve_apply(S: jax.Array, w, V, lam, *, mode: Optional[str] = None):
+    """X = (V − S†·w)/λ — the multi-RHS apply pass over one window block."""
+    squeeze = V.ndim == 1
+    V2 = V[:, None] if squeeze else V
+    w2 = w[:, None] if w.ndim == 1 else w
+    if not _use_kernels(mode) or _any_complex(S, V2, w2):
+        x = ref.serve_apply_ref(S, w2, V2, lam)
+    else:
+        n, m = S.shape
+        _, bk = _pick_blocks(n, m)
+        Sp = pad_to(S, (1, bk))
+        Vp = pad_to(V2, (bk, 1))
+        x = serve_apply_pallas(Sp, w2, Vp, lam, bk=bk,
+                               interpret=(mode == "interpret"))[:m]
+    return x[:, 0] if squeeze else x
+
+
+def serve_solve(S, L, V, lam, *, mode: Optional[str] = None):
+    """The whole cached uniform-λ request path against a resident factor:
+
+        X = (V − Sᵀ L⁻ᵀ L⁻¹ S V) / λ
+
+    Dense real windows up to MAX_SINGLE_BLOCK_N run the single fused
+    kernel (both S passes + in-kernel substitution, one invocation);
+    blocked windows compose the ``sv_cross``/``serve_apply`` passes per
+    block with the n-sized triangular work in XLA; complex windows and the
+    CPU backend take the reference — identical algebra throughout. Returns
+    fp32 (m, k), matching the input's flat/blocked form."""
+    if is_blocked(S) or isinstance(V, (tuple, list)):
+        return _serve_solve_blocked(S, L, V, lam, mode=mode)
+    squeeze = V.ndim == 1
+    V2 = V[:, None] if squeeze else V
+    n, m = S.shape
+    if (not _use_kernels(mode) or _any_complex(S, L, V2)
+            or n > MAX_SINGLE_BLOCK_N):
+        x = ref.serve_solve_ref(S, L, V2, lam)
+    else:
+        _, bk = _pick_blocks(n, m)
+        Sp = pad_to(S, (1, bk))
+        Vp = pad_to(V2, (bk, 1))
+        x = serve_solve_pallas(Sp, L, Vp, lam, bk=bk,
+                               interpret=(mode == "interpret"))[:m]
+    return x[:, 0] if squeeze else x
+
+
+def _serve_solve_blocked(S, L, V, lam, *, mode: Optional[str] = None):
+    from repro.core.operator import as_blocked_vector
+
+    if hasattr(S, "materialize"):
+        S = S.materialize()
+    v_blocks, was_flat = as_blocked_vector(S, V)
+    u = None
+    for b, vb in zip(S.blocks, v_blocks):
+        ub = sv_cross(b, vb, mode=mode)
+        u = ub if u is None else u + ub
+    w = solve_triangular(L, u, lower=True)
+    Lt = L.conj().T if jnp.issubdtype(L.dtype, jnp.complexfloating) else L.T
+    w = solve_triangular(Lt, w, lower=False)
+    x = tuple(serve_apply(b, w, vb, lam, mode=mode)
+              for b, vb in zip(S.blocks, v_blocks))
+    return BlockedScores.concat(x) if was_flat else x
+
+
+def fold_cols(S, rows, *, mode: Optional[str] = None):
+    """(cols, corner) = (S·rows†, rows·rows†) — the fold cross pass, fused
+    per window block with both fp32 accumulators resident in VMEM. ``S``
+    dense or blocked; ``rows`` (k, m) dense or matching per-block tuple."""
+    S_blocks = S.blocks if is_blocked(S) else (S,)
+    row_blocks = tuple(rows) if isinstance(rows, (tuple, list)) else (rows,)
+    cols = corner = None
+    for b, r in zip(S_blocks, row_blocks):
+        if not _use_kernels(mode) or _any_complex(b, r):
+            cb, kb = ref.fold_cols_ref(b, r)
+        else:
+            n, m = b.shape
+            _, bk = _pick_blocks(n, m)
+            bp = pad_to(b, (1, bk))
+            rp = pad_to(r, (1, bk))
+            cb, kb = fold_cols_pallas(bp, rp, bk=bk,
+                                      interpret=(mode == "interpret"))
+        cols = cb if cols is None else cols + cb
+        corner = kb if corner is None else corner + kb
+    return cols, corner
 
 
 def chol_solve_fused(S, v, damping, *, mode: Optional[str] = None):

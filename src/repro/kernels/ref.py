@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["gram_ref", "gram_sv_ref", "ngd_apply_ref", "cholesky_ref",
-           "cholupdate_ref", "chol_solve_ref"]
+           "cholupdate_ref", "chol_solve_ref", "sv_cross_ref",
+           "serve_apply_ref", "serve_solve_ref", "fold_cols_ref"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -47,6 +48,58 @@ def cholupdate_ref(L: jax.Array, X: jax.Array, sign: int = 1) -> jax.Array:
     fn = chol_update if sign > 0 else chol_downdate
     tgt = jnp.promote_types(jnp.promote_types(L.dtype, X.dtype), jnp.float32)
     return fn(L.astype(tgt), X.astype(tgt))
+
+
+def _acc(*arrays):
+    """fp32-or-wider accumulation dtype of the operands (the package-wide
+    low-precision invariant: storage may be bf16, accumulation never is)."""
+    tgt = jnp.float32
+    for a in arrays:
+        tgt = jnp.promote_types(tgt, a.dtype)
+    return tgt
+
+
+def _ct(A: jax.Array) -> jax.Array:
+    """Conjugate transpose (plain transpose for real dtypes)."""
+    return A.conj().T if jnp.issubdtype(A.dtype, jnp.complexfloating) \
+        else A.T
+
+
+def sv_cross_ref(S: jax.Array, V: jax.Array) -> jax.Array:
+    """U = S @ V — the serve cross pass, fp32(+) accumulation."""
+    tgt = _acc(S, V)
+    return jnp.matmul(S.astype(tgt), V.astype(tgt), precision=_HI)
+
+
+def serve_apply_ref(S: jax.Array, w: jax.Array, V: jax.Array, lam
+                    ) -> jax.Array:
+    """X = (V − S† @ w) / λ — the multi-RHS serve apply pass."""
+    tgt = _acc(S, V, w)
+    lam_r = jnp.asarray(lam, jnp.zeros((), tgt).real.dtype)
+    return (V.astype(tgt)
+            - jnp.matmul(_ct(S.astype(tgt)), w.astype(tgt), precision=_HI)
+            ) / lam_r
+
+
+def serve_solve_ref(S: jax.Array, L: jax.Array, V: jax.Array, lam
+                    ) -> jax.Array:
+    """The whole cached uniform-λ serve identity against a resident L:
+    X = (V − S† L⁻† L⁻¹ S V)/λ — oracle for the fused serve kernel and the
+    CPU execution path of ``ops.serve_solve`` (exact
+    ``CholFactorization.solve`` algebra)."""
+    from jax.scipy.linalg import solve_triangular
+    u = sv_cross_ref(S, V)
+    w = solve_triangular(L, u, lower=True)
+    w = solve_triangular(_ct(L), w, lower=False)
+    return serve_apply_ref(S, w, V, lam)
+
+
+def fold_cols_ref(S: jax.Array, rows: jax.Array):
+    """(cols, corner) = (S·rows†, rows·rows†) — the fold cross columns."""
+    tgt = _acc(S, rows)
+    r = rows.astype(tgt)
+    return (jnp.matmul(S.astype(tgt), _ct(r), precision=_HI),
+            jnp.matmul(r, _ct(r), precision=_HI))
 
 
 def chol_solve_ref(S: jax.Array, v: jax.Array, lam) -> jax.Array:

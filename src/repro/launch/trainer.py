@@ -214,7 +214,7 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                  refresh_every: int = 64, drift_tol=None, drift_frac=0.25,
                  jitter: float = 0.0, score_chunk=None, policy: str = "cached",
                  layout=None, async_: bool = False, oversize: str = "split",
-                 seed: int = 0):
+                 window_dtype=None, seed: int = 0):
     """Config → mesh → model → resident curvature window → server.
 
     The serving twin of ``build_trainer``: builds the jitted serve steps
@@ -231,6 +231,10 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
     request path and the adaptation folds then run through the shard_map
     solve and the distributed cholupdate. A sharded window requires the
     async server (the eager one is the replicated baseline).
+
+    ``window_dtype`` (e.g. "bfloat16"): low-precision storage for the
+    resident score window — halves window HBM bytes; every S pass still
+    accumulates fp32 (see ``init_serve_state``).
     """
     from repro.serve import (OnlineAdaptation, SolveServer,
                              TokenBudgetBatcher, init_serve_state)
@@ -251,14 +255,17 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
     if async_:
         from repro.dist import (AsyncSolveServer, DistSpec,
                                 init_sharded_serve_state)
-        state = init_serve_state(S0, damping, jitter=jitter) \
+        state = init_serve_state(S0, damping, jitter=jitter,
+                                 window_dtype=window_dtype) \
             if layout is None else init_sharded_serve_state(
-                S0, damping, spec=DistSpec(mesh, layout), jitter=jitter)
+                S0, damping, spec=DistSpec(mesh, layout), jitter=jitter,
+                window_dtype=window_dtype)
         server = AsyncSolveServer(state, batcher=batcher,
                                   adaptation=adaptation, policy=policy,
                                   jitter=jitter)
     else:
-        server = SolveServer(init_serve_state(S0, damping, jitter=jitter),
+        server = SolveServer(init_serve_state(S0, damping, jitter=jitter,
+                                              window_dtype=window_dtype),
                              batcher=batcher, adaptation=adaptation,
                              policy=policy, jitter=jitter)
     return server, handles
@@ -271,7 +278,7 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
                 drift_tol=None, drift_frac=0.25, jitter: float = 0.0,
                 score_chunk=None, policy: str = "cached",
                 async_workers: bool = False, worker_layout=None,
-                seed: int = 0):
+                window_dtype=None, seed: int = 0):
     """Config → model → seeded window → N-process serving fleet.
 
     The fleet twin of ``build_server``: the model (score-grad pass,
@@ -303,7 +310,9 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
             "max_tokens": int(max_tokens), "max_requests": int(max_requests),
             "refresh_every": int(refresh_every), "drift_tol": drift_tol,
             "drift_frac": drift_frac, "async": bool(async_workers),
-            "layout": worker_layout}
+            "layout": worker_layout,
+            "window_dtype": None if window_dtype is None
+            else str(jnp.dtype(window_dtype))}
     arrays = {}
     from repro.core.operator import is_blocked
     put_blocks(arrays, meta, "S0",

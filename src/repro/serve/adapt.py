@@ -41,40 +41,49 @@ from repro.core.damping import auto_drift_tol
 from repro.core.operator import BlockedScores, is_blocked
 from repro.core.solvers import chol_factorize
 from repro.curvature.update import chol_downdate, chol_update, replace_factors
+from repro.kernels import ops as kernel_ops
 from repro.serve.state import ServeState, serve_mode
 
 __all__ = ["OnlineAdaptation", "pad_to_window_cols"]
 
 
-def pad_to_window_cols(S, values, *, axis: int):
+def pad_to_window_cols(S, values, *, axis: int, cast: Optional[bool] = None):
     """Zero-pad ``values`` (dense array or per-block tuple) along ``axis``
     up to the resident window's column widths — the single place the
     pad-to-mesh rule is applied to incoming data. A sharded window may
     carry zero pad columns (``repro.dist`` uneven-shard support); zeros
     are exact no-ops in every S pass, so fold rows (axis=1: (k, m)) and
-    stacked RHS (axis=0: (m, k)) pad here and stay exact."""
+    stacked RHS (axis=0: (m, k)) pad here and stay exact.
+
+    ``cast`` (default: ``axis == 1``, i.e. fold rows): additionally round
+    the values to each window block's storage dtype — the ONE dtype-aware
+    cast point shared by ``OnlineAdaptation.fold`` and
+    ``sharded_window_cols``. A bf16 window then computes its fold cross
+    columns from exactly the values the FIFO write will store (no silent
+    per-call-site upcasts, no W-vs-S drift); RHS columns (axis=0) are
+    *not* rounded — solve accumulation stays fp32."""
     S_blocks = S.blocks if is_blocked(S) else (S,)
     val_blocks = tuple(values) if isinstance(values, (tuple, list)) \
         else (values,)
+    if cast is None:
+        cast = axis == 1
 
-    def pad(v, width):
+    def pad(v, block):
+        if cast and v.dtype != block.dtype \
+                and jnp.issubdtype(block.dtype, jnp.floating) \
+                and jnp.issubdtype(v.dtype, jnp.floating):
+            v = v.astype(block.dtype)
+        width = block.shape[1]
         if v.shape[axis] >= width:
             return v
         spec = [(0, 0)] * v.ndim
         spec[axis] = (0, width - v.shape[axis])
         return jnp.pad(v, spec)
 
-    padded = tuple(pad(v, b.shape[1])
-                   for b, v in zip(S_blocks, val_blocks))
+    padded = tuple(pad(v, b) for b, v in zip(S_blocks, val_blocks))
     if isinstance(values, (tuple, list)):
         return padded
     return padded[0]
-
-_HI = jax.lax.Precision.HIGHEST
-
-
-def _ct(A, mode: str):
-    return A.conj().T if mode == "complex" else A.T
 
 
 @functools.partial(jax.jit, static_argnames=("mode",))
@@ -90,15 +99,14 @@ def _fold_window(S, W, L, slot, rows, *, mode):
 
     # new Gram columns W'[:, idx]: inner products of the post-replacement
     # window with the incoming rows — old rows via one S·rows† pass, the
-    # replaced rows' own entries via the small rows·rows† corner.
+    # replaced rows' own entries via the small rows·rows† corner. Both run
+    # in the fused fold kernel on TPU (one pass, resident accumulators),
+    # the identical-algebra jnp reference elsewhere.
     S_blocks = S.blocks if blocked else (S,)
+    cols, corner = kernel_ops.fold_cols(S, rows)
     acc = jnp.promote_types(W.dtype, jnp.float32)
-    cols = sum(jnp.matmul(b.astype(acc), _ct(r.astype(acc), mode),
-                          precision=_HI)
-               for b, r in zip(S_blocks, row_blocks))            # (n, k)
-    corner = sum(jnp.matmul(r.astype(acc), _ct(r.astype(acc), mode),
-                            precision=_HI)
-                 for r in row_blocks)                            # (k, k)
+    cols = cols.astype(acc)
+    corner = corner.astype(acc)
     cols = cols.at[idx, :].set(corner)
 
     X, Y, Wp = replace_factors(W, cols, idx)
@@ -203,11 +211,14 @@ class OnlineAdaptation:
                     f"{expect} (apply events in journal order)")
         rows_in = rows if isinstance(rows, (tuple, list)) \
             else jnp.asarray(rows)
+        # the one dtype-aware cast + pad point: rows are rounded to the
+        # window storage dtype here, so journal/gossip, the cols pass and
+        # the FIFO write all see the same stored values
+        rows_in = pad_to_window_cols(state.S, rows_in, axis=1)
         if self.dist is not None:
             fold = self._dist_fn("fold", serve_mode(state))
             Sp, Wp, Lp, slot = fold(state.S, state.W, state.L, state.slot,
-                                    pad_to_window_cols(state.S, rows_in,
-                                                       axis=1))
+                                    rows_in)
         else:
             Sp, Wp, Lp, slot = _fold_window(
                 state.S, state.W, state.L, state.slot, rows_in,

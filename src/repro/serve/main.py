@@ -96,6 +96,10 @@ def serve_main(argv=None):
                     help="fleet: do not gossip window folds between "
                          "workers — folds partition by routed worker "
                          "(meaningful with --route by_adapter)")
+    ap.add_argument("--window-dtype", choices=["fp32", "bf16"],
+                    default="fp32",
+                    help="resident score-window storage dtype: bf16 halves "
+                         "window bytes; Gram/solve arithmetic stays fp32")
     ap.add_argument("--ckpt-dir", default="artifacts/serve_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=8,
                     help="checkpoint cadence in flush rounds (0: off)")
@@ -104,6 +108,8 @@ def serve_main(argv=None):
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
+    args.window_dtype = \
+        None if args.window_dtype == "fp32" else "bfloat16"
     shape = tuple(int(x) for x in args.mesh_shape.split(","))
     axes = ("data", "model")[:len(shape)] if len(shape) <= 2 \
         else ("pod", "data", "model")
@@ -121,7 +127,8 @@ def serve_main(argv=None):
         damping=args.damping, max_tokens=args.max_tokens,
         max_requests=args.max_requests, refresh_every=args.refresh_every,
         drift_tol=args.drift_tol, drift_frac=args.drift_frac,
-        layout=layout, async_=async_, seed=args.seed)
+        layout=layout, async_=async_, window_dtype=args.window_dtype,
+        seed=args.seed)
     kind = f"async {layout or 'replicated'}" if async_ else "eager"
     print(f"resident window factorized: n={args.window} "
           f"m={server.state.S.shape[1]} λ0={args.damping} [{kind}] "
@@ -222,7 +229,8 @@ def _serve_fleet(args, cfg, mesh):
         max_requests=args.max_requests, refresh_every=args.refresh_every,
         drift_tol=args.drift_tol, drift_frac=args.drift_frac,
         async_workers=args.async_ or worker_layout is not None,
-        worker_layout=worker_layout, seed=args.seed)
+        worker_layout=worker_layout, window_dtype=args.window_dtype,
+        seed=args.seed)
     print(f"fleet up: {args.fleet} workers, route={args.route}, "
           f"reconcile={not args.no_reconcile}, n={args.window} "
           f"({(time.perf_counter() - t0) * 1e3:.0f} ms)", flush=True)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.solvers import CholFactorization, chol_factorize
+from repro.kernels import ops as kernel_ops
 from repro.serve.adapt import OnlineAdaptation
 from repro.serve.batcher import Microbatch, TokenBudgetBatcher
 from repro.serve.state import ServeState, as_factorization, serve_mode
@@ -51,15 +52,24 @@ class SolveResult(NamedTuple):
 
 @functools.partial(jax.jit,
                    static_argnames=("mode", "jitter", "uniform", "monitor",
-                                    "refactorize"))
+                                    "refactorize", "fused"))
 def _coalesced_solve(S, W, L, lam0, V, lams, *, mode, jitter, uniform,
-                     monitor, refactorize):
+                     monitor, refactorize, fused=True):
     """One microbatch: x_j = (SᵀS + λ_j I)⁻¹ v_j, plus the monitored
-    relative residual (−1 when off / not applicable)."""
+    relative residual (−1 when off / not applicable).
+
+    The cached uniform-λ path without drift monitoring — the serving fast
+    path — dispatches to ``kernels.ops.serve_solve``: the fused resident-L
+    Pallas kernel on TPU, the identical-algebra jnp reference elsewhere.
+    ``fused=False`` forces the compositional ``CholFactorization.solve``
+    (the benchmark baseline the fused kernel is gated against)."""
     if refactorize:
         # the baseline: a fresh O(n²·m) Gram + O(n³) Cholesky per microbatch
         fac = chol_factorize(S, lam0, mode=mode, jitter=jitter)
     else:
+        if fused and uniform and not monitor and mode == "real":
+            x = kernel_ops.serve_solve(S, L, V, lam0)
+            return x, -jnp.ones((), jnp.float32)
         fac = CholFactorization(S=S, mode=mode, W=W, L=L, lam=lam0,
                                 jitter=jitter, take_real_v=False,
                                 precision=_HI)
@@ -123,13 +133,17 @@ class SolveServer:
       monitor_drift: compute the cheap relative residual on uniform-λ
         microbatches (feeds the drift-refresh threshold).
       jitter: extra diagonal, as elsewhere.
+      fused: route cached uniform-λ microbatches (monitoring off) through
+        the fused resident-L serve kernel; False forces the compositional
+        solve — the baseline ``benchmarks/serve.py`` gates against.
     """
 
     def __init__(self, state: ServeState, *,
                  batcher: Optional[TokenBudgetBatcher] = None,
                  adaptation: Optional[OnlineAdaptation] = None,
                  policy: str = "cached", monitor_drift: bool = True,
-                 jitter: float = 0.0, clock=time.perf_counter):
+                 jitter: float = 0.0, fused: bool = True,
+                 clock=time.perf_counter):
         if policy not in ("cached", "refactorize"):
             raise ValueError(f"policy must be 'cached' or 'refactorize', "
                              f"got {policy!r}")
@@ -139,6 +153,7 @@ class SolveServer:
         self.policy = policy
         self.monitor_drift = bool(monitor_drift)
         self.jitter = float(jitter)
+        self.fused = bool(fused)
         self.clock = clock
         self.metrics = ServerMetrics()
 
@@ -194,7 +209,7 @@ class SolveServer:
             st.S, st.W, st.L, st.lam0, mb.V, mb.dampings,
             mode=serve_mode(st), jitter=self.jitter, uniform=uniform,
             monitor=self.monitor_drift and self.policy == "cached",
-            refactorize=self.policy == "refactorize")
+            refactorize=self.policy == "refactorize", fused=self.fused)
         jax.block_until_ready(x)
         t_done = self.clock()
 

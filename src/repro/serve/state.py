@@ -64,11 +64,50 @@ def _zero_stats() -> ServeStats:
 
 
 def init_serve_state(S, damping, *, jitter: float = 0.0,
-                     mode: str = "auto") -> ServeState:
+                     mode: str = "auto",
+                     window_dtype=None) -> ServeState:
     """Build the resident state: one O(n²·m) Gram pass + O(n³) Cholesky —
-    the only time the serving subsystem ever pays them up front."""
-    fac = chol_factorize(S, damping, mode=mode, jitter=jitter)
-    return ServeState(S=fac.S, W=fac.W, L=fac.L, lam0=fac.lam,
+    the only time the serving subsystem ever pays them up front.
+
+    ``window_dtype``: optional low-precision storage dtype for the score
+    window (e.g. ``jnp.bfloat16``). The window is rounded to it *first*
+    and W/L are built from the rounded values with fp32 accumulation, so
+    the resident factor describes exactly the window the request path and
+    the fold algebra will read — storage narrows, arithmetic never does.
+    Real windows only (a complex window must realify via
+    ``mode="real_part"`` before the cast).
+    """
+    if window_dtype is None:
+        fac = chol_factorize(S, damping, mode=mode, jitter=jitter)
+        return ServeState(S=fac.S, W=fac.W, L=fac.L, lam0=fac.lam,
+                          slot=jnp.zeros((), jnp.int32),
+                          age=jnp.zeros((), jnp.int32),
+                          stats=_zero_stats())
+    wd = jnp.dtype(window_dtype)
+    if not jnp.issubdtype(wd, jnp.floating):
+        raise ValueError(f"window_dtype must be a real float dtype, got {wd}")
+    if jnp.issubdtype(S.dtype, jnp.complexfloating) and mode != "real_part":
+        raise ValueError(
+            "low-precision window storage is real-only; use "
+            "mode='real_part' (realification) for a complex score window")
+    # realify through the standard transform, round the window to the
+    # storage dtype, then build W (fp32-accumulated Gram of the *stored*
+    # values) and the resident factor from the rounded window.
+    S_in = S
+    if jnp.issubdtype(S_in.dtype, jnp.complexfloating):
+        S_in = S_in.realify() if is_blocked(S_in) else \
+            jnp.concatenate([jnp.real(S_in), jnp.imag(S_in)], axis=0)
+    S_store = S_in.astype(wd)
+    W = S_store.gram() if is_blocked(S_store) else None
+    if W is None:
+        acc = jnp.promote_types(wd, jnp.float32)
+        W = jnp.matmul(S_store.astype(acc), S_store.astype(acc).T,
+                       precision=_HI)
+    lam = jnp.asarray(damping, W.dtype)
+    n = W.shape[0]
+    L = jnp.linalg.cholesky(
+        W + (lam + jnp.asarray(jitter, W.dtype)) * jnp.eye(n, dtype=W.dtype))
+    return ServeState(S=S_store, W=W, L=L, lam0=lam,
                       slot=jnp.zeros((), jnp.int32),
                       age=jnp.zeros((), jnp.int32),
                       stats=_zero_stats())

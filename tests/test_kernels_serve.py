@@ -1,0 +1,323 @@
+"""Fused serve-path kernels vs the compositional solve, and bf16 window
+storage: kernel-vs-reference equivalence in interpret mode across dense /
+blocked windows, real / complex dtypes and odd (padded) shapes; the
+maintained factor after FIFO wrap; the bf16 end-to-end serve trace and
+its bit-identical checkpoint round-trip; one sharded bf16 fold + solve
+round (subprocess with 4 forced host devices, the ``test_dist`` pattern).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.operator import BlockedScores
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+SHAPES = [(8, 128), (32, 300), (100, 1000), (130, 515)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+ENV = {**os.environ,
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+       "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+
+
+def run_py(body: str, timeout=420):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       env=ENV, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def _rel(a, b):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+
+
+def _window(shape, dtype, lam=0.2):
+    """(S, L, lam): a resident window with its factor over the *stored*
+    values — W accumulated fp32 from the (possibly bf16) S."""
+    n, m = shape
+    S = jnp.asarray(RNG.normal(size=shape) / np.sqrt(m), dtype)
+    W = jnp.matmul(S.astype(jnp.float32), S.astype(jnp.float32).T)
+    L = jnp.linalg.cholesky(W + lam * jnp.eye(n, dtype=jnp.float32))
+    return S, L, lam
+
+
+# ---------------------------------------------------------------------------
+# fused solve kernel vs reference / compositional (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+@pytest.mark.parametrize("k", [1, 5])
+def test_serve_solve_fused_matches_ref(shape, dtype, k):
+    S, L, lam = _window(shape, dtype)
+    V = jnp.asarray(RNG.normal(size=(shape[1], k)), jnp.float32)
+    x = ops.serve_solve(S, L, V, lam, mode="interpret")
+    assert x.dtype == jnp.float32 and x.shape == (shape[1], k)
+    assert _rel(x, ref.serve_solve_ref(S, L, V, lam)) < 5e-5
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_sv_cross_and_serve_apply_match_ref(shape, dtype):
+    n, m = shape
+    S = jnp.asarray(RNG.normal(size=shape), dtype)
+    V = jnp.asarray(RNG.normal(size=(m, 3)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(n, 3)), jnp.float32)
+    u = ops.sv_cross(S, V, mode="interpret")
+    assert _rel(u, ref.sv_cross_ref(S, V)) < 5e-6
+    x = ops.serve_apply(S, w, V, 0.37, mode="interpret")
+    assert _rel(x, ref.serve_apply_ref(S, w, V, 0.37)) < 5e-6
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+@pytest.mark.parametrize("k", [1, 4])
+def test_fold_cols_matches_ref(shape, dtype, k):
+    S = jnp.asarray(RNG.normal(size=shape), dtype)
+    rows = jnp.asarray(RNG.normal(size=(k, shape[1])), dtype)
+    cols, corner = ops.fold_cols(S, rows, mode="interpret")
+    cr, kr = ref.fold_cols_ref(S, rows)
+    assert cols.dtype == jnp.float32 and corner.shape == (k, k)
+    assert _rel(cols, cr) < 5e-6 and _rel(corner, kr) < 5e-6
+
+
+def test_serve_solve_matches_compositional():
+    """The fused kernel is the same algebra as CholFactorization.solve —
+    the compositional path the server's ``fused=False`` baseline runs."""
+    from repro.serve import as_factorization, init_serve_state
+    n, m, k = 48, 700, 6
+    S = jnp.asarray(RNG.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    V = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    state = init_serve_state(S, 0.15)
+    x_fused = ops.serve_solve(state.S, state.L, V, 0.15, mode="interpret")
+    x_comp = as_factorization(state).solve(V)
+    assert _rel(x_fused, x_comp) < 5e-5
+
+
+@pytest.mark.parametrize("flat", [True, False], ids=["flat_v", "tuple_v"])
+def test_serve_solve_blocked_window(flat):
+    n, widths, k = 24, (130, 75, 300), 3
+    blocks = tuple(jnp.asarray(RNG.normal(size=(n, w)) / 10, jnp.float32)
+                   for w in widths)
+    S = BlockedScores(blocks)
+    dense = jnp.concatenate(blocks, axis=1)
+    W = S.gram()
+    L = jnp.linalg.cholesky(W + 0.2 * jnp.eye(n, dtype=W.dtype))
+    V = jnp.asarray(RNG.normal(size=(sum(widths), k)), jnp.float32)
+    Vin = V if flat else tuple(
+        V[sum(widths[:i]):sum(widths[:i + 1])] for i in range(len(widths)))
+    x = ops.serve_solve(S, L, Vin, 0.2, mode="interpret")
+    x_ref = ref.serve_solve_ref(dense, L, V, 0.2)
+    x_dense = x if flat else jnp.concatenate(x, axis=0)
+    assert _rel(x_dense, x_ref) < 5e-5
+
+
+def test_fold_cols_blocked_window():
+    n, widths, k = 16, (90, 515), 4
+    blocks = tuple(jnp.asarray(RNG.normal(size=(n, w)), jnp.float32)
+                   for w in widths)
+    rows = tuple(jnp.asarray(RNG.normal(size=(k, w)), jnp.float32)
+                 for w in widths)
+    cols, corner = ops.fold_cols(BlockedScores(blocks), rows,
+                                 mode="interpret")
+    dense = jnp.concatenate(blocks, axis=1)
+    cr, kr = ref.fold_cols_ref(dense, jnp.concatenate(rows, axis=1))
+    assert _rel(cols, cr) < 5e-6 and _rel(corner, kr) < 5e-6
+
+
+# ---------------------------------------------------------------------------
+# dispatch: complex and CPU-auto route to the reference
+# ---------------------------------------------------------------------------
+
+def test_complex_window_routes_to_ref():
+    n, m, k = 20, 256, 2
+    S = jnp.asarray(RNG.normal(size=(n, m)) + 1j * RNG.normal(size=(n, m)),
+                    jnp.complex64) / np.sqrt(m)
+    W = jnp.matmul(S, S.conj().T)
+    L = jnp.linalg.cholesky(W + 0.3 * jnp.eye(n, dtype=W.dtype))
+    V = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    # "interpret" would force the kernel, but complex must still take the
+    # reference — same guarantee the PR-2 kernels give
+    x = ops.serve_solve(S, L, V, 0.3, mode="interpret")
+    assert np.array_equal(np.asarray(x),
+                          np.asarray(ref.serve_solve_ref(S, L, V, 0.3)))
+    rows = jnp.asarray(RNG.normal(size=(2, m)), jnp.complex64)
+    cols, corner = ops.fold_cols(S, rows, mode="interpret")
+    cr, kr = ref.fold_cols_ref(S, rows)
+    assert np.array_equal(np.asarray(cols), np.asarray(cr))
+    assert np.array_equal(np.asarray(corner), np.asarray(kr))
+
+
+def test_cpu_auto_routes_to_ref():
+    if ops.on_tpu():
+        pytest.skip("TPU backend: auto mode routes to the kernels")
+    S, L, lam = _window((16, 200), jnp.float32)
+    V = jnp.asarray(RNG.normal(size=(200, 3)), jnp.float32)
+    assert np.array_equal(np.asarray(ops.serve_solve(S, L, V, lam)),
+                          np.asarray(ref.serve_solve_ref(S, L, V, lam)))
+
+
+# ---------------------------------------------------------------------------
+# maintained factor after FIFO wrap
+# ---------------------------------------------------------------------------
+
+def test_serve_solve_after_fifo_wrap():
+    """After enough folds to wrap the FIFO, the fused kernel against the
+    rank-k-maintained factor still matches the compositional solve on the
+    same state — and stays ≤5e-3 of a fresh refactorization."""
+    from repro.serve import (OnlineAdaptation, SolveServer,
+                             TokenBudgetBatcher, as_factorization,
+                             init_serve_state)
+    n, m, k = 10, 300, 3
+    S = jnp.asarray(RNG.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    srv = SolveServer(init_serve_state(S, 0.1),
+                      batcher=TokenBudgetBatcher(),
+                      adaptation=OnlineAdaptation(refresh_every=10 ** 6,
+                                                  drift_frac=None))
+    for i in range(5):    # 5 folds x 3 rows wraps the n=10 FIFO
+        srv.apply_fold(jnp.asarray(
+            RNG.normal(size=(k, m)) / np.sqrt(m), jnp.float32))
+    state = srv.state
+    assert int(state.stats.adapted) == 15
+    V = jnp.asarray(RNG.normal(size=(m, 4)), jnp.float32)
+    x_fused = ops.serve_solve(state.S, state.L, V, 0.1, mode="interpret")
+    x_comp = as_factorization(state).solve(V)
+    assert _rel(x_fused, x_comp) < 5e-5
+    fresh = as_factorization(init_serve_state(state.S, 0.1)).solve(V)
+    assert float(jnp.linalg.norm(x_fused - fresh)
+                 / jnp.linalg.norm(fresh)) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# bf16 window storage
+# ---------------------------------------------------------------------------
+
+def test_bf16_window_state_invariants():
+    from repro.serve import init_serve_state
+    n, m = 12, 180
+    S = jnp.asarray(RNG.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    st = init_serve_state(S, 0.1, window_dtype="bfloat16")
+    assert st.S.dtype == jnp.bfloat16
+    # arithmetic never narrows: the Gram/factor stay fp32, and W is the
+    # fp32-accumulated Gram of the *stored* (rounded) window
+    assert st.W.dtype == jnp.float32 and st.L.dtype == jnp.float32
+    S32 = st.S.astype(jnp.float32)
+    assert _rel(st.W, jnp.matmul(S32, S32.T)) < 1e-6
+
+
+def test_bf16_serve_trace_close_to_fp32():
+    """End-to-end request trace (folds included) with a bf16 window stays
+    within 5e-3 of the fp32 server — the benchmark's acceptance bound."""
+    from repro.serve import (OnlineAdaptation, SolveServer,
+                             TokenBudgetBatcher, init_serve_state)
+    n, m = 16, 400
+    S = jnp.asarray(RNG.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    vs = [jnp.asarray(RNG.normal(size=(m,)), jnp.float32) for _ in range(10)]
+    rows = jnp.asarray(RNG.normal(size=(3, m)) / np.sqrt(m), jnp.float32)
+
+    def drive(window_dtype):
+        srv = SolveServer(
+            init_serve_state(S, 0.1, window_dtype=window_dtype),
+            batcher=TokenBudgetBatcher(max_requests=2),
+            adaptation=OnlineAdaptation(refresh_every=10 ** 6,
+                                        drift_frac=None))
+        sub = {}
+        for i, v in enumerate(vs):
+            sub[srv.submit(v, rows=rows if i in (3, 7) else None)] = i
+        return {sub[r.uid]: np.asarray(r.x) for r in srv.flush()}
+
+    ref_xs, low_xs = drive(None), drive("bfloat16")
+    worst = max(np.linalg.norm(low_xs[i] - ref_xs[i])
+                / np.linalg.norm(ref_xs[i]) for i in ref_xs)
+    assert worst < 5e-3, worst
+
+
+def test_bf16_checkpoint_bit_identical(tmp_path):
+    from repro.serve import (init_serve_state, restore_serve_state,
+                             save_serve_state)
+    n, m = 8, 96
+    S = jnp.asarray(RNG.normal(size=(n, m)), jnp.float32)
+    st = init_serve_state(S, 0.2, window_dtype="bfloat16")
+    save_serve_state(tmp_path, 1, st)
+    restored, _ = restore_serve_state(tmp_path, 1, st)
+    assert restored.S.dtype == jnp.bfloat16
+    for a, b in ((restored.S, st.S), (restored.W, st.W),
+                 (restored.L, st.L)):
+        assert np.array_equal(
+            np.asarray(a).view(np.uint16 if a.dtype == jnp.bfloat16
+                               else np.uint8),
+            np.asarray(b).view(np.uint16 if b.dtype == jnp.bfloat16
+                               else np.uint8))
+
+
+def test_complex_window_rejects_low_precision_storage():
+    from repro.serve import init_serve_state
+    S = jnp.asarray(RNG.normal(size=(6, 40)), jnp.complex64)
+    with pytest.raises(ValueError, match="real_part"):
+        init_serve_state(S, 0.1, window_dtype="bfloat16")
+    # realification makes it legal: the stored window is real
+    st = init_serve_state(S, 0.1, mode="real_part",
+                          window_dtype="bfloat16")
+    assert st.S.dtype == jnp.bfloat16 and st.S.shape == (12, 40)
+
+
+# ---------------------------------------------------------------------------
+# sharded bf16 fold + solve round (4 forced host devices)
+# ---------------------------------------------------------------------------
+
+def test_sharded_bf16_fold_and_solve_round():
+    """A 1d-sharded bf16 window serves and folds within 5e-3 of the
+    replicated fp32 server on the same trace — the per-slab kernels and
+    the centralized fold-row cast agree across tiers."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist import (AsyncSolveServer, DistSpec,
+                                init_sharded_serve_state)
+        from repro.launch.mesh import make_mesh
+        from repro.serve import (OnlineAdaptation, SolveServer,
+                                 TokenBudgetBatcher, init_serve_state)
+        rng = np.random.default_rng(6)
+        n, m = 12, 160
+        S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+        vs = [jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+              for _ in range(6)]
+        rows = jnp.asarray(rng.normal(size=(3, m)) / np.sqrt(m),
+                           jnp.float32)
+
+        def drive(server):
+            sub = {}
+            for i, v in enumerate(vs):
+                sub[server.submit(v, rows=rows if i == 2 else None)] = i
+            return {sub[r.uid]: np.asarray(r.x) for r in server.flush()}
+
+        adapt = lambda: OnlineAdaptation(refresh_every=10 ** 6,
+                                         drift_frac=None)
+        ref = drive(SolveServer(init_serve_state(S, 0.1),
+                                batcher=TokenBudgetBatcher(max_requests=2),
+                                adaptation=adapt()))
+        mesh = make_mesh((jax.device_count(),), ("model",))
+        st = init_sharded_serve_state(S, 0.1, spec=DistSpec(mesh, "1d"),
+                                      window_dtype="bfloat16")
+        assert st.S.dtype == jnp.bfloat16
+        srv = AsyncSolveServer(st, batcher=TokenBudgetBatcher(
+                                   max_requests=2),
+                               adaptation=adapt())
+        got = drive(srv)
+        srv.shutdown()
+        # the fold rounded rows into the stored dtype on every shard
+        assert srv.state.S.dtype == jnp.bfloat16
+        for i in ref:
+            rel = (np.linalg.norm(got[i] - ref[i])
+                   / np.linalg.norm(ref[i]))
+            assert rel < 5e-3, (i, rel)
+        print("ok")
+    """)
