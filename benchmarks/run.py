@@ -128,6 +128,18 @@ def main(argv=None) -> None:
     serve_fleet.run(emit=emit, assert_ratio=not tiny, **fv)
     serve_rows += rows
 
+    from benchmarks import serve_tenants
+    tv = dict(n=64, m=2_000, rank=4, tenants=96, resident_cap=16,
+              requests=8) if tiny \
+        else dict(n=512, m=25_000, rank=8, tenants=1_000, resident_cap=64,
+                  requests=24)
+    rows, emit = _collector({"section": "serve_tenants", **tv})
+    # the 5e-3 private-window equivalence, the O(n·r) resident-bytes
+    # bound, and the bit-identical evict->activate round trip assert at
+    # every shape; latency rows are trend-guarded
+    serve_tenants.run(emit=emit, **tv)
+    serve_rows += rows
+
     from benchmarks import roofline
     rows, emit = _collector({"section": "roofline"})
     roofline.run(emit=emit)

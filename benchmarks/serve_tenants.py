@@ -1,0 +1,191 @@
+"""Multi-tenant serving benchmark: per-tenant deltas vs private windows.
+
+The platform's claim, measured through the real ``SolveServer`` tenant
+path: serving a tenant off the shared base factor plus its rank-r delta
+must (a) return the private-window answer — max relative error vs a
+from-scratch ``chol_factorize([S; P†S])`` oracle below 5e-3, asserted at
+every shape — and (b) make the *per-tenant* resident cost O(n·r) bytes
+instead of the O(n·m) a private window copy would pin, asserted from
+measured bytes at ``tenants`` registered tenants under an LRU budget.
+
+Reported rows:
+
+* ``tenant_solve`` / ``private_window`` — p50 request latency through the
+  tenant path (cached L_t swap) vs refactorizing the tenant's private
+  window per request; plus the materialization cost (O(n²·r) cholupdate)
+  a cold factor pays once.
+* ``evict`` / ``activate`` — residency round-trip latency: spill one
+  tenant's delta to npz, then restore + journal-tail replay on the next
+  touch (bit-identical by construction; asserted here too).
+* ``resident_bytes`` — bytes actually held at ``tenants`` tenants with an
+  LRU budget sized for ``resident_cap`` of them: per-resident cost vs
+  n·r·itemsize (the O(n·r) assert) and vs the n·m window copy it avoids.
+
+    PYTHONPATH=src:. python benchmarks/serve_tenants.py [--tiny] [--json]
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _median_ms(fn, repeat):
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(ts))
+
+
+def run(emit=print, n=512, m=25_000, rank=8, tenants=1_000,
+        resident_cap=64, requests=24, damping=1e-2, seed=0,
+        spill_dir=None):
+    from repro.core import chol_factorize
+    from repro.serve import (OnlineAdaptation, SolveServer,
+                             TokenBudgetBatcher, init_serve_state)
+    from repro.tenants import (TenantManager, augmented_window, delta_nbytes,
+                               init_tenant_delta)
+
+    rng = np.random.default_rng(seed)
+    S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    state = init_serve_state(S, damping)
+    vs = [jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+          for _ in range(requests)]
+    rows = jnp.asarray(rng.normal(size=(rank, m)) / np.sqrt(m), jnp.float32)
+
+    def server(mgr):
+        return SolveServer(
+            state,
+            batcher=TokenBudgetBatcher(max_tokens=2 ** 30, max_requests=1),
+            adaptation=OnlineAdaptation(refresh_every=10 ** 9,
+                                        drift_tol=None, drift_frac=None),
+            monitor_drift=False, tenants=mgr)
+
+    # -- tenant solve vs the from-scratch private-window baseline ---------
+    mgr = TenantManager(rank, spill_dir=spill_dir)
+    srv = server(mgr)
+    mgr.fold(state, "hot", rows)
+    S_aug = augmented_window(state, mgr._tenants["hot"].delta)
+
+    cold_ms = _median_ms(
+        lambda: np.asarray(mgr.factor(state, "hot")), 1)  # materialization
+    xs, refs = [], []
+    for v in vs:          # warm path: cached L_t, factor hits
+        xs.append(np.asarray(srv.solve_one(v, tenant="hot")))
+    srv.metrics.reset()
+    for v in vs:
+        srv.solve_one(v, tenant="hot")
+    ms_tenant = srv.metrics.summary()["p50_ms"]
+
+    def private(v):
+        fac = chol_factorize(S_aug, damping)
+        return np.asarray(fac.solve(v))
+
+    refs = [private(v) for v in vs]       # also the equivalence oracle
+    ms_private = _median_ms(lambda: private(vs[0]), max(3, requests // 4))
+
+    worst = max(float(np.linalg.norm(x - r) / np.linalg.norm(r))
+                for x, r in zip(xs, refs))
+    emit(f"serve_tenants/tenant_solve_n{n}_m{m}_r{rank},"
+         f"{ms_tenant * 1e3:.0f},p50 via cached L_t swap "
+         f"(cold materialize {cold_ms:.1f} ms)")
+    emit(f"serve_tenants/private_window_n{n}_m{m}_r{rank},"
+         f"{ms_private * 1e3:.0f},p50 refactorize [S; P†S] per request")
+    emit(f"serve_tenants/equivalence_max_rel_err,,{worst:.2e} vs "
+         f"private-window oracle over {requests} requests")
+    assert worst < 5e-3, (
+        f"tenant-delta solves drifted from the private-window reference: "
+        f"max rel err {worst:.2e}")
+    assert mgr.stats.factor_hits > 0, "warm path never hit the factor cache"
+
+    # -- eviction / activation latency (bit-identical round trip) ---------
+    L_before = np.asarray(mgr.factor(state, "hot"))
+    ms_evict = _median_ms(lambda: mgr.evict("hot"), 1)
+    ms_activate = _median_ms(
+        lambda: np.asarray(mgr.factor(state, "hot")), 1)
+    assert np.array_equal(np.asarray(mgr.factor(state, "hot")), L_before), \
+        "evict -> restore + tail replay must reproduce the factor bitwise"
+    emit(f"serve_tenants/evict_n{n}_r{rank},{ms_evict * 1e3:.0f},"
+         f"delta -> npz spill")
+    emit(f"serve_tenants/activate_n{n}_r{rank},{ms_activate * 1e3:.0f},"
+         f"npz restore + journal tail replay + rematerialize")
+
+    # -- resident bytes at `tenants` tenants under an LRU budget ----------
+    per_delta = delta_nbytes(init_tenant_delta(n, rank, dtype=state.S.dtype))
+    budget = resident_cap * per_delta
+    mgr2 = TenantManager(rank, budget_bytes=budget, spill_dir=spill_dir)
+    t0 = time.perf_counter()
+    fold_rows = jnp.asarray(rng.normal(size=(1, m)) / np.sqrt(m),
+                            jnp.float32)
+    for t in range(tenants):
+        mgr2.fold(state, f"t{t}", fold_rows)
+    churn_s = time.perf_counter() - t0
+    held = mgr2.resident_bytes()
+    res = mgr2.resident_count()
+    per_tenant = held / max(res, 1)
+    window_copy = int(np.asarray(state.S).nbytes)
+    emit(f"serve_tenants/resident_bytes_{tenants}tenants,,"
+         f"{held} B held ({res} resident / {tenants} registered, "
+         f"{per_tenant:.0f} B/tenant = "
+         f"{per_tenant / window_copy:.1e}x the n*m window copy; "
+         f"churn {tenants / max(churn_s, 1e-9):.0f} folds/s)")
+    assert held <= budget, (
+        f"LRU residency blew the byte budget: {held} > {budget}")
+    # O(n·r): measured per-resident-tenant bytes track n·r·itemsize (the
+    # fold columns) with only the signs/cursor/age epsilon on top — and
+    # sit far below both O(n²) (a factor copy) and O(n·m) (a window copy)
+    nr_bytes = n * rank * np.dtype(np.float32).itemsize
+    assert per_tenant <= 1.25 * nr_bytes + 256, (
+        f"per-tenant resident cost is not O(n*r): {per_tenant:.0f} B vs "
+        f"n*r*4 = {nr_bytes} B")
+    assert per_tenant < min(n * n, window_copy), per_tenant
+    assert mgr2.stats.evictions >= tenants - resident_cap, \
+        mgr2.stats.as_dict()
+
+    return {"n": n, "m": m, "rank": rank, "tenants": tenants,
+            "tenant_p50_ms": ms_tenant, "private_p50_ms": ms_private,
+            "cold_materialize_ms": cold_ms,
+            "equivalence_max_rel_err": worst,
+            "evict_ms": ms_evict, "activate_ms": ms_activate,
+            "resident_bytes": int(held), "resident_tenants": int(res),
+            "per_tenant_bytes": float(per_tenant),
+            "budget_bytes": int(budget)}
+
+
+def main(argv=None):
+    import sys
+    argv = sys.argv[1:] if argv is None else argv
+    tiny = "--tiny" in argv
+    as_json = "--json" in argv
+    shapes = dict(n=64, m=2_000, rank=4, tenants=96, resident_cap=16,
+                  requests=8) if tiny \
+        else dict(n=512, m=25_000, rank=8, tenants=1_000, resident_cap=64,
+                  requests=24)
+
+    rows = []
+
+    def emit(line):
+        print(line)
+        parts = line.split(",", 2)
+        rows.append({"name": parts[0],
+                     "us_per_call": float(parts[1]) if len(parts) > 1
+                     and parts[1] else None,
+                     "derived": parts[2] if len(parts) > 2 else "",
+                     "config": {"section": "serve_tenants", "tiny": tiny,
+                                **shapes},
+                     "peak_mem_bytes": None})
+
+    summary = run(emit=emit, **shapes)
+    if as_json:
+        import json
+        with open("BENCH_serve_tenants.json", "w") as fh:
+            json.dump(rows, fh, indent=1)
+        print(f"# wrote BENCH_serve_tenants.json ({len(rows)} rows)")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

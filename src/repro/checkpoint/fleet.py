@@ -8,6 +8,12 @@ and fold journal landed. Restore reads the manifest to know what fleet
 shape produced the checkpoint before re-seeding workers from the
 per-worker directories.
 
+The same layer backs the multi-tenant platform's *spill* tier
+(``repro.tenants.manager``): an evicted tenant's rank-r delta —
+columns, signs, cursor, age — lands in one small npz next to the fleet
+files (``save_tenant_spill``), so inactive tenants cost disk, not HBM,
+and activation is load + journal-tail replay.
+
 Same atomicity discipline as the tensor checkpoints: write to ``.tmp``,
 fsync, rename.
 """
@@ -16,10 +22,12 @@ from __future__ import annotations
 import json
 import os
 import pathlib
-from typing import Optional
+from typing import Optional, Tuple
+
+import numpy as np
 
 __all__ = ["save_fleet_manifest", "load_fleet_manifest",
-           "latest_fleet_step"]
+           "latest_fleet_step", "save_tenant_spill", "load_tenant_spill"]
 
 _NAME = "fleet_{step:09d}.json"
 
@@ -49,3 +57,29 @@ def latest_fleet_step(ckpt_dir) -> Optional[int]:
         return None
     steps = sorted(int(p.stem.split("_")[1]) for p in d.glob("fleet_*.json"))
     return steps[-1] if steps else None
+
+
+def save_tenant_spill(path, arrays: dict, meta: dict) -> pathlib.Path:
+    """Spill one tenant's delta: named numpy arrays + a JSON meta blob in
+    one npz, written atomically (.tmp → fsync → rename). ``meta`` must be
+    JSON-serializable (tenant id, journal position, dtype tags...)."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {k: np.asarray(v) for k, v in arrays.items()}
+    payload["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), np.uint8)
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
+    tmp.rename(path)
+    return path
+
+
+def load_tenant_spill(path) -> Tuple[dict, dict]:
+    """Inverse of ``save_tenant_spill``: returns (arrays, meta)."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode("utf-8"))
+        arrays = {k: z[k] for k in z.files if k != "__meta__"}
+    return arrays, meta

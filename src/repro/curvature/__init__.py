@@ -29,11 +29,12 @@ from repro.curvature.update import (
     chol_drop_leading,
     chol_update,
     replace_factors,
+    signed_split,
 )
 
 __all__ = [
     "CurvatureCache", "CurvatureState", "CurvatureStats",
     "StreamingCurvature", "StreamingGram", "accumulate_gram",
     "chol_append", "chol_downdate", "chol_drop_leading", "chol_update",
-    "replace_factors",
+    "replace_factors", "signed_split",
 ]

@@ -59,6 +59,7 @@ __all__ = [
     "chol_append",
     "chol_drop_leading",
     "replace_factors",
+    "signed_split",
 ]
 
 _HI = jax.lax.Precision.HIGHEST
@@ -179,6 +180,30 @@ def chol_drop_leading(L: jax.Array, k: int) -> jax.Array:
     return chol_update(L[k:, k:], L[k:, :k])
 
 
+def signed_split(U: jax.Array, core: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """PSD split of the Hermitian low-rank form ``U·core·U†``.
+
+    ``core`` (p, p) is a small Hermitian (generally indefinite) matrix and
+    ``U`` (n, p) carries its directions; the eigendecomposition of the
+    core splits the form into  X·X† − Y·Y†  with X, Y : (n, p) — zero
+    columns where the spectrum has the other sign, which rank-1 sweeps
+    skip for free. This is the common kernel of ``replace_factors`` (the
+    2k×2k sliding-window core) and the per-tenant rank-r delta correction
+    (``repro.tenants``): any Hermitian perturbation carried as a small
+    core over a few directions becomes one ``chol_update`` plus one
+    ``chol_downdate``.
+    """
+    U = _promote(jnp.asarray(U))
+    core = _promote(jnp.asarray(core)).astype(U.dtype)
+    core = (core + core.conj().T) / 2
+    lam, Q = jnp.linalg.eigh(core)
+    V = jnp.matmul(U, Q, precision=_HI)
+    X = V * jnp.sqrt(jnp.maximum(lam, 0.0))
+    Y = V * jnp.sqrt(jnp.maximum(-lam, 0.0))
+    return X, Y
+
+
 def replace_factors(W: jax.Array, new_cols: jax.Array, idx: jax.Array
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Decompose a symmetric row/col replacement of W into (X, Y, W').
@@ -213,10 +238,7 @@ def replace_factors(W: jax.Array, new_cols: jax.Array, idx: jax.Array
     U = jnp.concatenate([E, B], axis=1)               # (n, 2k)
     eye = jnp.eye(k, dtype=W.dtype)
     core = jnp.block([[-C, eye], [eye, jnp.zeros((k, k), W.dtype)]])
-    lam, Q = jnp.linalg.eigh(core)
-    V = jnp.matmul(U, Q, precision=_HI)
-    X = V * jnp.sqrt(jnp.maximum(lam, 0.0))
-    Y = V * jnp.sqrt(jnp.maximum(-lam, 0.0))
+    X, Y = signed_split(U, core)
 
     Wp = W.at[:, idx].set(new_cols).at[idx, :].set(new_cols.conj().T)
     return X, Y, Wp

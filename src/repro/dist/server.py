@@ -27,6 +27,12 @@ math does not:
 ``flush()`` keeps the eager server's API: it blocks until every request
 submitted so far has been served and returns their results FIFO — so
 ``serve_main`` and the benchmarks drive both servers with one code path.
+
+Multi-tenant serving composes with both layouts for free: a tenant
+microbatch swaps the tenant's factor L_t (``TenantManager.factor``) in
+for the resident L, and L was already a replicated ``P()`` argument of
+the shard_map solve — the per-slab S passes and psums don't know or
+care whose factor the triangular solves use.
 """
 from __future__ import annotations
 
@@ -186,7 +192,7 @@ class AsyncSolveServer:
                  batcher: Optional[TokenBudgetBatcher] = None,
                  adaptation=None, policy: str = "cached",
                  monitor_drift: bool = True, jitter: float = 0.0,
-                 clock=time.perf_counter):
+                 tenants=None, clock=time.perf_counter):
         if policy not in ("cached", "refactorize"):
             raise ValueError(f"policy must be 'cached' or 'refactorize', "
                              f"got {policy!r}")
@@ -220,6 +226,7 @@ class AsyncSolveServer:
         self.policy = policy
         self.monitor_drift = bool(monitor_drift)
         self.jitter = float(jitter)
+        self.tenants = tenants
         self.clock = clock
         self.metrics = ServerMetrics()
         self.damping_state = None          # read by the worker's refresh
@@ -241,15 +248,21 @@ class AsyncSolveServer:
 
     # -- request intake (any thread) ---------------------------------------
     def submit(self, v, *, damping: Optional[float] = None, tokens: int = 1,
-               rows=None, payload=None) -> int:
-        """Enqueue one request; returns its uid. Thread-safe."""
+               rows=None, payload=None, tenant: Optional[str] = None) -> int:
+        """Enqueue one request; returns its uid. Thread-safe. ``tenant``
+        solves against (and folds ``rows`` into) that tenant's rank-r
+        delta — needs a ``TenantManager`` (``tenants=``)."""
+        if tenant is not None and self.tenants is None:
+            raise RuntimeError("tenant= requires a TenantManager "
+                               "(AsyncSolveServer(tenants=...))")
         lam = float(self.state.lam0) if damping is None else float(damping)
         with self._cv:
             self._raise_if_failed()
             if self._stopping:
                 raise RuntimeError("server is shut down")
             req = self.batcher.submit(v, damping=lam, tokens=tokens,
-                                      rows=rows, payload=payload)
+                                      rows=rows, payload=payload,
+                                      tenant=tenant)
             req.t_submit = self.clock()
             self._pending.add(req.uid)
             self._cv.notify_all()
@@ -434,6 +447,14 @@ class AsyncSolveServer:
                         self._cv.notify_all()
                 if mb is not None:
                     handle = self._dispatch(mb)
+                    if mb.tenant is not None:
+                        # tenant-private folds: into the delta, right after
+                        # the same-microbatch solve dispatched (the eager
+                        # solve → fold ordering, per tenant)
+                        for req in mb.requests:
+                            if req.rows is not None:
+                                self.tenants.fold(self.state, mb.tenant,
+                                                  req.rows)
                     if self.adaptation is not None:
                         # the fold reads state, never the solve's outputs:
                         # dispatching it before materializing responses
@@ -465,6 +486,8 @@ class AsyncSolveServer:
     def _dispatch(self, mb: Microbatch) -> tuple:
         """Launch the coalesced solve; returns unmaterialized arrays."""
         st = self.state
+        if mb.tenant is not None:
+            return self._dispatch_tenant(mb)
         lam0 = float(st.lam0)
         uniform = all(r.damping == lam0 for r in mb.requests)
         monitor = self.monitor_drift and self.policy == "cached"
@@ -474,15 +497,65 @@ class AsyncSolveServer:
                 st.S, st.W, st.L, st.lam0, mb.V, mb.dampings,
                 mode=serve_mode(st), jitter=self.jitter, uniform=uniform,
                 monitor=monitor, refactorize=refactorize)
+        return self._sharded_solve(True if uniform else False, monitor,
+                                   refactorize)(
+            st.S, st.W, st.L, st.lam0, self._pad_rhs(mb.V), mb.dampings)
+
+    def _sharded_solve(self, uniform: bool, monitor: bool,
+                       refactorize: bool):
         key = (uniform, monitor, refactorize)
         fn = self._solve_cache.get(key)
         if fn is None:
             fn = make_sharded_coalesced_solve(
-                self.spec, mode=serve_mode(st), jitter=self.jitter,
+                self.spec, mode=serve_mode(self.state), jitter=self.jitter,
                 uniform=uniform, monitor=monitor, refactorize=refactorize)
             self._solve_cache[key] = fn
-        return fn(st.S, st.W, st.L, st.lam0, self._pad_rhs(mb.V),
-                  mb.dampings)
+        return fn
+
+    def _dispatch_tenant(self, mb: Microbatch) -> tuple:
+        """A tenant microbatch: the tenant's L_t replaces the resident L
+        in whichever solve path (replicated jit / sharded shard_map) the
+        layout uses — L was always a replicated argument. Monitoring is
+        skipped (the residual is defined against the base system); mixed
+        per-request λ solves per-unique-λ groups eagerly, since L_t must
+        be rebuilt per λ anyway."""
+        st = self.state
+        lam0 = float(st.lam0)
+        lams = sorted({r.damping for r in mb.requests})
+        blocked = isinstance(mb.V, (tuple, list))
+
+        def solve_at(lam: float, V, dampings):
+            L_t = self.tenants.factor(
+                st, mb.tenant, lam=None if lam == lam0 else lam)
+            lam_arr = jnp.asarray(lam, jnp.asarray(st.lam0).dtype)
+            if self.spec is None:
+                x, _ = _coalesced_solve(
+                    st.S, st.W, L_t, lam_arr, V, dampings,
+                    mode=serve_mode(st), jitter=self.jitter, uniform=True,
+                    monitor=False, refactorize=False)
+            else:
+                x, _ = self._sharded_solve(True, False, False)(
+                    st.S, st.W, L_t, lam_arr, self._pad_rhs(V), dampings)
+            return x
+
+        no_resid = -jnp.ones((), jnp.float32)
+        if len(lams) == 1:
+            return solve_at(lams[0], mb.V, mb.dampings), no_resid
+        cols: dict = {}
+        for lam in lams:
+            idx = [j for j, r in enumerate(mb.requests) if r.damping == lam]
+            Vg = tuple(vb[:, idx] for vb in mb.V) if blocked \
+                else mb.V[:, idx]
+            xg = solve_at(lam, Vg, jnp.full((len(idx),), lam, jnp.float32))
+            for a, j in enumerate(idx):
+                cols[j] = tuple(xb[:, a] for xb in xg) if blocked \
+                    else xg[:, a]
+        if blocked:
+            x = tuple(jnp.stack([cols[j][b] for j in range(mb.k)], axis=1)
+                      for b in range(len(mb.V)))
+        else:
+            x = jnp.stack([cols[j] for j in range(mb.k)], axis=1)
+        return x, no_resid
 
     def _pad_rhs(self, V):
         """Zero-pad stacked RHS columns to the padded window widths (an
@@ -531,6 +604,8 @@ class AsyncSolveServer:
             self._cv.notify_all()
 
     def _adapt_folds(self, mb: Microbatch) -> None:
+        if mb.tenant is not None:
+            return          # tenant rows went to the delta, not the window
         for req in mb.requests:
             if req.rows is not None:
                 self.state = self.adaptation.fold(self.state, req.rows)

@@ -18,11 +18,16 @@ the replicas' online windows by gossiping fold *events*.
 * ``worker``     — ``FleetWorker``: the frame loop around one replica
   (inline-seeded from the dispatcher or self-built via
   ``launch.trainer.build_server``); drains on SIGTERM.
+* ``ring``       — ``HashRing``: consistent hashing for ``by_adapter``
+  placement — adding/removing one worker remaps ~1/N of the key space
+  instead of reshuffling everything, so tenant/adapter stickiness (and
+  the per-tenant state that accretes behind it) survives fleet resizes.
 * ``dispatcher`` — ``Dispatcher``: routing (``round_robin``,
   ``least_loaded`` off streamed heartbeats, ``by_adapter`` sticky
-  hashing), failure rerouting with ledger replay, the ``reconcile()``
-  barrier, fleet checkpoint (per-worker ServeState + manifest), draining
-  shutdown; ``launch_fleet`` spawns the subprocess workers.
+  placement on the ring), failure rerouting with ledger replay, the
+  ``reconcile()`` barrier, fleet checkpoint (per-worker ServeState +
+  manifest, then gossip-log compaction), draining shutdown;
+  ``launch_fleet`` spawns the subprocess workers.
 
 ``launch.trainer.build_fleet(...)`` wires a config end to end;
 ``python -m repro.serve --fleet N --route ...`` serves with it;
@@ -36,11 +41,12 @@ from repro.fleet.dispatcher import (
     launch_fleet,
 )
 from repro.fleet.gossip import GossipLog, ReplayBuffer
+from repro.fleet.ring import HashRing
 from repro.fleet.wire import Channel, Message, WireError, connect, listen
 from repro.fleet.worker import FleetWorker
 
 __all__ = [
-    "Channel", "Dispatcher", "FleetWorker", "GossipLog", "Message",
-    "ROUTES", "ReplayBuffer", "WireError", "WorkerHandle", "connect",
-    "launch_fleet", "listen",
+    "Channel", "Dispatcher", "FleetWorker", "GossipLog", "HashRing",
+    "Message", "ROUTES", "ReplayBuffer", "WireError", "WorkerHandle",
+    "connect", "launch_fleet", "listen",
 ]

@@ -14,12 +14,18 @@ front heterogeneous replicas (eager/async, replicated/sharded).
 * ``least_loaded`` — fewest dispatcher-tracked in-flight requests, with
   the worker-reported queue depth (streamed back in heartbeat ``pong``
   frames) as tiebreak.
-* ``by_adapter`` — stable hash of the request's adapter identity →
-  sticky worker. With gossip off, folds then *partition* cleanly: each
-  worker's window sees exactly its own adapters' folds, in its own
-  solve order — bit-identical to a single eager server serving that
-  sub-trace (at matched microbatch composition; width-1 batching pins
-  it, which is how the bench/tests assert the exactness).
+* ``by_adapter`` — consistent-hash ring over the worker ids
+  (``fleet.ring.HashRing``) → sticky worker. Tenant identity defaults
+  to the adapter key, so this is the fleet's *tenant placement*:
+  membership churn remaps only ~1/N keys, and a dead worker's keys
+  spill to its ring successors while every healthy placement stays
+  put (a moved tenant pays factor re-materialization + journal-tail
+  replay on the new worker, so stability is the point). With gossip
+  off, folds then *partition* cleanly: each worker's window sees
+  exactly its own adapters' folds, in its own solve order —
+  bit-identical to a single eager server serving that sub-trace (at
+  matched microbatch composition; width-1 batching pins it, which is
+  how the bench/tests assert the exactness).
 
 **Reconciliation** (``gossip=True``): a request's adaptation rows never
 travel with the solve — they enter the ``GossipLog`` at admission, which
@@ -55,10 +61,10 @@ import select
 import subprocess
 import sys
 import time
-import zlib
 from typing import Any, Dict, List, Optional
 
 from repro.fleet.gossip import GossipLog
+from repro.fleet.ring import HashRing
 from repro.fleet.wire import Channel, WireError, get_blocks, listen, \
     put_blocks
 from repro.serve.server import ServerMetrics, SolveResult
@@ -76,7 +82,8 @@ class _Request:
     damping: Optional[float]
     tokens: int
     adapter: Optional[str]
-    rows: Any                   # carried only when gossip is off
+    rows: Any                   # rides the frame: gossip off, or tenant fold
+    tenant: Optional[str] = None
     t_submit: float = 0.0
     worker_id: Optional[int] = None
 
@@ -95,6 +102,7 @@ class WorkerHandle:
         self.queued = 0             # last reported inner queue depth
         self.served = 0
         self.pongs = 0              # heartbeat replies seen (freshness)
+        self.tenants: dict = {}     # last reported tenant packing stats
         self.n = None
 
     def __repr__(self):
@@ -117,6 +125,7 @@ class Dispatcher:
         self.route = route
         self.gossip = bool(gossip)
         self.clock = clock
+        self.ring = HashRing(str(w.worker_id) for w in self.workers)
         self.log: Optional[GossipLog] = None
         self.metrics = ServerMetrics()
         self._uid = 0
@@ -153,6 +162,7 @@ class Dispatcher:
     # -- request intake ----------------------------------------------------
     def submit(self, v, *, damping: Optional[float] = None, tokens: int = 1,
                rows=None, adapter: Optional[str] = None,
+               tenant: Optional[str] = None,
                worker_id: Optional[int] = None) -> int:
         """Route one solve request; returns its fleet-wide uid.
 
@@ -160,16 +170,26 @@ class Dispatcher:
         slots allocated, event broadcast fleet-wide — before the solve is
         routed, so the fold's identity is independent of routing and of
         worker failures. With gossip off they ride the solve frame and
-        fold only on the routed worker. ``worker_id`` pins the request to
-        one worker (probes); routing policy decides otherwise.
+        fold only on the routed worker.
+
+        ``tenant`` marks the request for a per-tenant delta on the routed
+        worker: its rows are *tenant-private* — they always ride the solve
+        frame and fold into that tenant's rank-r delta, never the shared
+        gossip log. The tenant id doubles as the placement key under
+        ``by_adapter`` routing (unless ``adapter`` says otherwise), so one
+        tenant's delta, journal, and factor cache live on one worker.
+        ``worker_id`` pins the request to one worker (probes); routing
+        policy decides otherwise.
         """
         uid = self._uid
         self._uid += 1
+        shared_rows = rows is not None and tenant is None
         req = _Request(uid=uid, v=v, damping=damping, tokens=int(tokens),
-                       adapter=adapter,
-                       rows=rows if not self.gossip else None,
+                       adapter=adapter if adapter is not None else tenant,
+                       tenant=tenant,
+                       rows=None if (shared_rows and self.gossip) else rows,
                        t_submit=self.clock())
-        if rows is not None and self.gossip:
+        if shared_rows and self.gossip:
             ev = self.log.append(rows, origin=f"req{uid}")
             self._broadcast_fold(ev)
         w = self._worker_by_id(worker_id) if worker_id is not None \
@@ -180,7 +200,8 @@ class Dispatcher:
 
     def _send_solve(self, w: WorkerHandle, req: _Request) -> None:
         arrays, meta = {}, {"uid": req.uid, "damping": req.damping,
-                            "tokens": req.tokens, "adapter": req.adapter}
+                            "tokens": req.tokens, "adapter": req.adapter,
+                            "tenant": req.tenant}
         put_blocks(arrays, meta, "v", req.v)
         if req.rows is not None:
             put_blocks(arrays, meta, "rows", req.rows)
@@ -218,11 +239,11 @@ class Dispatcher:
     def _route_worker(self, req: _Request) -> WorkerHandle:
         alive = self._alive()
         if self.route == "by_adapter" and req.adapter is not None:
-            h = zlib.crc32(str(req.adapter).encode("utf-8"))
-            w = self.workers[h % len(self.workers)]
-            if w.alive:
-                return w
-            return alive[h % len(alive)]    # rehash among survivors
+            # ring lookup skipping dead members: healthy placements never
+            # move; a dead worker's keys spill to its ring successors
+            dead = {str(w.worker_id) for w in self.workers if not w.alive}
+            wid = self.ring.lookup(str(req.adapter), avoid=dead)
+            return self._worker_by_id(int(wid))
         if self.route == "least_loaded":
             self._pump(0.0)          # drain landed results: current counts
             alive = self._alive()    # the pump may have buried a worker
@@ -276,6 +297,7 @@ class Dispatcher:
             w.applied = int(msg.meta.get("applied", w.applied))
             w.queued = int(msg.meta.get("queued", 0))
             w.served = int(msg.meta.get("served", w.served))
+            w.tenants = msg.meta.get("tenants", w.tenants) or {}
             w.pongs += 1
         elif msg.kind == "drained":
             self._drained.add(w.worker_id)
@@ -385,7 +407,8 @@ class Dispatcher:
         return {w.worker_id: {"applied": w.applied,
                               "queued": w.queued,
                               "served": w.served,
-                              "inflight": len(w.inflight)}
+                              "inflight": len(w.inflight),
+                              "tenants": w.tenants}
                 for w in self._alive()}
 
     # -- checkpoint --------------------------------------------------------
@@ -414,12 +437,21 @@ class Dispatcher:
         manifest = {
             "step": int(step), "route": self.route, "gossip": self.gossip,
             "gossip_head": None if self.log is None else self.log.head,
+            "gossip_base": None if self.log is None else self.log.base,
             "gossip_journal": None if gossip_path is None
             else gossip_path.name,
             "workers": {str(w.worker_id): self._acks[w.worker_id]
                         for w in self._alive()},
         }
-        return save_fleet_manifest(ckpt_dir, step, manifest)
+        path = save_fleet_manifest(ckpt_dir, step, manifest)
+        if self.log is not None:
+            # the npz + every worker's own checkpoint now cover the applied
+            # prefix: truncate it so long traces stop accumulating (k, m)
+            # rows in RAM; replay for a rejoiner = restore + since(tail)
+            applied = [w.applied for w in self._alive()]
+            if applied:
+                self.log.compact(min(applied))
+        return path
 
     # -- lifecycle ---------------------------------------------------------
     def shutdown(self, *, drain: bool = True,

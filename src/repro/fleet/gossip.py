@@ -53,13 +53,19 @@ class GossipLog:
             raise ValueError("window size n must be >= 1")
         self.n = int(n)
         self.journal = journal if journal is not None else FoldJournal()
-        # resume the cursor of a restored journal
-        self.slot = sum(ev.k for ev in self.journal.events) % self.n
+        # resume the cursor of a restored (possibly compacted) journal:
+        # total_k counts the truncated prefix's rows via base_k
+        self.slot = self.journal.total_k % self.n
 
     @property
     def head(self) -> int:
-        """Next sequence number == events appended so far."""
+        """Next sequence number == events admitted over the log's life."""
         return self.journal.head
+
+    @property
+    def base(self) -> int:
+        """Lowest sequence still held; history below it was compacted."""
+        return self.journal.base
 
     @property
     def events(self) -> List[FoldEvent]:
@@ -78,8 +84,16 @@ class GossipLog:
 
     def since(self, seq: int) -> List[FoldEvent]:
         """Events with sequence >= ``seq`` (a reconnecting worker's
-        catch-up feed)."""
-        return self.journal.events[seq:]
+        catch-up feed). Raises when ``seq`` predates the compacted
+        prefix — that worker must re-seed from a fleet checkpoint."""
+        return self.journal.events_since(seq)
+
+    def compact(self, upto: int) -> int:
+        """Truncate events below ``upto`` once every live replica has
+        applied them and a checkpoint covers the prefix (the dispatcher
+        compacts to min(worker.applied) after each fleet checkpoint).
+        Returns the number of events dropped."""
+        return self.journal.compact(upto)
 
 
 class ReplayBuffer:

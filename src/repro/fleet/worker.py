@@ -59,6 +59,7 @@ class FleetWorker:
         self.journal = FoldJournal()
         self.replay = ReplayBuffer()
         self.gossip = True
+        self.tenants = None                   # TenantManager (init frame)
         self._async = False
         self._uid_map: Dict[int, int] = {}    # inner uid -> dispatcher uid
         self._running = True
@@ -75,6 +76,14 @@ class FleetWorker:
         meta = msg.meta
         self.gossip = bool(meta.get("gossip", True))
         self._async = bool(meta.get("async", False))
+        if meta.get("tenant_rank"):
+            from repro.tenants import TenantManager
+            budget_mb = meta.get("tenant_budget_mb")
+            self.tenants = TenantManager(
+                int(meta["tenant_rank"]),
+                budget_bytes=None if budget_mb is None
+                else int(float(budget_mb) * 2**20),
+                spill_dir=meta.get("tenant_spill_dir"))
         adaptation = OnlineAdaptation(
             refresh_every=int(meta.get("refresh_every", 64)),
             drift_tol=meta.get("drift_tol"),
@@ -104,6 +113,7 @@ class FleetWorker:
                 seed=int(meta.get("seed", 0)))
             # share the worker's journal so gossiped replays are recorded
             self.server.adaptation.journal = self.journal
+            self.server.tenants = self.tenants
         else:
             S0 = get_blocks(msg, "S0")
             if S0 is None:
@@ -135,13 +145,15 @@ class FleetWorker:
                                              window_dtype=window_dtype)
                 self.server = AsyncSolveServer(
                     state, batcher=batcher, adaptation=adaptation,
-                    policy=meta.get("policy", "cached"), jitter=jitter)
+                    policy=meta.get("policy", "cached"), jitter=jitter,
+                    tenants=self.tenants)
             else:
                 self.server = SolveServer(
                     init_serve_state(S0, damping, jitter=jitter,
                                      window_dtype=window_dtype),
                     batcher=batcher, adaptation=adaptation,
-                    policy=meta.get("policy", "cached"), jitter=jitter)
+                    policy=meta.get("policy", "cached"), jitter=jitter,
+                    tenants=self.tenants)
             if meta.get("restore_dir"):
                 restored, _ = restore_serve_state(
                     meta["restore_dir"], int(meta["restore_step"]),
@@ -157,10 +169,15 @@ class FleetWorker:
     # -- per-frame handlers -------------------------------------------------
     def _handle_solve(self, msg: Message) -> None:
         v = get_blocks(msg, "v")
-        rows = get_blocks(msg, "rows") if not self.gossip else None
+        tenant = msg.meta.get("tenant")
+        # tenant rows always ride the frame — they are tenant-private,
+        # never gossiped; shared rows ride it only with gossip off
+        rows = get_blocks(msg, "rows") \
+            if (tenant is not None or not self.gossip) else None
         inner = self.server.submit(
             v, damping=msg.meta.get("damping"),
-            tokens=int(msg.meta.get("tokens", 1)), rows=rows)
+            tokens=int(msg.meta.get("tokens", 1)), rows=rows,
+            tenant=tenant)
         self._uid_map[inner] = int(msg.meta["uid"])
 
     def _handle_fold(self, msg: Message) -> None:
@@ -178,13 +195,17 @@ class FleetWorker:
             # folds applied (and any straggler results out) before we report
             self._send_results(self.server.flush())
         st = self.server.state
-        self.chan.send("pong", {
+        meta = {
             "worker_id": self.worker_id,
             "queued": len(self.server.batcher),
             "served": int(st.stats.served),
             "adapted": int(st.stats.adapted),
             "applied": self.replay.applied,
-            "buffered": len(self.replay)})
+            "buffered": len(self.replay)}
+        if self.tenants is not None:
+            # hot-tenant packing stats: the dispatcher's placement signal
+            meta["tenants"] = self.tenants.packing_stats()
+        self.chan.send("pong", meta)
 
     def _handle_ckpt(self, msg: Message) -> None:
         from repro.serve import save_serve_state
@@ -196,8 +217,12 @@ class FleetWorker:
         jpath = os.path.join(msg.meta["dir"],
                              f"journal_{int(msg.meta['step']):09d}.npz")
         self.journal.save(jpath)
+        # the npz now covers the whole prefix: replay = restore + tail
+        self.journal.compact(self.journal.head)
         self.chan.send("ckpt_ok", {"worker_id": self.worker_id,
-                                   "path": str(path), "journal": jpath})
+                                   "path": str(path), "journal": jpath,
+                                   "journal_head": self.journal.head,
+                                   "applied": self.replay.applied})
 
     # -- the loop -----------------------------------------------------------
     def _service(self) -> None:

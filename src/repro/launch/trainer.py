@@ -214,7 +214,8 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                  refresh_every: int = 64, drift_tol=None, drift_frac=0.25,
                  jitter: float = 0.0, score_chunk=None, policy: str = "cached",
                  layout=None, async_: bool = False, oversize: str = "split",
-                 window_dtype=None, seed: int = 0):
+                 window_dtype=None, tenant_rank=None, tenant_budget_mb=None,
+                 seed: int = 0):
     """Config → mesh → model → resident curvature window → server.
 
     The serving twin of ``build_trainer``: builds the jitted serve steps
@@ -235,6 +236,11 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
     ``window_dtype`` (e.g. "bfloat16"): low-precision storage for the
     resident score window — halves window HBM bytes; every S pass still
     accumulates fp32 (see ``init_serve_state``).
+
+    ``tenant_rank`` (int): attach a ``repro.tenants.TenantManager`` so
+    ``submit(..., tenant=...)`` serves per-tenant rank-r deltas over the
+    shared base factor; ``tenant_budget_mb`` caps resident tenant bytes
+    (LRU spill past it).
     """
     from repro.serve import (OnlineAdaptation, SolveServer,
                              TokenBudgetBatcher, init_serve_state)
@@ -247,6 +253,13 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
     batcher = TokenBudgetBatcher(max_tokens=max_tokens,
                                  max_requests=max_requests,
                                  oversize=oversize)
+    tenants = None
+    if tenant_rank is not None:
+        from repro.tenants import TenantManager
+        tenants = TenantManager(
+            int(tenant_rank),
+            budget_bytes=None if tenant_budget_mb is None
+            else int(float(tenant_budget_mb) * 2**20))
     if layout is not None and not async_:
         raise ValueError(
             f"layout={layout!r} shards the resident window, which only the "
@@ -262,12 +275,12 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                 window_dtype=window_dtype)
         server = AsyncSolveServer(state, batcher=batcher,
                                   adaptation=adaptation, policy=policy,
-                                  jitter=jitter)
+                                  jitter=jitter, tenants=tenants)
     else:
         server = SolveServer(init_serve_state(S0, damping, jitter=jitter,
                                               window_dtype=window_dtype),
                              batcher=batcher, adaptation=adaptation,
-                             policy=policy, jitter=jitter)
+                             policy=policy, jitter=jitter, tenants=tenants)
     return server, handles
 
 
@@ -278,7 +291,8 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
                 drift_tol=None, drift_frac=0.25, jitter: float = 0.0,
                 score_chunk=None, policy: str = "cached",
                 async_workers: bool = False, worker_layout=None,
-                window_dtype=None, seed: int = 0):
+                window_dtype=None, tenant_rank=None, tenant_budget_mb=None,
+                seed: int = 0):
     """Config → model → seeded window → N-process serving fleet.
 
     The fleet twin of ``build_server``: the model (score-grad pass,
@@ -299,6 +313,11 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
     its sticky worker). ``async_workers``/``worker_layout`` select the
     inner server flavour each worker wraps (eager replicated by default;
     async; async + window sharded over the worker's own devices).
+
+    ``tenant_rank``/``tenant_budget_mb``: give every worker a
+    ``TenantManager`` so ``submit(..., tenant=...)`` rides the
+    consistent-hash ``by_adapter`` ring as tenant placement (each
+    tenant's delta + journal lives on exactly one worker).
     """
     from repro.fleet import launch_fleet
     from repro.fleet.wire import put_blocks
@@ -312,7 +331,9 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
             "drift_frac": drift_frac, "async": bool(async_workers),
             "layout": worker_layout,
             "window_dtype": None if window_dtype is None
-            else str(jnp.dtype(window_dtype))}
+            else str(jnp.dtype(window_dtype)),
+            "tenant_rank": None if tenant_rank is None else int(tenant_rank),
+            "tenant_budget_mb": tenant_budget_mb}
     arrays = {}
     from repro.core.operator import is_blocked
     put_blocks(arrays, meta, "S0",

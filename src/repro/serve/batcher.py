@@ -22,6 +22,15 @@ it never starves; ``"reject"`` refuses it at ``submit`` time with a
 widths (λ padding 1.0), so the jitted solve path compiles O(log
 max_requests) shapes instead of one per occupancy; pad columns are
 dropped when results are scattered back to requests.
+
+Multi-tenant traffic adds one more coalescing axis: a microbatch solves
+against *one* factor, so requests for different tenants (different
+per-tenant delta factors — ``repro.tenants``) can never share one. The
+queue-head request defines the microbatch's tenant and admission scans
+*past* non-matching requests instead of stopping at them, so one cold
+tenant in front never blocks a hot tenant's coalescing; overall order
+stays FIFO per tenant, which is the order each tenant's folds must
+apply in anyway.
 """
 from __future__ import annotations
 
@@ -54,16 +63,20 @@ class SolveRequest:
     rows: Any = None
     payload: Any = None
     t_submit: float = 0.0       # stamped by the server for latency stats
+    tenant: Optional[str] = None  # per-tenant delta id (None = shared base)
 
 
 class Microbatch(NamedTuple):
     """A coalesced solver batch: ``V`` holds one RHS column per request
     (plus zero pad columns up to the bucket width), ``dampings`` the
-    per-column λ (pad columns get 1.0). ``requests[j]`` owns column j."""
+    per-column λ (pad columns get 1.0). ``requests[j]`` owns column j.
+    ``tenant`` names the per-tenant factor the whole batch solves
+    against (None = the shared base factor)."""
     requests: Tuple[SolveRequest, ...]
     V: Any                      # (m, k_pad) or tuple of (m_b, k_pad)
     dampings: jax.Array         # (k_pad,) float32
     tokens: int
+    tenant: Optional[str] = None
 
     @property
     def k(self) -> int:
@@ -119,7 +132,8 @@ class TokenBudgetBatcher:
         return sum(r.tokens for r in self._queue)
 
     def submit(self, v, *, damping: float, tokens: int = 1, rows=None,
-               payload=None, uid: Optional[int] = None) -> SolveRequest:
+               payload=None, uid: Optional[int] = None,
+               tenant: Optional[str] = None) -> SolveRequest:
         """Enqueue one request; returns the (uid-stamped) request object."""
         tokens = max(int(tokens), 1)
         if tokens > self.max_tokens and self.oversize == "reject":
@@ -130,7 +144,8 @@ class TokenBudgetBatcher:
         req = SolveRequest(
             uid=next(self._uid) if uid is None else uid, v=v,
             damping=float(damping), tokens=tokens,
-            rows=rows, payload=payload)
+            rows=rows, payload=payload,
+            tenant=None if tenant is None else str(tenant))
         self._queue.append(req)
         return req
 
@@ -142,16 +157,23 @@ class TokenBudgetBatcher:
         starts a microbatch — an oversized one (under the default
         ``oversize='split'`` policy) is therefore split off alone rather
         than starving; with ``oversize='reject'`` it was already refused
-        at ``submit``.
+        at ``submit``. The head also fixes the microbatch's *tenant*:
+        admission skips (not stops at) other tenants' requests — they keep
+        their queue positions and per-tenant FIFO order — since a
+        microbatch solves against exactly one (tenant) factor.
         """
         if not self._queue:
             return None
-        take, tokens = [], 0
-        while self._queue and len(take) < self.max_requests:
-            nxt = self._queue[0]
+        tenant = self._queue[0].tenant
+        take, tokens, i = [], 0, 0
+        while i < len(self._queue) and len(take) < self.max_requests:
+            nxt = self._queue[i]
+            if nxt.tenant != tenant:
+                i += 1
+                continue
             if take and tokens + nxt.tokens > self.max_tokens:
                 break
-            take.append(self._queue.pop(0))
+            take.append(self._queue.pop(i))
             tokens += nxt.tokens
         k = len(take)
         pad_to = _bucket_width(k, self.max_requests) if self.bucket else k
@@ -159,7 +181,7 @@ class TokenBudgetBatcher:
         lams = jnp.asarray(
             [r.damping for r in take] + [1.0] * (pad_to - k), jnp.float32)
         return Microbatch(requests=tuple(take), V=V, dampings=lams,
-                          tokens=tokens)
+                          tokens=tokens, tenant=tenant)
 
     def drain(self) -> Iterator[Microbatch]:
         """Yield microbatches until the queue is empty."""

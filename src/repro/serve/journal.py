@@ -21,6 +21,16 @@ Slot indices ride in the event rather than being recomputed at replay so
 a replayer can *verify* it is applying the log in order: ``fold(...,
 slots=...)`` raises on any divergence from the local FIFO cursor instead
 of silently corrupting the window.
+
+A journal that only ever appends holds every fold's (k, m) rows forever —
+unbounded RAM on a long-horizon server and a hard blocker for per-tenant
+journals (thousands of them). ``compact(upto)`` truncates the *applied
+prefix* once a checkpoint covers it: replay becomes restore + tail.
+Sequence numbers are absolute — ``base`` records how many events were
+compacted away (and ``base_k`` how many rows they folded, so a FIFO
+cursor can still be resumed from a compacted journal) — and asking for
+history below ``base`` (``events_since``) raises rather than silently
+replaying from the wrong prefix.
 """
 from __future__ import annotations
 
@@ -61,29 +71,42 @@ def event_rows_blocks(rows) -> Tuple[np.ndarray, ...]:
 
 
 class FoldJournal:
-    """Append-only, serializable log of window maintenance events."""
+    """Serializable log of window maintenance events: append at ``head``,
+    truncate the checkpoint-covered prefix with ``compact``."""
 
-    def __init__(self, events: Optional[List[FoldEvent]] = None):
+    def __init__(self, events: Optional[List[FoldEvent]] = None, *,
+                 base: int = 0, base_k: int = 0):
         self.events: List[FoldEvent] = list(events or [])
+        self.base = int(base)          # seq of events[0]; compacted below
+        self.base_k = int(base_k)      # rows folded by compacted events
+        if self.events and self.events[0].seq != self.base:
+            raise ValueError(f"first event seq {self.events[0].seq} != "
+                             f"journal base {self.base}")
 
     def __len__(self) -> int:
         return len(self.events)
 
     @property
     def head(self) -> int:
-        """The next sequence number (== number of recorded events)."""
-        return len(self.events)
+        """The next sequence number (compacted prefix included)."""
+        return self.base + len(self.events)
+
+    @property
+    def total_k(self) -> int:
+        """Rows folded over the journal's whole history — compacted prefix
+        included, so a FIFO cursor resumes as ``total_k % n``."""
+        return self.base_k + sum(ev.k for ev in self.events)
 
     def append_fold(self, slots, rows, *, origin: Optional[str] = None
                     ) -> FoldEvent:
-        ev = FoldEvent(seq=len(self.events), kind="fold",
+        ev = FoldEvent(seq=self.head, kind="fold",
                        slots=tuple(int(s) for s in slots), rows=rows,
                        origin=origin)
         self.events.append(ev)
         return ev
 
     def append_refresh(self, *, origin: Optional[str] = None) -> FoldEvent:
-        ev = FoldEvent(seq=len(self.events), kind="refresh", slots=(),
+        ev = FoldEvent(seq=self.head, kind="refresh", slots=(),
                        rows=None, origin=origin)
         self.events.append(ev)
         return ev
@@ -91,23 +114,51 @@ class FoldJournal:
     def append_event(self, ev: FoldEvent) -> FoldEvent:
         """Append an externally sequenced event (gossip ingest). The
         event's ``seq`` must continue this journal's order."""
-        if ev.seq != len(self.events):
+        if ev.seq != self.head:
             raise ValueError(f"event seq {ev.seq} does not continue the "
-                             f"journal (head {len(self.events)})")
+                             f"journal (head {self.head})")
         self.events.append(ev)
         return ev
 
+    def compact(self, upto: int) -> int:
+        """Drop events with seq < ``upto`` — they are covered by a
+        checkpoint and replay starts from the retained tail. ``upto``
+        beyond ``head`` clamps (compact-to-head empties the journal);
+        below ``base`` is a no-op. Returns the number of events dropped."""
+        upto = min(int(upto), self.head)
+        drop = upto - self.base
+        if drop <= 0:
+            return 0
+        dropped, self.events = self.events[:drop], self.events[drop:]
+        self.base = upto
+        self.base_k += sum(ev.k for ev in dropped)
+        return len(dropped)
+
+    def events_since(self, seq: int) -> List[FoldEvent]:
+        """Events with sequence >= ``seq``. Raises if that history was
+        compacted away — the caller must restore from a checkpoint at or
+        after ``base`` instead of replaying a missing prefix."""
+        seq = int(seq)
+        if seq < self.base:
+            raise ValueError(f"events below seq {self.base} were compacted "
+                             f"(asked for {seq}); restore from a checkpoint "
+                             "and replay the tail")
+        return self.events[seq - self.base:]
+
     # -- serialization (npz arrays + json meta: the wire/checkpoint form) --
     def save(self, path) -> None:
-        """One .npz: per-event row blocks plus a json manifest entry."""
-        meta, arrays = [], {}
+        """One .npz: per-event row blocks plus a json manifest entry.
+        A compacted journal saves only its tail; ``base``/``base_k`` ride
+        the manifest so the load resumes absolute seqs and the cursor."""
+        evs, arrays = [], {}
         for ev in self.events:
             blocks = event_rows_blocks(ev.rows)
-            meta.append({"seq": ev.seq, "kind": ev.kind,
-                         "slots": list(ev.slots), "origin": ev.origin,
-                         "n_blocks": len(blocks)})
+            evs.append({"seq": ev.seq, "kind": ev.kind,
+                        "slots": list(ev.slots), "origin": ev.origin,
+                        "n_blocks": len(blocks)})
             for b, arr in enumerate(blocks):
                 arrays[f"ev{ev.seq}_b{b}"] = arr
+        meta = {"base": self.base, "base_k": self.base_k, "events": evs}
         arrays["__meta__"] = np.frombuffer(
             json.dumps(meta).encode("utf-8"), np.uint8)
         np.savez(path, **arrays)
@@ -116,8 +167,10 @@ class FoldJournal:
     def load(cls, path) -> "FoldJournal":
         with np.load(path) as z:
             meta = json.loads(bytes(z["__meta__"]).decode("utf-8"))
+            if isinstance(meta, list):          # pre-compaction manifests
+                meta = {"base": 0, "base_k": 0, "events": meta}
             events = []
-            for e in meta:
+            for e in meta["events"]:
                 blocks = tuple(z[f"ev{e['seq']}_b{b}"]
                                for b in range(e["n_blocks"]))
                 rows = None if not blocks else \
@@ -125,7 +178,7 @@ class FoldJournal:
                 events.append(FoldEvent(seq=e["seq"], kind=e["kind"],
                                         slots=tuple(e["slots"]), rows=rows,
                                         origin=e.get("origin")))
-        return cls(events)
+        return cls(events, base=meta["base"], base_k=meta["base_k"])
 
     # -- replay -------------------------------------------------------------
     def replay(self, state, adaptation, *, record: bool = False):

@@ -20,6 +20,12 @@ request the loop
 ``ServeState`` and the params checkpoint every ``--ckpt-every``
 microbatch rounds through ``repro.checkpoint`` (atomic, resumable).
 Prints p50/p99 solve latency, requests/sec and cache counters at exit.
+
+``--tenants N`` drives a multi-tenant trace: each request carries a
+zipf-distributed tenant id and its rows fold into that tenant's rank-r
+delta (``repro.tenants``) instead of the shared base window; combine
+with ``--fleet K --route by_adapter`` so the consistent-hash ring pins
+each tenant to one worker. Tenant packing stats print at exit.
 """
 from __future__ import annotations
 
@@ -96,6 +102,16 @@ def serve_main(argv=None):
                     help="fleet: do not gossip window folds between "
                          "workers — folds partition by routed worker "
                          "(meaningful with --route by_adapter)")
+    ap.add_argument("--tenants", type=int, default=0, metavar="N",
+                    help="multi-tenant trace: requests carry zipf-"
+                         "distributed tenant ids over N tenants; each "
+                         "tenant's rows fold into its own rank-r delta "
+                         "over the shared base factor (0: off)")
+    ap.add_argument("--tenant-rank", type=int, default=4,
+                    help="per-tenant delta rank budget r (--tenants)")
+    ap.add_argument("--tenant-budget-mb", type=float, default=None,
+                    help="resident tenant byte budget in MiB; LRU spill "
+                         "past it (--tenants; default: unbounded)")
     ap.add_argument("--window-dtype", choices=["fp32", "bf16"],
                     default="fp32",
                     help="resident score-window storage dtype: bf16 halves "
@@ -128,7 +144,8 @@ def serve_main(argv=None):
         max_requests=args.max_requests, refresh_every=args.refresh_every,
         drift_tol=args.drift_tol, drift_frac=args.drift_frac,
         layout=layout, async_=async_, window_dtype=args.window_dtype,
-        seed=args.seed)
+        tenant_rank=args.tenant_rank if args.tenants else None,
+        tenant_budget_mb=args.tenant_budget_mb, seed=args.seed)
     kind = f"async {layout or 'replicated'}" if async_ else "eager"
     print(f"resident window factorized: n={args.window} "
           f"m={server.state.S.shape[1]} λ0={args.damping} [{kind}] "
@@ -154,8 +171,12 @@ def serve_main(argv=None):
         loss, v, rows = h.score_grads(h.params, ex)
         # per-request λ: occasional requests ask for extra damping
         lam = args.damping * (4.0 if r % 5 == 4 else 1.0)
+        # zipf tenant traffic: a few hot tenants, a long cold tail
+        tenant = f"t{(int(rng.zipf(1.5)) - 1) % args.tenants}" \
+            if args.tenants else None
         uid = server.submit(v, damping=lam,
-                            tokens=args.adapt_examples * args.seq, rows=rows)
+                            tokens=args.adapt_examples * args.seq, rows=rows,
+                            tenant=tenant)
         pending[uid] = (v, float(loss), ex)
 
         if (r + 1) % args.burst and r != args.requests - 1:
@@ -199,6 +220,15 @@ def serve_main(argv=None):
           f"(drift tol now "
           f"{float(server.adaptation.effective_drift_tol(dstate)):.3g}, "
           f"λ now {float(dstate.lam):.3g})")
+    if args.tenants and server.tenants is not None:
+        p = server.tenants.packing_stats()
+        budget = "" if p["budget_bytes"] is None \
+            else f" / {p['budget_bytes']} budget"
+        print(f"tenants: {p['tenants']} seen, {p['resident']} resident "
+              f"({p['resident_bytes']} B{budget}), "
+              f"{p['evictions']} evictions, {p['activations']} activations, "
+              f"{p['factor_hits']} factor hits / "
+              f"{p['materializations']} builds; hot {p['hot']}")
     if args.ckpt_every and rounds:
         ckpt.save(args.ckpt_dir, rounds,
                   {"serve": server.state, "params": h.params},
@@ -230,7 +260,8 @@ def _serve_fleet(args, cfg, mesh):
         drift_tol=args.drift_tol, drift_frac=args.drift_frac,
         async_workers=args.async_ or worker_layout is not None,
         worker_layout=worker_layout, window_dtype=args.window_dtype,
-        seed=args.seed)
+        tenant_rank=args.tenant_rank if args.tenants else None,
+        tenant_budget_mb=args.tenant_budget_mb, seed=args.seed)
     print(f"fleet up: {args.fleet} workers, route={args.route}, "
           f"reconcile={not args.no_reconcile}, n={args.window} "
           f"({(time.perf_counter() - t0) * 1e3:.0f} ms)", flush=True)
@@ -246,10 +277,13 @@ def _serve_fleet(args, cfg, mesh):
             ex = jax.tree.map(lambda x: x[np.sort(take)], full)
             loss, v, rows = h.score_grads(h.params, ex)
             lam = args.damping * (4.0 if r % 5 == 4 else 1.0)
+            tenant = f"t{(int(rng.zipf(1.5)) - 1) % args.tenants}" \
+                if args.tenants else None
             uid = dispatcher.submit(
                 np.asarray(v), damping=lam,
                 tokens=args.adapt_examples * args.seq,
-                rows=np.asarray(rows), adapter=f"user{r % 4}")
+                rows=np.asarray(rows), tenant=tenant,
+                adapter=tenant if tenant is not None else f"user{r % 4}")
             pending[uid] = (float(loss), ex)
 
             if (r + 1) % args.burst and r != args.requests - 1:
@@ -287,8 +321,15 @@ def _serve_fleet(args, cfg, mesh):
               f"p50 {s['p50_ms']:.1f} ms  p99 {s['p99_ms']:.1f} ms  "
               f"{s['rps']:.1f} req/s")
         for wid, rep in sorted(dispatcher.heartbeat().items()):
-            print(f"  worker {wid}: served {rep['served']}, "
-                  f"applied {rep['applied']} fold events")
+            line = (f"  worker {wid}: served {rep['served']}, "
+                    f"applied {rep['applied']} fold events")
+            tp = rep.get("tenants") or {}
+            if tp:
+                line += (f"; tenants {tp.get('tenants', 0)} "
+                         f"({tp.get('resident', 0)} resident, "
+                         f"{tp.get('spilled', 0)} spilled), "
+                         f"hot {tp.get('hot', {})}")
+            print(line)
         if args.ckpt_every and rounds:
             path = dispatcher.checkpoint(args.ckpt_dir, rounds)
             print(f"fleet checkpoint (per-worker ServeState + manifest) "

@@ -21,6 +21,15 @@ Between microbatches (off the request path) the server hands adaptation
 rows to ``OnlineAdaptation`` and lets its age/drift policy decide on a
 full refresh; per-request wall-clock latencies land in ``ServerMetrics``
 (p50/p99, requests/sec).
+
+With a ``TenantManager`` attached (``tenants=``), ``submit(tenant=...)``
+routes the request through that tenant's rank-r delta: the batcher
+coalesces per-tenant microbatches and ``_serve`` swaps the tenant's
+factor L_t in for the resident L — same S passes, same fused kernel,
+same jitted function (L is just an argument). A tenant request's
+``rows`` fold into the *tenant's delta*, never the shared window; a
+tenant-less request behaves exactly as before, solving (and folding)
+against the shared base.
 """
 from __future__ import annotations
 
@@ -136,6 +145,7 @@ class SolveServer:
       fused: route cached uniform-λ microbatches (monitoring off) through
         the fused resident-L serve kernel; False forces the compositional
         solve — the baseline ``benchmarks/serve.py`` gates against.
+      tenants: optional ``TenantManager`` — enables ``submit(tenant=)``.
     """
 
     def __init__(self, state: ServeState, *,
@@ -143,7 +153,7 @@ class SolveServer:
                  adaptation: Optional[OnlineAdaptation] = None,
                  policy: str = "cached", monitor_drift: bool = True,
                  jitter: float = 0.0, fused: bool = True,
-                 clock=time.perf_counter):
+                 tenants=None, clock=time.perf_counter):
         if policy not in ("cached", "refactorize"):
             raise ValueError(f"policy must be 'cached' or 'refactorize', "
                              f"got {policy!r}")
@@ -154,22 +164,27 @@ class SolveServer:
         self.monitor_drift = bool(monitor_drift)
         self.jitter = float(jitter)
         self.fused = bool(fused)
+        self.tenants = tenants
         self.clock = clock
         self.metrics = ServerMetrics()
 
     # -- request intake ----------------------------------------------------
     def submit(self, v, *, damping: Optional[float] = None, tokens: int = 1,
-               rows=None, payload=None) -> int:
+               rows=None, payload=None, tenant: Optional[str] = None) -> int:
         """Enqueue one request; returns its uid. ``damping=None`` means
-        the resident λ₀ (the fast path)."""
+        the resident λ₀ (the fast path). ``tenant`` solves against (and
+        folds ``rows`` into) that tenant's delta — needs ``tenants=``."""
+        if tenant is not None and self.tenants is None:
+            raise RuntimeError("tenant= requires a TenantManager "
+                               "(SolveServer(tenants=...))")
         lam = float(self.state.lam0) if damping is None else float(damping)
         req = self.batcher.submit(v, damping=lam, tokens=tokens, rows=rows,
-                                  payload=payload)
+                                  payload=payload, tenant=tenant)
         req.t_submit = self.clock()
         return req.uid
 
     def solve_one(self, v, *, damping: Optional[float] = None, tokens: int = 1,
-                  rows=None):
+                  rows=None, tenant: Optional[str] = None):
         """Convenience: submit + flush a single request, return its x.
 
         Only valid on an empty queue — flushing would also solve any
@@ -180,7 +195,8 @@ class SolveServer:
             raise RuntimeError(
                 f"solve_one with {len(self.batcher)} request(s) pending "
                 "would drop their results; use submit() + flush()")
-        uid = self.submit(v, damping=damping, tokens=tokens, rows=rows)
+        uid = self.submit(v, damping=damping, tokens=tokens, rows=rows,
+                          tenant=tenant)
         (res,) = [r for r in self.flush() if r.uid == uid]
         return res.x
 
@@ -192,24 +208,74 @@ class SolveServer:
         out: List[SolveResult] = []
         for mb in self.batcher.drain():
             out.extend(self._serve(mb))
+            for req in mb.requests:
+                if req.rows is None:
+                    continue
+                if mb.tenant is not None:
+                    # tenant-private fine-tuning: fold into the delta,
+                    # never the shared window
+                    self.tenants.fold(self.state, mb.tenant, req.rows)
+                elif self.adaptation is not None:
+                    self.state = self.adaptation.fold(self.state, req.rows)
             if self.adaptation is not None:
-                for req in mb.requests:
-                    if req.rows is not None:
-                        self.state = self.adaptation.fold(self.state,
-                                                          req.rows)
                 self.state, _ = self.adaptation.maybe_refresh(
                     self.state, damping_state=damping_state)
         return out
 
+    def _serve_tenant(self, mb: Microbatch):
+        """Solve one tenant microbatch: the same coalesced solve with the
+        tenant's factor L_t swapped in for the resident L (the S passes —
+        and the fused kernel — only ever see the shared window). Drift
+        monitoring is skipped: the residual check is defined against the
+        base system, not the tenant's reweighted one."""
+        st = self.state
+        lam0 = float(st.lam0)
+        lams = sorted({r.damping for r in mb.requests})
+        blocked = isinstance(mb.V, (tuple, list))
+
+        def solve_at(lam: float, V, dampings):
+            L_t = self.tenants.factor(
+                st, mb.tenant, lam=None if lam == lam0 else lam)
+            x, _ = _coalesced_solve(
+                st.S, st.W, L_t, jnp.asarray(lam, st.lam0.dtype), V,
+                dampings, mode=serve_mode(st), jitter=self.jitter,
+                uniform=True, monitor=False, refactorize=False,
+                fused=self.fused)
+            return x
+
+        if len(lams) == 1:
+            return solve_at(lams[0], mb.V, mb.dampings)
+        # mixed λ within one tenant: L_t must be rebuilt per λ anyway, so
+        # solve per-unique-λ column groups (eager slow path) and reassemble
+        cols: dict = {}
+        for lam in lams:
+            idx = [j for j, r in enumerate(mb.requests) if r.damping == lam]
+            Vg = tuple(vb[:, idx] for vb in mb.V) if blocked \
+                else mb.V[:, idx]
+            lg = jnp.full((len(idx),), lam, jnp.float32)
+            xg = solve_at(lam, Vg, lg)
+            for a, j in enumerate(idx):
+                cols[j] = tuple(xb[:, a] for xb in xg) if blocked \
+                    else xg[:, a]
+        if blocked:
+            return tuple(
+                jnp.stack([cols[j][b] for j in range(mb.k)], axis=1)
+                for b in range(len(mb.V)))
+        return jnp.stack([cols[j] for j in range(mb.k)], axis=1)
+
     def _serve(self, mb: Microbatch) -> List[SolveResult]:
         st = self.state
         lam0 = float(st.lam0)
-        uniform = all(r.damping == lam0 for r in mb.requests)
-        x, resid = _coalesced_solve(
-            st.S, st.W, st.L, st.lam0, mb.V, mb.dampings,
-            mode=serve_mode(st), jitter=self.jitter, uniform=uniform,
-            monitor=self.monitor_drift and self.policy == "cached",
-            refactorize=self.policy == "refactorize", fused=self.fused)
+        if mb.tenant is not None:
+            x = self._serve_tenant(mb)
+            resid = -jnp.ones((), jnp.float32)
+        else:
+            uniform = all(r.damping == lam0 for r in mb.requests)
+            x, resid = _coalesced_solve(
+                st.S, st.W, st.L, st.lam0, mb.V, mb.dampings,
+                mode=serve_mode(st), jitter=self.jitter, uniform=uniform,
+                monitor=self.monitor_drift and self.policy == "cached",
+                refactorize=self.policy == "refactorize", fused=self.fused)
         jax.block_until_ready(x)
         t_done = self.clock()
 

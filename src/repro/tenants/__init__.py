@@ -1,0 +1,31 @@
+"""Multi-tenant curvature platform: one shared base factor, per-tenant
+rank-r deltas, LRU residency.
+
+The serving stack (``repro.serve`` → ``repro.dist`` → ``repro.fleet``)
+maintains one resident window/factor per process; this package makes
+that one state serve *thousands of tenants*: each tenant is a rank-r
+dual-space delta over the shared base (``delta`` — the algebra) managed
+under a byte budget with spill-to-disk residency (``manager`` — the
+memory model). Servers accept ``tenant=`` on submit, the batcher
+coalesces per-tenant microbatches, and the fleet's consistent-hash
+``by_adapter`` routing becomes tenant placement.
+"""
+from repro.tenants.delta import (TenantDelta, augmented_window,
+                                 delta_correction, delta_factor, delta_fold,
+                                 delta_nbytes, init_tenant_delta,
+                                 project_rows, tenant_factorization)
+from repro.tenants.manager import TenantManager, TenantStats
+
+__all__ = [
+    "TenantDelta",
+    "init_tenant_delta",
+    "project_rows",
+    "delta_fold",
+    "delta_correction",
+    "delta_factor",
+    "tenant_factorization",
+    "augmented_window",
+    "delta_nbytes",
+    "TenantManager",
+    "TenantStats",
+]

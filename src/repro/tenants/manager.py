@@ -1,0 +1,286 @@
+"""``TenantManager`` — LRU residency for thousands of per-tenant deltas.
+
+The registry that makes "millions of users" a memory-bounded statement:
+each registered tenant owns a rank-r ``TenantDelta`` plus a per-tenant
+``FoldJournal`` of its *projected* fold columns, and the manager keeps
+only the hot set resident under an explicit byte budget. Three tiers:
+
+* **hot** — delta resident *and* the materialized n×n tenant factor L_t
+  cached, so a solve is a pure factor swap (zero per-request correction
+  cost). The factor cache is keyed on the base state's maintenance
+  counters (adapted / refreshes) + λ + the tenant's journal position, so
+  any base fold, base refresh, λ change, or tenant fold rebuilds it.
+* **warm** — delta resident (O(n·r) bytes), factor rebuilt on demand at
+  O(n²·r) via ``delta_factor``.
+* **spilled** — delta on disk in one npz (``checkpoint.fleet.
+  save_tenant_spill``), zero bytes resident. Folds for a spilled tenant
+  append to its journal without waking it; activation = load the npz +
+  replay the journal tail (``events_since(applied)``) — bit-identical to
+  never having evicted, because fold events store the already-projected
+  dual columns (no S pass, no dependence on how the base window evolved
+  since the spill).
+
+Eviction is LRU over *resident* tenants whenever admitting or
+materializing would cross ``budget_bytes``; every spill also compacts
+the tenant's journal below the spilled seq (the npz covers that prefix —
+the satellite compaction machinery exercised per-tenant). The journal's
+projected rows are (k, n), not (k, m): tenant history is dual-sized.
+
+The manager is deliberately single-process state (dicts + numpy/jax
+arrays): in the fleet it lives inside one worker, and the consistent-
+hash ``by_adapter`` placement guarantees a tenant's manager entries
+never need to agree across workers.
+"""
+from __future__ import annotations
+
+import pathlib
+import tempfile
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.fleet import load_tenant_spill, save_tenant_spill
+from repro.serve.journal import FoldJournal
+from repro.serve.state import ServeState
+from repro.tenants.delta import (TenantDelta, delta_factor, delta_fold,
+                                 delta_nbytes, init_tenant_delta,
+                                 project_rows)
+
+__all__ = ["TenantManager", "TenantStats"]
+
+
+class TenantStats:
+    """Counters the manager exposes (heartbeats, benches). Plain ints —
+    wire-safe through msgpack/json as a dict."""
+
+    def __init__(self):
+        self.activations = 0     # spill loads (restore + tail replay)
+        self.evictions = 0       # residency drops (delta spilled to npz)
+        self.materializations = 0  # factor (re)builds, O(n²·r) each
+        self.factor_hits = 0     # solves served straight from a cached L_t
+
+    def as_dict(self) -> dict:
+        return {"activations": self.activations,
+                "evictions": self.evictions,
+                "materializations": self.materializations,
+                "factor_hits": self.factor_hits}
+
+
+class _Tenant:
+    """One registry entry. ``delta`` is None exactly when spilled."""
+
+    __slots__ = ("tid", "delta", "journal", "applied", "L", "factor_key",
+                 "last_used", "served", "spill_path")
+
+    def __init__(self, tid: str):
+        self.tid = tid
+        self.delta: Optional[TenantDelta] = None
+        self.journal = FoldJournal()
+        self.applied = 0          # journal seq folded into `delta`
+        self.L: Optional[jax.Array] = None
+        self.factor_key: Optional[Tuple] = None
+        self.last_used = 0
+        self.served = 0
+        self.spill_path: Optional[pathlib.Path] = None
+
+    @property
+    def resident(self) -> bool:
+        return self.delta is not None
+
+    def nbytes(self) -> int:
+        b = 0
+        if self.delta is not None:
+            b += delta_nbytes(self.delta)
+        if self.L is not None:
+            b += int(self.L.nbytes)
+        return b
+
+
+class TenantManager:
+    """Registry + memory manager over one shared base ``ServeState``."""
+
+    def __init__(self, rank: int, *, budget_bytes: Optional[int] = None,
+                 spill_dir=None):
+        if rank < 1:
+            raise ValueError("tenant rank budget must be >= 1")
+        self.rank = int(rank)
+        self.budget_bytes = None if budget_bytes is None else \
+            int(budget_bytes)
+        self.spill_dir = pathlib.Path(
+            spill_dir if spill_dir is not None
+            else tempfile.mkdtemp(prefix="tenant_spill_"))
+        self.stats = TenantStats()
+        self._tenants: Dict[str, _Tenant] = {}
+        self._tick = 0            # LRU clock: bumped on every touch
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    def __contains__(self, tid) -> bool:
+        return str(tid) in self._tenants
+
+    def tenants(self):
+        return list(self._tenants)
+
+    # -- registry ------------------------------------------------------------
+    def _touch(self, t: _Tenant) -> None:
+        self._tick += 1
+        t.last_used = self._tick
+
+    def _get(self, tid, *, create: bool, n: Optional[int] = None,
+             dtype=None) -> _Tenant:
+        tid = str(tid)
+        t = self._tenants.get(tid)
+        if t is None:
+            if not create:
+                raise KeyError(f"unknown tenant {tid!r}")
+            t = _Tenant(tid)
+            t.delta = init_tenant_delta(int(n), self.rank, dtype=dtype)
+            self._tenants[tid] = t
+            self._ensure_budget(exempt=tid)
+        return t
+
+    def delta(self, state: ServeState, tid) -> TenantDelta:
+        """The tenant's resident delta (activating a spilled one)."""
+        t = self._get(tid, create=True, n=state.L.shape[0],
+                      dtype=state.L.dtype)
+        self._activate(t)
+        self._touch(t)
+        return t.delta
+
+    # -- folds ----------------------------------------------------------------
+    def fold(self, state: ServeState, tid, rows, *, signs=None
+             ) -> Tuple[int, ...]:
+        """Fold tenant score rows (k, m): project through the resident
+        base factor, journal the dual columns, and apply to the delta if
+        the tenant is resident (a spilled tenant's folds accumulate in
+        the journal and apply at activation — folding never wakes it).
+        Returns the rank-budget slots written."""
+        t = self._get(tid, create=True, n=state.L.shape[0],
+                      dtype=state.L.dtype)
+        Q = project_rows(state, rows)                      # (n, k)
+        k = Q.shape[1]
+        # the FIFO cursor is derivable without the delta: total folded
+        # rows mod the rank budget (exactly TenantDelta.cursor's arithmetic)
+        cursor = t.journal.total_k % self.rank
+        slots = tuple((cursor + i) % self.rank for i in range(k))
+        ev_rows = np.asarray(Q.T)                          # (k, n): dual-sized
+        if signs is not None:
+            ev_rows = np.concatenate(
+                [ev_rows, np.asarray(signs, np.float32).reshape(k, 1)],
+                axis=1)
+        t.journal.append_fold(slots, ev_rows, origin=t.tid)
+        if t.resident:
+            t.delta, got = delta_fold(t.delta, Q, signs=signs)
+            if got != slots:
+                raise AssertionError(f"tenant {t.tid}: journal slots "
+                                     f"{slots} != delta slots {got}")
+            t.applied = t.journal.head
+            t.L, t.factor_key = None, None     # factor is stale now
+        self._touch(t)
+        return slots
+
+    def _apply_event(self, t: _Tenant, ev) -> None:
+        rows = np.asarray(ev.rows)
+        k = len(ev.slots)
+        signs = None
+        if rows.shape[1] == t.delta.cols.shape[0] + 1:   # signs rode along
+            rows, signs = rows[:, :-1], rows[:, -1]
+        t.delta, got = delta_fold(t.delta, jnp.asarray(rows.T), signs=signs)
+        if got != tuple(ev.slots):
+            raise AssertionError(
+                f"tenant {t.tid}: replay of seq {ev.seq} landed in slots "
+                f"{got}, journal says {tuple(ev.slots)}")
+
+    # -- residency ------------------------------------------------------------
+    def _activate(self, t: _Tenant) -> None:
+        if t.resident:
+            return
+        arrays, meta = load_tenant_spill(t.spill_path)
+        t.delta = TenantDelta(
+            cols=jnp.asarray(arrays["cols"]),
+            signs=jnp.asarray(arrays["signs"]),
+            cursor=jnp.asarray(arrays["cursor"]),
+            age=jnp.asarray(arrays["age"]))
+        t.applied = int(meta["applied"])
+        for ev in t.journal.events_since(t.applied):       # tail replay
+            self._apply_event(t, ev)
+        t.applied = t.journal.head
+        self.stats.activations += 1
+        self._ensure_budget(exempt=t.tid)
+
+    def evict(self, tid) -> pathlib.Path:
+        """Spill one tenant: delta → npz, drop it and any cached factor
+        from RAM, compact its journal below the spilled seq."""
+        t = self._get(tid, create=False)
+        if not t.resident:
+            return t.spill_path
+        path = self.spill_dir / f"tenant_{t.tid}.npz"
+        t.spill_path = save_tenant_spill(
+            path,
+            {"cols": np.asarray(t.delta.cols),
+             "signs": np.asarray(t.delta.signs),
+             "cursor": np.asarray(t.delta.cursor),
+             "age": np.asarray(t.delta.age)},
+            {"tenant": t.tid, "applied": t.applied, "rank": self.rank})
+        t.delta, t.L, t.factor_key = None, None, None
+        t.journal.compact(t.applied)       # the npz covers that prefix
+        self.stats.evictions += 1
+        return t.spill_path
+
+    def _ensure_budget(self, *, exempt: Optional[str] = None) -> None:
+        if self.budget_bytes is None:
+            return
+        while self.resident_bytes() > self.budget_bytes:
+            victims = [t for t in self._tenants.values()
+                       if t.resident and t.tid != exempt]
+            if not victims:
+                return             # the exempt tenant alone may exceed it
+            self.evict(min(victims, key=lambda t: t.last_used).tid)
+
+    # -- the solve-path entry point -------------------------------------------
+    def factor(self, state: ServeState, tid, *, lam=None) -> jax.Array:
+        """The tenant's factor L_t at ``lam`` (default: the resident λ₀),
+        activating and materializing as needed. This is what the servers
+        swap in for ``state.L`` on a tenant microbatch."""
+        t = self._get(tid, create=True, n=state.L.shape[0],
+                      dtype=state.L.dtype)
+        self._activate(t)
+        lam_v = float(state.lam0) if lam is None else float(lam)
+        key = (int(state.stats.adapted), int(state.stats.refreshes),
+               lam_v, t.applied)
+        if t.L is not None and t.factor_key == key:
+            self.stats.factor_hits += 1
+        else:
+            base_L = state.L
+            if lam is not None and lam_v != float(state.lam0):
+                eye = jnp.eye(state.W.shape[0], dtype=state.W.dtype)
+                base_L = jnp.linalg.cholesky(state.W + lam_v * eye)
+            t.L = delta_factor(t.delta, base_L, lam_v)
+            t.factor_key = key
+            self.stats.materializations += 1
+            self._ensure_budget(exempt=t.tid)
+        t.served += 1
+        self._touch(t)
+        return t.L
+
+    # -- accounting ------------------------------------------------------------
+    def resident_bytes(self) -> int:
+        return sum(t.nbytes() for t in self._tenants.values())
+
+    def resident_count(self) -> int:
+        return sum(t.resident for t in self._tenants.values())
+
+    def packing_stats(self, *, top: int = 4) -> dict:
+        """Wire-safe summary for fleet heartbeats: residency, budget
+        pressure, and the hottest tenants by solves served."""
+        hot = sorted(self._tenants.values(), key=lambda t: -t.served)[:top]
+        return {"tenants": len(self._tenants),
+                "resident": self.resident_count(),
+                "spilled": len(self._tenants) - self.resident_count(),
+                "resident_bytes": self.resident_bytes(),
+                "budget_bytes": self.budget_bytes,
+                "hot": {t.tid: t.served for t in hot if t.served},
+                **self.stats.as_dict()}

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import hypothesis, st
+
 from repro.core import (
     BlockedScores,
     CholFactorization,
@@ -66,6 +68,38 @@ def test_update_downdate_match_refactorize(complex_, method):
     # diagonal stays real positive (complex mode included)
     assert np.all(np.real(np.diagonal(np.asarray(Lu))) > 0)
     assert np.abs(np.imag(np.diagonal(np.asarray(Lu)))).max() < 1e-5
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(n=st.integers(4, 24), k=st.integers(1, 5),
+                  seed=st.integers(0, 2 ** 16),
+                  complex_=st.sampled_from([False, True]),
+                  method=st.sampled_from(["composed", "rotations"]))
+def test_update_then_downdate_recovers_base_factor(n, k, seed, complex_,
+                                                   method):
+    """Property: for any well-conditioned base factor L and any rank-k
+    columns P, ``chol_downdate(chol_update(L, P), P)`` is L again — the
+    invariant the tenant platform leans on when it corrects the shared
+    base factor by a delta and the delta later retracts (real +
+    complex-Hermitian, both update methods)."""
+    rng = np.random.default_rng(seed)
+    S = rng.normal(size=(n, 4 * n))
+    P = rng.normal(size=(n, k))
+    if complex_:
+        S = S + 1j * rng.normal(size=(n, 4 * n))
+        P = P + 1j * rng.normal(size=(n, k))
+    S = jnp.asarray(S / np.sqrt(4 * n),
+                    jnp.complex64 if complex_ else jnp.float32)
+    P = jnp.asarray(P, S.dtype)
+    W = S @ S.conj().T + 0.5 * jnp.eye(n, dtype=S.dtype)
+    L = jnp.linalg.cholesky(W)
+    back = chol_downdate(chol_update(L, P, method=method), P, method=method)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(L),
+                               rtol=2e-3, atol=2e-4)
+    # and the updated factor really is chol(W + PP†)
+    np.testing.assert_allclose(
+        np.asarray(chol_update(L, P, method=method)),
+        _chol(W + P @ P.conj().T), rtol=2e-3, atol=2e-4)
 
 
 def test_rank1_vector_input():

@@ -20,6 +20,7 @@ from repro.fleet import (  # noqa: E402
     Channel,
     Dispatcher,
     GossipLog,
+    HashRing,
     ReplayBuffer,
     WorkerHandle,
     launch_fleet,
@@ -160,6 +161,62 @@ def test_gossip_log_and_replay_buffer():
     assert buf.applied == 3 and len(buf) == 0
 
 
+def test_fold_journal_compaction_and_tail_replay(tmp_path):
+    journal = FoldJournal()
+    for i in range(6):
+        journal.append_fold((i % 4,), np.full((1, 3), i, np.float32))
+    assert journal.head == 6 and journal.total_k == 6
+    assert journal.compact(4) == 4
+    assert (journal.base, journal.base_k) == (4, 4)
+    # absolute sequencing and the row count survive the truncation
+    assert journal.head == 6 and journal.total_k == 6
+    assert [e.seq for e in journal.events_since(4)] == [4, 5]
+    with pytest.raises(ValueError, match="checkpoint"):
+        journal.events_since(3)          # predates the compacted prefix
+
+    p = tmp_path / "compacted.npz"
+    journal.save(p)
+    loaded = FoldJournal.load(p)
+    assert (loaded.base, loaded.base_k, loaded.head) == (4, 4, 6)
+    assert loaded.compact(2) == 0        # below base: no-op
+    assert loaded.compact(100) == 2      # beyond head: clamps
+    assert loaded.head == 6 and len(loaded.events) == 0
+
+
+def test_gossip_log_compaction_keeps_cursor_continuity():
+    log = GossipLog(5)
+    for _ in range(4):
+        log.append(np.zeros((2, 4), np.float32))   # 8 rows through n=5
+    log.compact(3)
+    assert log.base == 3 and len(log.since(3)) == 1
+    # the FIFO cursor keeps counting the truncated prefix's rows
+    assert log.append(np.zeros((1, 4), np.float32)).slots == (8 % 5,)
+    with pytest.raises(ValueError):
+        log.since(1)
+    # a log resumed from the compacted journal lands on the same cursor
+    resumed = GossipLog(5, journal=log.journal)
+    assert resumed.slot == log.slot
+    assert resumed.append(np.zeros((1, 4), np.float32)).slots == (9 % 5,)
+
+
+def test_hash_ring_minimal_remap():
+    ring = HashRing(str(i) for i in range(8))
+    keys = [f"tenant{i}" for i in range(2000)]
+    before = {k: ring.lookup(k) for k in keys}
+    ring.remove("3")
+    after = {k: ring.lookup(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    # only the removed member's keys move, and that's ~1/8 of the space
+    assert moved and all(before[k] == "3" for k in moved)
+    assert len(moved) < len(keys) * 2.5 / 8
+    ring.add("3")                        # rejoining restores placement
+    assert {k: ring.lookup(k) for k in keys} == before
+    # avoid= (a dead-but-listed member) spills only its keys
+    spill = {k: ring.lookup(k, avoid={"3"}) for k in keys}
+    assert all(v != "3" for v in spill.values())
+    assert all(spill[k] == before[k] for k in keys if before[k] != "3")
+
+
 # ---------------------------------------------------------------------------
 # dispatcher unit tests with an in-process fake worker
 # ---------------------------------------------------------------------------
@@ -262,6 +319,34 @@ def test_dispatcher_by_adapter_sticky():
         assert len({disp.assignments[u] for u in range(12)}) > 1
     finally:
         disp.shutdown(timeout=10)
+
+
+def test_dispatcher_by_adapter_placement_survives_failure():
+    """Consistent-hash property end to end: losing one worker moves only
+    the adapters that lived on it — every other adapter keeps its worker
+    (and therefore its accreted tenant/window state)."""
+    disp, fakes = _fake_fleet(3, "by_adapter")
+    try:
+        adapters = [f"user{i}" for i in range(9)]
+        uid1 = {a: disp.submit(np.zeros(4, np.float32), adapter=a)
+                for a in adapters}
+        disp.flush(timeout=30)
+        before = {a: disp.assignments[uid1[a]] for a in adapters}
+        assert len(set(before.values())) == 3        # all workers used
+        victim = before[adapters[0]]
+        fakes[victim].die()
+        uid2 = {a: disp.submit(np.zeros(4, np.float32), adapter=a)
+                for a in adapters}
+        results = disp.flush(timeout=30)
+        assert len(results) == len(adapters)         # all still answered
+        after = {a: disp.assignments[uid2[a]] for a in adapters}
+        for a in adapters:
+            if before[a] == victim:
+                assert after[a] != victim            # spilled off the dead
+            else:
+                assert after[a] == before[a], a      # placement preserved
+    finally:
+        disp.shutdown(drain=False, timeout=10)
 
 
 def test_dispatcher_least_loaded_avoids_busy_worker():

@@ -1,0 +1,307 @@
+"""Multi-tenant curvature platform: delta algebra vs the from-scratch
+private-window reference (real + complex), FIFO rank-budget wraparound,
+the factor cache, LRU residency under a byte budget, bit-identical
+evict → journal-tail-replay → reactivate, the spill npz round-trip, and
+tenant routing through both servers (eager + async, incl. mixed-λ
+tenant microbatches and interleaved base traffic).
+"""
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.checkpoint.fleet import (  # noqa: E402
+    load_tenant_spill,
+    save_tenant_spill,
+)
+from repro.core import chol_solve  # noqa: E402
+from repro.serve import (  # noqa: E402
+    OnlineAdaptation,
+    SolveServer,
+    TokenBudgetBatcher,
+    init_serve_state,
+)
+from repro.tenants import (  # noqa: E402
+    TenantManager,
+    augmented_window,
+    delta_fold,
+    delta_nbytes,
+    init_tenant_delta,
+    project_rows,
+    tenant_factorization,
+)
+
+BOUND = 5e-3          # the acceptance bound; actual error is ~1e-6
+
+
+def _state(n=10, m=120, lam0=0.1, seed=0, complex_=False):
+    rng = np.random.default_rng(seed)
+    S = rng.normal(size=(n, m)) / np.sqrt(m)
+    if complex_:
+        S = S + 1j * rng.normal(size=(n, m)) / np.sqrt(m)
+        S = jnp.asarray(S, jnp.complex64)
+    else:
+        S = jnp.asarray(S, jnp.float32)
+    return init_serve_state(S, lam0)
+
+
+def _rows(m, k, seed=1, complex_=False):
+    rng = np.random.default_rng(seed)
+    R = rng.normal(size=(k, m)) / np.sqrt(m)
+    if complex_:
+        R = R + 1j * rng.normal(size=(k, m)) / np.sqrt(m)
+        return jnp.asarray(R, jnp.complex64)
+    return jnp.asarray(R, jnp.float32)
+
+
+def _fold_tenant(state, rows, rank):
+    delta = init_tenant_delta(state.S.shape[0], rank, dtype=state.S.dtype)
+    delta, _ = delta_fold(delta, project_rows(state, rows))
+    return delta
+
+
+# ---------------------------------------------------------------------------
+# delta algebra vs the from-scratch private window
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("complex_", [False, True], ids=["real", "complex"])
+def test_tenant_solve_matches_private_window(complex_):
+    state = _state(complex_=complex_)
+    m = state.S.shape[1]
+    rows = _rows(m, 3, complex_=complex_)
+    delta = _fold_tenant(state, rows, rank=4)
+
+    fac = tenant_factorization(state, delta)
+    v = _rows(m, 1, seed=5, complex_=complex_)[0]
+    got = fac.solve(v)
+
+    # reference: re-factorize the tenant's private window from scratch
+    S_aug = augmented_window(state, delta)
+    ref = chol_solve(S_aug, v, float(state.lam0),
+                     mode="complex" if complex_ else "auto")
+    err = np.linalg.norm(np.asarray(got - ref)) / np.linalg.norm(
+        np.asarray(ref))
+    assert err < BOUND, err
+
+
+def test_empty_delta_factor_is_base_bitwise():
+    state = _state()
+    delta = init_tenant_delta(state.S.shape[0], 4, dtype=state.S.dtype)
+    fac = tenant_factorization(state, delta)
+    assert np.array_equal(np.asarray(fac.L), np.asarray(state.L))
+
+
+def test_delta_fifo_wraparound_keeps_last_rank_rows():
+    state = _state()
+    m = state.S.shape[1]
+    rank = 2
+    rows = _rows(m, 3, seed=2)            # 3 folds through a rank-2 budget
+    delta = init_tenant_delta(state.S.shape[0], rank, dtype=state.S.dtype)
+    d1, slots1 = delta_fold(delta, project_rows(state, rows[:2]))
+    assert slots1 == (0, 1)
+    d1, slots2 = delta_fold(d1, project_rows(state, rows[2:]))
+    assert slots2 == (0,)                 # FIFO wraparound evicts row 0
+    assert int(d1.cursor) == 3 % rank
+
+    # equivalent: folding only the surviving rows (row 2 evicted row 0)
+    d2, _ = delta_fold(delta, project_rows(state, rows[2:]))
+    d2, _ = delta_fold(d2, project_rows(state, rows[1:2]))
+    # d1 holds [row2@0, row1@1]; d2 folded row2 then row1 → same columns
+    np.testing.assert_allclose(np.asarray(d1.cols[:, 0]),
+                               np.asarray(d2.cols[:, 0]), rtol=1e-6)
+    f1 = tenant_factorization(state, d1)
+    v = _rows(m, 1, seed=7)[0]
+    S_aug = jnp.concatenate(
+        [state.S, jnp.matmul(d1.cols.conj().T, state.S)], axis=0)
+    ref = chol_solve(S_aug, v, float(state.lam0))
+    err = np.linalg.norm(np.asarray(f1.solve(v) - ref)) / np.linalg.norm(
+        np.asarray(ref))
+    assert err < BOUND
+
+
+def test_delta_bytes_linear_in_n_times_rank():
+    # O(n·r) resident cost: doubling either dimension ~doubles the bytes
+    d = init_tenant_delta(64, 8)
+    base = delta_nbytes(d)
+    assert base >= 64 * 8 * 4                    # the fold columns dominate
+    assert delta_nbytes(init_tenant_delta(128, 8)) - base >= 64 * 8 * 4
+    assert delta_nbytes(init_tenant_delta(64, 16)) - base >= 64 * 8 * 4
+    # and nothing quadratic hides in there
+    assert delta_nbytes(init_tenant_delta(256, 4)) < 256 * 256
+
+
+# ---------------------------------------------------------------------------
+# manager: residency, budget, bit-identical spill round-trip
+# ---------------------------------------------------------------------------
+
+def test_manager_lru_budget_spills(tmp_path):
+    state = _state()
+    m = state.S.shape[1]
+    per = delta_nbytes(init_tenant_delta(state.S.shape[0], 2,
+                                         dtype=state.S.dtype))
+    mgr = TenantManager(2, budget_bytes=3 * per + per // 2,
+                        spill_dir=tmp_path)
+    for i in range(5):
+        mgr.fold(state, f"t{i}", _rows(m, 1, seed=i))
+    assert len(mgr) == 5
+    assert mgr.resident_bytes() <= mgr.budget_bytes
+    assert mgr.resident_count() < 5
+    assert mgr.stats.evictions >= 2
+    # LRU: the most recently folded tenant is still resident
+    assert mgr._tenants["t4"].resident
+
+
+def test_evict_reactivate_bit_identical(tmp_path):
+    state = _state()
+    m = state.S.shape[1]
+    twin = TenantManager(3, spill_dir=tmp_path / "twin")   # never evicts
+    mgr = TenantManager(3, spill_dir=tmp_path / "lru")
+    for seed in (1, 2):
+        for mm in (twin, mgr):
+            mm.fold(state, "a", _rows(m, 2, seed=seed))
+    mgr.evict("a")
+    assert not mgr._tenants["a"].resident
+    # a fold arriving while spilled lands in the journal, doesn't wake it
+    for mm in (twin, mgr):
+        mm.fold(state, "a", _rows(m, 1, seed=9))
+    assert not mgr._tenants["a"].resident
+    L_twin = twin.factor(state, "a")
+    L_back = mgr.factor(state, "a")              # activate: restore + tail
+    assert mgr.stats.activations == 1
+    assert np.array_equal(np.asarray(L_back), np.asarray(L_twin))
+    d1, d2 = twin._tenants["a"].delta, mgr._tenants["a"].delta
+    for a, b in zip(d1, d2):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_factor_cache_hits_and_invalidation(tmp_path):
+    state = _state()
+    m = state.S.shape[1]
+    mgr = TenantManager(2, spill_dir=tmp_path)
+    mgr.fold(state, "t", _rows(m, 1))
+    mgr.factor(state, "t")
+    mgr.factor(state, "t")
+    assert mgr.stats.materializations == 1
+    assert mgr.stats.factor_hits == 1
+    mgr.fold(state, "t", _rows(m, 1, seed=3))    # fold invalidates
+    mgr.factor(state, "t")
+    assert mgr.stats.materializations == 2
+    # λ override: a fresh base factor at that λ, corrected by the delta
+    L4 = mgr.factor(state, "t", lam=0.4)
+    S_aug = augmented_window(state, mgr._tenants["t"].delta)
+    v = _rows(m, 1, seed=8)[0]
+    fac = tenant_factorization(state, mgr._tenants["t"].delta,
+                               lam=0.4, L=L4)
+    ref = chol_solve(S_aug, v, 0.4)
+    err = np.linalg.norm(np.asarray(fac.solve(v) - ref)) / np.linalg.norm(
+        np.asarray(ref))
+    assert err < BOUND
+
+
+def test_spill_npz_roundtrip(tmp_path):
+    arrays = {"cols": np.arange(12, dtype=np.float32).reshape(3, 4),
+              "signs": np.array([1, -1, 0, 1], np.int8)}
+    meta = {"tenant": "t7", "applied": 5, "rank": 4}
+    p = save_tenant_spill(tmp_path / "t7.npz", arrays, meta)
+    got_arrays, got_meta = load_tenant_spill(p)
+    assert got_meta == meta
+    for k, v in arrays.items():
+        assert np.array_equal(got_arrays[k], v)
+
+
+# ---------------------------------------------------------------------------
+# server routing: tenant microbatches through the solve path
+# ---------------------------------------------------------------------------
+
+def _server(state, tmp_path, **kw):
+    return SolveServer(
+        state,
+        batcher=TokenBudgetBatcher(max_tokens=64, max_requests=4),
+        adaptation=OnlineAdaptation(refresh_every=1000),
+        tenants=TenantManager(3, spill_dir=tmp_path), **kw)
+
+
+def test_solveserver_tenant_routing(tmp_path):
+    state = _state()
+    m = state.S.shape[1]
+    srv = _server(state, tmp_path)
+    rows_a, rows_b = _rows(m, 2, seed=3), _rows(m, 2, seed=4)
+    srv.tenants.fold(state, "a", rows_a)
+    srv.tenants.fold(state, "b", rows_b)
+
+    v = _rows(m, 1, seed=6)[0]
+    uids = {"a": srv.submit(v, tenant="a"),
+            None: srv.submit(v),
+            "b": srv.submit(v, tenant="b")}
+    res = {r.uid: r for r in srv.flush()}
+    lam = float(state.lam0)
+    for tenant, uid in uids.items():
+        if tenant is None:
+            ref = chol_solve(state.S, v, lam)
+        else:
+            d = srv.tenants._tenants[tenant].delta
+            ref = chol_solve(augmented_window(state, d), v, lam)
+        err = np.linalg.norm(np.asarray(res[uid].x - ref)) \
+            / np.linalg.norm(np.asarray(ref))
+        assert err < BOUND, (tenant, err)
+
+
+def test_solveserver_tenant_mixed_lambda(tmp_path):
+    state = _state()
+    m = state.S.shape[1]
+    srv = _server(state, tmp_path)
+    srv.tenants.fold(state, "a", _rows(m, 2, seed=3))
+    v1, v2 = _rows(m, 2, seed=6)
+    u1 = srv.submit(v1, tenant="a")                    # resident λ0
+    u2 = srv.submit(v2, tenant="a", damping=0.37)      # per-request λ
+    res = {r.uid: r for r in srv.flush()}
+    d = srv.tenants._tenants["a"].delta
+    S_aug = augmented_window(state, d)
+    for uid, v, lam in [(u1, v1, float(state.lam0)), (u2, v2, 0.37)]:
+        ref = chol_solve(S_aug, v, lam)
+        err = np.linalg.norm(np.asarray(res[uid].x - ref)) \
+            / np.linalg.norm(np.asarray(ref))
+        assert err < BOUND, (lam, err)
+
+
+def test_solveserver_tenant_requires_manager():
+    srv = SolveServer(_state())
+    with pytest.raises(RuntimeError, match="TenantManager"):
+        srv.submit(jnp.zeros(120, jnp.float32), tenant="a")
+
+
+def test_solveserver_tenant_rows_fold_private_not_shared(tmp_path):
+    state = _state()
+    m = state.S.shape[1]
+    srv = _server(state, tmp_path)
+    v = _rows(m, 1, seed=6)[0]
+    srv.submit(v, tenant="a", rows=_rows(m, 2, seed=3))
+    srv.flush()
+    assert int(srv.state.stats.adapted) == 0           # base untouched
+    assert int(srv.tenants._tenants["a"].delta.filled) == 2
+
+
+def test_async_server_tenant_solve(tmp_path):
+    from repro.dist import AsyncSolveServer
+    state = _state()
+    m = state.S.shape[1]
+    srv = AsyncSolveServer(
+        state, batcher=TokenBudgetBatcher(max_tokens=64, max_requests=4),
+        adaptation=OnlineAdaptation(refresh_every=1000),
+        tenants=TenantManager(3, spill_dir=tmp_path))
+    try:
+        srv.tenants.fold(state, "a", _rows(m, 2, seed=3))
+        v = _rows(m, 1, seed=6)[0]
+        uid_t = srv.submit(v, tenant="a")
+        uid_b = srv.submit(v)
+        res = {r.uid: r for r in srv.flush()}
+        lam = float(state.lam0)
+        d = srv.tenants._tenants["a"].delta
+        for uid, ref in [(uid_t, chol_solve(augmented_window(state, d),
+                                            v, lam)),
+                         (uid_b, chol_solve(state.S, v, lam))]:
+            err = np.linalg.norm(np.asarray(res[uid].x - ref)) \
+                / np.linalg.norm(np.asarray(ref))
+            assert err < BOUND, err
+    finally:
+        srv.shutdown()
