@@ -109,6 +109,9 @@ def main(argv=None) -> None:
     # TPU-only (CPU dispatches the same jnp reference both ways); the
     # bf16 byte-ratio and 5e-3 equivalence asserts run at every shape.
     serve.run_fused_dtypes(emit=emit, assert_fused=not tiny, **sv)
+    # observability cost ceiling: metrics+tracing <= 5% req/s on the
+    # coalesced path, gated at the real shape (tiny rows report-only).
+    serve.run_obs_overhead(emit=emit, assert_overhead=not tiny, **sv)
     serve_rows += rows
 
     from benchmarks import serve_dist

@@ -22,6 +22,11 @@ storage vs fp32 (≤0.55× resident window bytes, solves within 5e-3 of
 the fp32 trace — always asserted). Every row carries the compiled peak
 of the request path (``benchmarks/memutil``).
 
+``run_obs_overhead`` prices the observability fabric: the fully
+instrumented server (``repro.obs`` registry + tracer) vs the
+uninstrumented one on an identical coalesced trace, gated at ≤5% req/s
+cost at the real shape.
+
     PYTHONPATH=src:. python benchmarks/serve.py [--tiny] [--json]
                                                 [--window-dtype fp32|bf16]
 """
@@ -32,7 +37,8 @@ import numpy as np
 
 
 def _drive(S, vs, damping, *, policy, max_requests, adapt_every, adapt_rows,
-           lams=None, window_dtype=None, fused=True):
+           lams=None, window_dtype=None, fused=True, registry=None,
+           tracer=None):
     """Stream ``vs`` through a fresh server; returns (server, {i: x})."""
     from repro.serve import (OnlineAdaptation, SolveServer,
                              TokenBudgetBatcher, init_serve_state)
@@ -45,7 +51,7 @@ def _drive(S, vs, damping, *, policy, max_requests, adapt_every, adapt_rows,
         batcher=TokenBudgetBatcher(max_tokens=2 ** 30,
                                    max_requests=max_requests),
         adaptation=adaptation, policy=policy, monitor_drift=False,
-        fused=fused)
+        fused=fused, registry=registry, tracer=tracer)
 
     # compile warmup (both bucket widths), then measure clean
     server.solve_one(vs[0])
@@ -258,6 +264,67 @@ def run_fused_dtypes(emit=print, n=512, m=25_000, requests=48, k=8,
     return out
 
 
+def run_obs_overhead(emit=print, n=512, m=25_000, requests=48, k=8,
+                     damping=1e-2, adapt_every=6, adapt_k=4,
+                     max_overhead=1.05, assert_overhead=True, seed=0):
+    """The observability fabric's cost ceiling: full instrumentation
+    (metrics registry + span tracer) on the coalesced cached request
+    path must cost ≤ ``max_overhead``× (default 5%) req/s vs the
+    uninstrumented server on an identical trace. Gated at the real
+    m ≫ n shape; report-only at tiny CI shapes, where per-request
+    python overhead is a larger fraction of a near-dispatch-floor
+    solve. Each path runs twice and keeps its best req/s, so the ratio
+    measures instrumentation, not timing noise."""
+    from repro.obs import MetricsRegistry, Tracer
+
+    rng = np.random.default_rng(seed)
+    S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    vs = [jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+          for _ in range(requests)]
+    adapt_rows = [jnp.asarray(rng.normal(size=(adapt_k, m)) / np.sqrt(m),
+                              jnp.float32) for _ in range(4)]
+
+    def drive(instrumented):
+        best, reg = None, None
+        for _ in range(2):
+            reg = MetricsRegistry() if instrumented else None
+            tr = Tracer() if instrumented else None
+            srv, _ = _drive(S, vs, damping, policy="cached",
+                            max_requests=k, adapt_every=adapt_every,
+                            adapt_rows=adapt_rows, registry=reg, tracer=tr)
+            s = srv.metrics.summary()
+            if best is None or s["rps"] > best["rps"]:
+                best = s
+        return best, reg
+
+    s_off, _ = drive(False)
+    s_on, reg = drive(True)
+    # fidelity: the instrumented run actually recorded the trace
+    snap = reg.snapshot()
+    assert snap["counters"]["serve.requests"] >= requests
+    assert snap["histograms"]["serve.request_latency_s"]["count"] >= requests
+
+    overhead = s_off["rps"] / s_on["rps"]
+    ok = overhead <= max_overhead
+    gated = bool(assert_overhead)
+    why = "" if gated else "; report-only: tiny shape"
+    emit(f"serve/obs_off_k{k}_n{n}_m{m},{s_off['p50_ms'] * 1e3:.0f},"
+         f"{s_off['rps']:.1f} req/s (p99={s_off['p99_ms'] * 1e3:.0f}us)")
+    emit(f"serve/obs_on_k{k}_n{n}_m{m},{s_on['p50_ms'] * 1e3:.0f},"
+         f"{s_on['rps']:.1f} req/s (p99={s_on['p99_ms'] * 1e3:.0f}us)")
+    emit(f"serve/obs_overhead,,{overhead:.3f}x req/s cost "
+         f"({'OK' if ok else 'NOT'} <= {max_overhead:g}{why})")
+    if gated:
+        assert ok, (
+            f"metrics+tracing must cost <= {max_overhead:g}x req/s on the "
+            f"coalesced request path: got {overhead:.3f}x "
+            f"({s_off['rps']:.1f} vs {s_on['rps']:.1f} req/s)")
+    return {"n": n, "m": m, "requests": requests, "k": k,
+            "obs_off_rps": s_off["rps"], "obs_on_rps": s_on["rps"],
+            "obs_overhead": overhead, "obs_ok": bool(ok),
+            "obs_gated": gated}
+
+
 def main(argv=None):
     import sys
     argv = sys.argv[1:] if argv is None else argv
@@ -298,6 +365,8 @@ def main(argv=None):
     summary["fused_dtypes"] = run_fused_dtypes(
         emit=emit, assert_fused=not tiny,
         low_dtype="bfloat16" if wd == "bf16" else None, **shapes)
+    summary["obs"] = run_obs_overhead(emit=emit, assert_overhead=not tiny,
+                                      **shapes)
     if as_json:
         import json
         with open("BENCH_serve.json", "w") as fh:

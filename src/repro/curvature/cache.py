@@ -176,13 +176,26 @@ class CurvatureCache:
     the drop-in amortized replacement for per-step ``chol_solve`` outside
     jit (benchmarks, interactive use)."""
 
-    def __init__(self, policy: StreamingCurvature):
+    def __init__(self, policy: StreamingCurvature, *, registry=None):
         self.policy = policy
         self.state = policy.init()
+        # optional repro.obs.MetricsRegistry: training-side curvature
+        # health (hit/refresh counters, age, drift residual) — the same
+        # series the serving tier emits, from the same staleness contract
+        self.registry = registry
 
     def solve(self, S, v, damping, *, damping_state=None):
         x, self.state = self.policy.solve(S, v, damping, self.state,
                                           damping_state=damping_state)
+        if self.registry is not None:
+            st = self.state
+            self.registry.counter("curvature.cache_hits").value = \
+                int(st.stats.hits)
+            self.registry.counter("curvature.refreshes").value = \
+                int(st.stats.refreshes)
+            self.registry.gauge("curvature.factor_age").set(int(st.age))
+            self.registry.gauge("curvature.last_drift_residual").set(
+                float(st.stats.last_residual))
         return x
 
     @property

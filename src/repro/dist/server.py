@@ -39,6 +39,7 @@ from __future__ import annotations
 import functools
 import threading
 import time
+from contextlib import nullcontext as _nullcontext
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
@@ -183,6 +184,10 @@ class AsyncSolveServer:
         no ``dist`` bound yet, the state's spec is bound automatically so
         folds and refreshes run through the sharded cholupdate.
       clock: latency timestamps (injectable for tests).
+      registry / tracer / profile: as on ``SolveServer`` — the async
+        server additionally splits queue wait at the *dispatch* boundary
+        (submit → dispatch vs dispatch → materialized), which is where
+        the pipelining happens.
 
     The worker thread starts immediately; use as a context manager or
     call ``shutdown()`` when done.
@@ -192,7 +197,9 @@ class AsyncSolveServer:
                  batcher: Optional[TokenBudgetBatcher] = None,
                  adaptation=None, policy: str = "cached",
                  monitor_drift: bool = True, jitter: float = 0.0,
-                 tenants=None, clock=time.perf_counter):
+                 tenants=None, clock=time.perf_counter,
+                 registry=None, tracer=None, profile=None,
+                 metrics_window: int = 4096):
         if policy not in ("cached", "refactorize"):
             raise ValueError(f"policy must be 'cached' or 'refactorize', "
                              f"got {policy!r}")
@@ -228,7 +235,17 @@ class AsyncSolveServer:
         self.jitter = float(jitter)
         self.tenants = tenants
         self.clock = clock
-        self.metrics = ServerMetrics()
+        self.registry = registry
+        self.tracer = tracer
+        self.profile = profile
+        self.metrics = ServerMetrics(window=metrics_window,
+                                     registry=registry, prefix="serve")
+        if registry is not None and tenants is not None \
+                and getattr(tenants, "registry", None) is None:
+            tenants.registry = registry
+        if registry is not None and self.adaptation is not None \
+                and getattr(self.adaptation, "registry", None) is None:
+            self.adaptation.registry = registry
         self.damping_state = None          # read by the worker's refresh
 
         self._solve_cache: Dict[tuple, Any] = {}
@@ -248,10 +265,12 @@ class AsyncSolveServer:
 
     # -- request intake (any thread) ---------------------------------------
     def submit(self, v, *, damping: Optional[float] = None, tokens: int = 1,
-               rows=None, payload=None, tenant: Optional[str] = None) -> int:
+               rows=None, payload=None, tenant: Optional[str] = None,
+               trace: Optional[str] = None) -> int:
         """Enqueue one request; returns its uid. Thread-safe. ``tenant``
         solves against (and folds ``rows`` into) that tenant's rank-r
-        delta — needs a ``TenantManager`` (``tenants=``)."""
+        delta — needs a ``TenantManager`` (``tenants=``). ``trace`` tags
+        the request's spans with a caller-chosen trace id."""
         if tenant is not None and self.tenants is None:
             raise RuntimeError("tenant= requires a TenantManager "
                                "(AsyncSolveServer(tenants=...))")
@@ -262,8 +281,13 @@ class AsyncSolveServer:
                 raise RuntimeError("server is shut down")
             req = self.batcher.submit(v, damping=lam, tokens=tokens,
                                       rows=rows, payload=payload,
-                                      tenant=tenant)
+                                      tenant=tenant, trace=trace)
             req.t_submit = self.clock()
+            if self.registry is not None:
+                qs = self.batcher.queue_stats(req.t_submit)
+                self.registry.gauge("serve.queue_depth").set(qs["depth"])
+                self.registry.gauge("serve.queue_oldest_age_s").set(
+                    qs["oldest_age_s"])
             self._pending.add(req.uid)
             self._cv.notify_all()
         return req.uid
@@ -484,7 +508,16 @@ class AsyncSolveServer:
                 self._cv.notify_all()
 
     def _dispatch(self, mb: Microbatch) -> tuple:
-        """Launch the coalesced solve; returns unmaterialized arrays."""
+        """Launch the coalesced solve; returns unmaterialized arrays plus
+        the dispatch timestamp (the queue-wait / device-solve split)."""
+        t_disp = self.clock()
+        step_ctx = self.profile.step(step=self.metrics.served) \
+            if self.profile is not None else _nullcontext()
+        with step_ctx:
+            x, resid = self._dispatch_arrays(mb)
+        return x, resid, t_disp
+
+    def _dispatch_arrays(self, mb: Microbatch) -> tuple:
         st = self.state
         if mb.tenant is not None:
             return self._dispatch_tenant(mb)
@@ -575,7 +608,7 @@ class AsyncSolveServer:
 
     def _finalize(self, mb: Microbatch, handle: tuple) -> List[SolveResult]:
         """The response boundary: the only block_until_ready."""
-        x, resid = handle
+        x, resid, t_disp = handle
         x = self._unpad_x(x)
         jax.block_until_ready(x)
         t_done = self.clock()
@@ -586,11 +619,36 @@ class AsyncSolveServer:
             last_residual=jnp.where(resid >= 0, resid,
                                     st.stats.last_residual))
         self.state = st._replace(age=st.age + 1, stats=stats)
+        if self.registry is not None:
+            self.registry.counter("serve.microbatches").inc()
+            self.registry.histogram("serve.solve_latency_s").observe(
+                t_done - t_disp)
+        epoch_done_us = time.time() * 1e6 if self.tracer is not None else 0.0
+        if self.tracer is not None:
+            solve_us = (t_done - t_disp) * 1e6
+            self.tracer.add(
+                "device_solve", cat="solve", ts_us=epoch_done_us - solve_us,
+                dur_us=solve_us,
+                args={"k": mb.k, "uids": [r.uid for r in mb.requests],
+                      "tenant": mb.tenant})
         results = []
         for j, req in enumerate(mb.requests):
             xj = tuple(xb[:, j] for xb in x) \
                 if isinstance(x, (tuple, list)) else x[:, j]
-            self.metrics.record(req.t_submit, t_done, req.tokens)
+            queue_s = max(t_disp - req.t_submit, 0.0) \
+                if req.t_submit > 0.0 else None
+            self.metrics.record(req.t_submit, t_done, req.tokens,
+                                queue_s=queue_s)
+            if self.tracer is not None and queue_s is not None:
+                e2e_us = (t_done - req.t_submit) * 1e6
+                self.tracer.add(
+                    "queue_wait", cat="queue",
+                    ts_us=epoch_done_us - e2e_us, dur_us=queue_s * 1e6,
+                    trace=req.trace, args={"uid": req.uid})
+                self.tracer.add(
+                    "request", cat="serve",
+                    ts_us=epoch_done_us - e2e_us, dur_us=e2e_us,
+                    trace=req.trace, args={"uid": req.uid})
             results.append(SolveResult(uid=req.uid, x=xj,
                                        damping=req.damping,
                                        latency_s=t_done - req.t_submit))
@@ -611,5 +669,15 @@ class AsyncSolveServer:
                 self.state = self.adaptation.fold(self.state, req.rows)
 
     def _maybe_refresh(self) -> None:
-        self.state, _ = self.adaptation.maybe_refresh(
+        self.state, refreshed = self.adaptation.maybe_refresh(
             self.state, damping_state=self.damping_state)
+        if self.registry is not None:
+            # age/residual were just pulled to host by the policy check —
+            # mirroring them into gauges costs no extra device sync
+            self.registry.gauge("curvature.factor_age").set(
+                int(self.state.age))
+            self.registry.gauge("curvature.last_drift_residual").set(
+                float(self.state.stats.last_residual))
+        if refreshed and self.tracer is not None:
+            self.tracer.add("refresh", cat="adapt",
+                            ts_us=time.time() * 1e6, dur_us=0.0)

@@ -67,6 +67,8 @@ from repro.fleet.gossip import GossipLog
 from repro.fleet.ring import HashRing
 from repro.fleet.wire import Channel, WireError, get_blocks, listen, \
     put_blocks
+from repro.obs import Tracer
+from repro.obs import merge as merge_snapshots
 from repro.serve.server import ServerMetrics, SolveResult
 
 __all__ = ["Dispatcher", "WorkerHandle", "launch_fleet", "ROUTES"]
@@ -103,6 +105,8 @@ class WorkerHandle:
         self.served = 0
         self.pongs = 0              # heartbeat replies seen (freshness)
         self.tenants: dict = {}     # last reported tenant packing stats
+        self.oldest_age_s = 0.0     # last reported oldest queued request
+        self.metrics: dict = {}     # last obs registry snapshot (pong)
         self.n = None
 
     def __repr__(self):
@@ -116,7 +120,8 @@ class Dispatcher:
 
     def __init__(self, workers: List[WorkerHandle], *,
                  route: str = "round_robin", gossip: bool = True,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, registry=None,
+                 tracer: Optional[Tracer] = None):
         if route not in ROUTES:
             raise ValueError(f"route must be one of {ROUTES}, got {route!r}")
         if not workers:
@@ -127,7 +132,13 @@ class Dispatcher:
         self.clock = clock
         self.ring = HashRing(str(w.worker_id) for w in self.workers)
         self.log: Optional[GossipLog] = None
-        self.metrics = ServerMetrics()
+        # front-tier accounting reports under "fleet.*" so it never
+        # double-counts the workers' own "serve.*" series in a merge
+        self.registry = registry
+        self.metrics = ServerMetrics(registry=registry, prefix="fleet")
+        # always own a tracer (bounded ring, negligible when idle): it is
+        # the stitching point for worker-shipped spans either way
+        self.tracer = tracer if tracer is not None else Tracer()
         self._uid = 0
         self._order: List[int] = []          # submit order (FIFO flush)
         self._results: Dict[int, SolveResult] = {}
@@ -199,9 +210,11 @@ class Dispatcher:
         return uid
 
     def _send_solve(self, w: WorkerHandle, req: _Request) -> None:
+        # the trace id rides the solve frame: worker-side spans tagged
+        # with it stitch to this request across the process boundary
         arrays, meta = {}, {"uid": req.uid, "damping": req.damping,
                             "tokens": req.tokens, "adapter": req.adapter,
-                            "tenant": req.tenant}
+                            "tenant": req.tenant, "trace": f"req{req.uid}"}
         put_blocks(arrays, meta, "v", req.v)
         if req.rows is not None:
             put_blocks(arrays, meta, "rows", req.rows)
@@ -282,6 +295,9 @@ class Dispatcher:
 
     def _handle(self, w: WorkerHandle, msg) -> None:
         if msg.kind == "result":
+            spans = msg.meta.get("spans")
+            if spans:       # worker-recorded spans stitch in, pid intact
+                self.tracer.ingest(spans)
             uid = int(msg.meta["uid"])
             req = w.inflight.pop(uid, None)
             if req is None:              # replayed elsewhere already
@@ -289,6 +305,11 @@ class Dispatcher:
             t_done = self.clock()
             x = get_blocks(msg, "x")
             self.metrics.record(req.t_submit, t_done, req.tokens)
+            rpc_us = (t_done - req.t_submit) * 1e6
+            self.tracer.add(
+                "rpc", cat="fleet", ts_us=time.time() * 1e6 - rpc_us,
+                dur_us=rpc_us, trace=f"req{uid}",
+                args={"uid": uid, "worker": w.worker_id})
             w.served += 1
             self._results[uid] = SolveResult(
                 uid=uid, x=x, damping=float(msg.meta["damping"]),
@@ -298,6 +319,8 @@ class Dispatcher:
             w.queued = int(msg.meta.get("queued", 0))
             w.served = int(msg.meta.get("served", w.served))
             w.tenants = msg.meta.get("tenants", w.tenants) or {}
+            w.oldest_age_s = float(msg.meta.get("oldest_age_s", 0.0))
+            w.metrics = msg.meta.get("metrics", w.metrics) or {}
             w.pongs += 1
         elif msg.kind == "drained":
             self._drained.add(w.worker_id)
@@ -406,10 +429,27 @@ class Dispatcher:
             self._pump(0.05)
         return {w.worker_id: {"applied": w.applied,
                               "queued": w.queued,
+                              "queue_depth": w.queued,
+                              "oldest_age_s": w.oldest_age_s,
                               "served": w.served,
                               "inflight": len(w.inflight),
                               "tenants": w.tenants}
                 for w in self._alive()}
+
+    def fleet_metrics(self, *, refresh: bool = True,
+                      timeout: float = 10.0) -> dict:
+        """One merged registry snapshot for the whole fleet: the workers'
+        obs snapshots (shipped in heartbeat pongs) folded together with
+        the dispatcher's own front-tier registry. Worker histograms sum
+        per bucket, so fleet percentiles come from merged buckets
+        (``obs.quantile``). ``refresh=False`` merges the last-seen pongs
+        without pinging."""
+        if refresh:
+            self.heartbeat(timeout=timeout)
+        snaps = [w.metrics for w in self.workers if w.metrics]
+        if self.registry is not None:
+            snaps.append(self.registry.snapshot())
+        return merge_snapshots(snaps)
 
     # -- checkpoint --------------------------------------------------------
     def checkpoint(self, ckpt_dir, step: int, *,
@@ -519,7 +559,8 @@ def launch_fleet(n_workers: int, *, init_meta: dict,
                  init_arrays: Optional[dict] = None,
                  route: str = "round_robin", gossip: bool = True,
                  worker_env: Optional[dict] = None,
-                 spawn_timeout: float = 300.0) -> Dispatcher:
+                 spawn_timeout: float = 300.0,
+                 registry=None) -> Dispatcher:
     """Spawn ``n_workers`` subprocess workers on localhost and return the
     initialized ``Dispatcher``.
 
@@ -564,7 +605,7 @@ def launch_fleet(n_workers: int, *, init_meta: dict,
     finally:
         srv.close()
     dispatcher = Dispatcher([handles[i] for i in range(n_workers)],
-                            route=route, gossip=gossip)
+                            route=route, gossip=gossip, registry=registry)
     try:
         dispatcher.init_workers(init_meta, init_arrays)
     except BaseException:

@@ -60,6 +60,8 @@ class FleetWorker:
         self.replay = ReplayBuffer()
         self.gossip = True
         self.tenants = None                   # TenantManager (init frame)
+        self.registry = None                  # obs registry (init frame)
+        self.tracer = None                    # obs tracer (init "trace")
         self._async = False
         self._uid_map: Dict[int, int] = {}    # inner uid -> dispatcher uid
         self._running = True
@@ -76,6 +78,15 @@ class FleetWorker:
         meta = msg.meta
         self.gossip = bool(meta.get("gossip", True))
         self._async = bool(meta.get("async", False))
+        # observability: the registry is on by default (snapshots ride
+        # heartbeat pongs — the dispatcher's fleet view); span tracing is
+        # opt-in ("trace": True) since spans ride every result frame
+        if meta.get("obs", True):
+            from repro.obs import MetricsRegistry
+            self.registry = MetricsRegistry()
+        if meta.get("trace", False):
+            from repro.obs import Tracer
+            self.tracer = Tracer()
         if meta.get("tenant_rank"):
             from repro.tenants import TenantManager
             budget_mb = meta.get("tenant_budget_mb")
@@ -83,7 +94,8 @@ class FleetWorker:
                 int(meta["tenant_rank"]),
                 budget_bytes=None if budget_mb is None
                 else int(float(budget_mb) * 2**20),
-                spill_dir=meta.get("tenant_spill_dir"))
+                spill_dir=meta.get("tenant_spill_dir"),
+                registry=self.registry)
         adaptation = OnlineAdaptation(
             refresh_every=int(meta.get("refresh_every", 64)),
             drift_tol=meta.get("drift_tol"),
@@ -110,7 +122,8 @@ class FleetWorker:
                 policy=meta.get("policy", "cached"),
                 layout=meta.get("layout"), async_=self._async,
                 window_dtype=meta.get("window_dtype"),
-                seed=int(meta.get("seed", 0)))
+                seed=int(meta.get("seed", 0)),
+                registry=self.registry, tracer=self.tracer)
             # share the worker's journal so gossiped replays are recorded
             self.server.adaptation.journal = self.journal
             self.server.tenants = self.tenants
@@ -146,14 +159,16 @@ class FleetWorker:
                 self.server = AsyncSolveServer(
                     state, batcher=batcher, adaptation=adaptation,
                     policy=meta.get("policy", "cached"), jitter=jitter,
-                    tenants=self.tenants)
+                    tenants=self.tenants, registry=self.registry,
+                    tracer=self.tracer)
             else:
                 self.server = SolveServer(
                     init_serve_state(S0, damping, jitter=jitter,
                                      window_dtype=window_dtype),
                     batcher=batcher, adaptation=adaptation,
                     policy=meta.get("policy", "cached"), jitter=jitter,
-                    tenants=self.tenants)
+                    tenants=self.tenants, registry=self.registry,
+                    tracer=self.tracer)
             if meta.get("restore_dir"):
                 restored, _ = restore_serve_state(
                     meta["restore_dir"], int(meta["restore_step"]),
@@ -177,7 +192,7 @@ class FleetWorker:
         inner = self.server.submit(
             v, damping=msg.meta.get("damping"),
             tokens=int(msg.meta.get("tokens", 1)), rows=rows,
-            tenant=tenant)
+            tenant=tenant, trace=msg.meta.get("trace"))
         self._uid_map[inner] = int(msg.meta["uid"])
 
     def _handle_fold(self, msg: Message) -> None:
@@ -195,9 +210,11 @@ class FleetWorker:
             # folds applied (and any straggler results out) before we report
             self._send_results(self.server.flush())
         st = self.server.state
+        qs = self.server.batcher.queue_stats(self.server.clock())
         meta = {
             "worker_id": self.worker_id,
             "queued": len(self.server.batcher),
+            "oldest_age_s": qs["oldest_age_s"],
             "served": int(st.stats.served),
             "adapted": int(st.stats.adapted),
             "applied": self.replay.applied,
@@ -205,6 +222,10 @@ class FleetWorker:
         if self.tenants is not None:
             # hot-tenant packing stats: the dispatcher's placement signal
             meta["tenants"] = self.tenants.packing_stats()
+        if self.registry is not None:
+            # the mergeable snapshot rides the pong: the dispatcher folds
+            # every worker's into one fleet view (Dispatcher.fleet_metrics)
+            meta["metrics"] = self.registry.snapshot()
         self.chan.send("pong", meta)
 
     def _handle_ckpt(self, msg: Message) -> None:
@@ -237,6 +258,12 @@ class FleetWorker:
                                 "damping": res.damping,
                                 "latency_s": res.latency_s,
                                 "worker_id": self.worker_id}
+            if self.tracer is not None:
+                # worker-side spans (queue/solve/fold, tagged with the
+                # dispatcher's trace ids) ride the result frame home
+                spans = self.tracer.drain()
+                if spans:
+                    meta["spans"] = spans
             put_blocks(arrays, meta, "x", _to_numpy(res.x))
             self.chan.send("result", meta, arrays)
 

@@ -215,7 +215,7 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                  jitter: float = 0.0, score_chunk=None, policy: str = "cached",
                  layout=None, async_: bool = False, oversize: str = "split",
                  window_dtype=None, tenant_rank=None, tenant_budget_mb=None,
-                 seed: int = 0):
+                 seed: int = 0, registry=None, tracer=None, profile=None):
     """Config → mesh → model → resident curvature window → server.
 
     The serving twin of ``build_trainer``: builds the jitted serve steps
@@ -241,6 +241,10 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
     ``submit(..., tenant=...)`` serves per-tenant rank-r deltas over the
     shared base factor; ``tenant_budget_mb`` caps resident tenant bytes
     (LRU spill past it).
+
+    ``registry`` / ``tracer`` / ``profile`` (``repro.obs``): thread the
+    observability fabric through the server — mergeable metrics, per-
+    request spans, optional ``jax.profiler`` capture around the solve.
     """
     from repro.serve import (OnlineAdaptation, SolveServer,
                              TokenBudgetBatcher, init_serve_state)
@@ -259,7 +263,8 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
         tenants = TenantManager(
             int(tenant_rank),
             budget_bytes=None if tenant_budget_mb is None
-            else int(float(tenant_budget_mb) * 2**20))
+            else int(float(tenant_budget_mb) * 2**20),
+            registry=registry)
     if layout is not None and not async_:
         raise ValueError(
             f"layout={layout!r} shards the resident window, which only the "
@@ -275,12 +280,16 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                 window_dtype=window_dtype)
         server = AsyncSolveServer(state, batcher=batcher,
                                   adaptation=adaptation, policy=policy,
-                                  jitter=jitter, tenants=tenants)
+                                  jitter=jitter, tenants=tenants,
+                                  registry=registry, tracer=tracer,
+                                  profile=profile)
     else:
         server = SolveServer(init_serve_state(S0, damping, jitter=jitter,
                                               window_dtype=window_dtype),
                              batcher=batcher, adaptation=adaptation,
-                             policy=policy, jitter=jitter, tenants=tenants)
+                             policy=policy, jitter=jitter, tenants=tenants,
+                             registry=registry, tracer=tracer,
+                             profile=profile)
     return server, handles
 
 
@@ -292,7 +301,7 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
                 score_chunk=None, policy: str = "cached",
                 async_workers: bool = False, worker_layout=None,
                 window_dtype=None, tenant_rank=None, tenant_budget_mb=None,
-                seed: int = 0):
+                seed: int = 0, trace: bool = False, registry=None):
     """Config → model → seeded window → N-process serving fleet.
 
     The fleet twin of ``build_server``: the model (score-grad pass,
@@ -318,6 +327,13 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
     ``TenantManager`` so ``submit(..., tenant=...)`` rides the
     consistent-hash ``by_adapter`` ring as tenant placement (each
     tenant's delta + journal lives on exactly one worker).
+
+    ``trace=True`` turns on per-request span tracing in every worker —
+    spans ride result frames back and land in ``dispatcher.tracer``, so
+    ``dispatcher.tracer.export(path)`` yields one cross-process Chrome
+    trace. ``registry``: dispatcher-side ``repro.obs.MetricsRegistry``
+    (routing latency under the ``fleet.*`` prefix); worker registries are
+    always on and merge via ``dispatcher.fleet_metrics()``.
     """
     from repro.fleet import launch_fleet
     from repro.fleet.wire import put_blocks
@@ -333,13 +349,15 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
             "window_dtype": None if window_dtype is None
             else str(jnp.dtype(window_dtype)),
             "tenant_rank": None if tenant_rank is None else int(tenant_rank),
-            "tenant_budget_mb": tenant_budget_mb}
+            "tenant_budget_mb": tenant_budget_mb,
+            "obs": True, "trace": bool(trace)}
     arrays = {}
     from repro.core.operator import is_blocked
     put_blocks(arrays, meta, "S0",
                tuple(S0.blocks) if is_blocked(S0) else S0)
     dispatcher = launch_fleet(n_workers, init_meta=meta, init_arrays=arrays,
-                              route=route, gossip=reconcile)
+                              route=route, gossip=reconcile,
+                              registry=registry)
     return dispatcher, handles
 
 

@@ -1,0 +1,41 @@
+"""Unified observability: span tracing, mergeable metrics, exposition.
+
+- ``metrics``: process-wide registry of counters/gauges/fixed-bucket
+  histograms whose snapshots merge across processes (fleet view).
+- ``trace``: per-request span tracing with cross-process trace ids and
+  Chrome-trace/Perfetto JSON export.
+- ``export``: stdlib HTTP endpoint (Prometheus text + JSON) and
+  snapshot files next to checkpoints.
+- ``profile``: optional ``jax.profiler`` hooks around the solve.
+"""
+
+from .export import prometheus_text, start_metrics_server, write_snapshot
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_buckets,
+    merge,
+    quantile,
+    registry,
+)
+from .profile import ProfileHooks
+from .trace import Span, Tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "ProfileHooks",
+    "Span",
+    "Tracer",
+    "default_buckets",
+    "merge",
+    "prometheus_text",
+    "quantile",
+    "registry",
+    "start_metrics_server",
+    "write_snapshot",
+]

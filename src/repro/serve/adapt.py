@@ -131,10 +131,14 @@ class OnlineAdaptation:
                  drift_tol: Optional[float] = None,
                  drift_frac: Optional[float] = 0.25,
                  jitter: float = 0.0, dist=None, journal=None,
-                 on_fold=None):
+                 on_fold=None, registry=None):
         if refresh_every < 1:
             raise ValueError("refresh_every must be >= 1")
         self.refresh_every = int(refresh_every)
+        # optional repro.obs.MetricsRegistry: fold/refresh rates and
+        # window-bytes health series (all python-side — no device syncs
+        # beyond the ones the staleness policy already does)
+        self.registry = registry
         self.drift_tol = None if drift_tol is None else float(drift_tol)
         self.drift_frac = None if drift_frac is None else float(drift_frac)
         self.jitter = float(jitter)
@@ -225,6 +229,10 @@ class OnlineAdaptation:
                 mode=serve_mode(state))
         stats = state.stats._replace(
             adapted=state.stats.adapted + jnp.asarray(k, jnp.int32))
+        if self.registry is not None:
+            self.registry.counter("curvature.folds").inc()
+            self.registry.counter("curvature.fold_rows").inc(k)
+            self._window_gauges(Sp)
         if emit:
             ev = None
             if self.journal is not None:
@@ -236,6 +244,17 @@ class OnlineAdaptation:
                                    rows=rows_in)
                 self.on_fold(ev)
         return state._replace(S=Sp, W=Wp, L=Lp, slot=slot, stats=stats)
+
+    def _window_gauges(self, S) -> None:
+        """Window storage by dtype — shape/dtype metadata only, no device
+        reads (``nbytes`` on a committed jax array is static)."""
+        blocks = S.blocks if is_blocked(S) else (S,)
+        by_dtype: dict = {}
+        for b in blocks:
+            name = jnp.dtype(b.dtype).name
+            by_dtype[name] = by_dtype.get(name, 0) + int(b.nbytes)
+        for name, nb in by_dtype.items():
+            self.registry.gauge(f"window.bytes.{name}").set(nb)
 
     def _dist_fn(self, kind: str, mode: str):
         """Build-once cache of the sharded fold/refresh for ``self.dist``."""
@@ -281,6 +300,10 @@ class OnlineAdaptation:
         stats = state.stats._replace(
             refreshes=state.stats.refreshes + 1,
             last_residual=-jnp.ones((), jnp.float32))
+        if self.registry is not None:
+            self.registry.counter("curvature.refreshes").inc()
+            reason = "force" if force else ("age" if age_due else "drift")
+            self.registry.counter(f"curvature.refresh_{reason}").inc()
         return state._replace(W=W, L=L,
                               age=jnp.zeros((), jnp.int32),
                               stats=stats), True

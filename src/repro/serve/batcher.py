@@ -64,6 +64,7 @@ class SolveRequest:
     payload: Any = None
     t_submit: float = 0.0       # stamped by the server for latency stats
     tenant: Optional[str] = None  # per-tenant delta id (None = shared base)
+    trace: Optional[str] = None   # obs trace id (propagated over the wire)
 
 
 class Microbatch(NamedTuple):
@@ -133,7 +134,8 @@ class TokenBudgetBatcher:
 
     def submit(self, v, *, damping: float, tokens: int = 1, rows=None,
                payload=None, uid: Optional[int] = None,
-               tenant: Optional[str] = None) -> SolveRequest:
+               tenant: Optional[str] = None,
+               trace: Optional[str] = None) -> SolveRequest:
         """Enqueue one request; returns the (uid-stamped) request object."""
         tokens = max(int(tokens), 1)
         if tokens > self.max_tokens and self.oversize == "reject":
@@ -145,9 +147,22 @@ class TokenBudgetBatcher:
             uid=next(self._uid) if uid is None else uid, v=v,
             damping=float(damping), tokens=tokens,
             rows=rows, payload=payload,
-            tenant=None if tenant is None else str(tenant))
+            tenant=None if tenant is None else str(tenant),
+            trace=None if trace is None else str(trace))
         self._queue.append(req)
         return req
+
+    def queue_stats(self, now: Optional[float] = None) -> dict:
+        """Queue depth, pending tokens, and oldest-request age (seconds,
+        against ``now`` on the same clock that stamped ``t_submit``; age
+        is 0.0 while the queue is empty or nothing is stamped yet)."""
+        stamped = [r.t_submit for r in self._queue if r.t_submit > 0.0]
+        oldest = 0.0
+        if stamped and now is not None:
+            oldest = max(0.0, now - min(stamped))
+        return {"depth": len(self._queue),
+                "pending_tokens": self.pending_tokens,
+                "oldest_age_s": oldest}
 
     def next_microbatch(self) -> Optional[Microbatch]:
         """Coalesce the queue head into one microbatch (None when empty).

@@ -119,6 +119,21 @@ def serve_main(argv=None):
     ap.add_argument("--ckpt-dir", default="artifacts/serve_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=8,
                     help="checkpoint cadence in flush rounds (0: off)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve live metrics over HTTP on this port "
+                         "(/metrics Prometheus text, /metrics.json raw "
+                         "snapshot; 0: ephemeral port). The fleet endpoint "
+                         "merges worker snapshots into one view.")
+    ap.add_argument("--metrics-snapshot", default=None, metavar="PATH",
+                    help="write the (fleet-merged) metrics snapshot JSON "
+                         "here at checkpoint cadence and at exit")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable per-request span tracing and export a "
+                         "Chrome-trace JSON here at exit (--fleet: spans "
+                         "from every worker stitch into one file)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the coalesced "
+                         "solves into DIR (in-process server only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -137,6 +152,13 @@ def serve_main(argv=None):
     layout = None if args.mesh == "replicated" else args.mesh
     async_ = args.async_ or layout is not None
 
+    from repro.obs import MetricsRegistry, ProfileHooks, Tracer
+    registry = MetricsRegistry()
+    tracer = Tracer() if args.trace_out else None
+    profile = ProfileHooks(args.profile_dir) if args.profile_dir else None
+    if profile is not None:
+        profile.start()
+
     t0 = time.perf_counter()
     server, h = build_server(
         cfg, mesh=mesh, window=args.window, seq=args.seq,
@@ -145,7 +167,9 @@ def serve_main(argv=None):
         drift_tol=args.drift_tol, drift_frac=args.drift_frac,
         layout=layout, async_=async_, window_dtype=args.window_dtype,
         tenant_rank=args.tenant_rank if args.tenants else None,
-        tenant_budget_mb=args.tenant_budget_mb, seed=args.seed)
+        tenant_budget_mb=args.tenant_budget_mb, seed=args.seed,
+        registry=registry, tracer=tracer, profile=profile)
+    endpoint_port = _start_endpoint(args, registry)
     kind = f"async {layout or 'replicated'}" if async_ else "eager"
     print(f"resident window factorized: n={args.window} "
           f"m={server.state.S.shape[1]} λ0={args.damping} [{kind}] "
@@ -208,6 +232,10 @@ def serve_main(argv=None):
                 ckpt.save(args.ckpt_dir, rounds,
                           {"serve": server.state, "params": h.params},
                           metadata={"arch": cfg.name})
+                if args.metrics_snapshot:
+                    from repro.obs import write_snapshot
+                    write_snapshot(args.metrics_snapshot,
+                                   registry.snapshot())
 
     s = server.metrics.summary()
     st = server.stats
@@ -235,9 +263,44 @@ def serve_main(argv=None):
                   metadata={"arch": cfg.name})
         print(f"checkpointed ServeState+params at round {rounds} "
               f"-> {args.ckpt_dir}")
+    if profile is not None:
+        profile.stop()
+    _finish_obs(args, registry.snapshot(), tracer=tracer,
+                port=endpoint_port)
     if async_:
         server.shutdown()
     return server, losses
+
+
+def _start_endpoint(args, registry, extra_snapshots=None):
+    """``--metrics-port``: bind the stdlib HTTP exposition endpoint."""
+    if args.metrics_port is None:
+        return None
+    from repro.obs import start_metrics_server
+    _, port = start_metrics_server(registry, port=args.metrics_port,
+                                   extra_snapshots=extra_snapshots)
+    print(f"metrics endpoint: http://127.0.0.1:{port}/metrics", flush=True)
+    return port
+
+
+def _finish_obs(args, snapshot, *, tracer=None, port=None):
+    """Exit-time observability: final snapshot file, Chrome-trace export,
+    and a self-scrape of the live endpoint (proves the exposition path
+    end to end — CI asserts on the printed series count)."""
+    if args.metrics_snapshot:
+        from repro.obs import write_snapshot
+        write_snapshot(args.metrics_snapshot, snapshot)
+        print(f"metrics snapshot -> {args.metrics_snapshot}")
+    if tracer is not None and args.trace_out:
+        n = tracer.export(args.trace_out)
+        print(f"trace: {n} spans -> {args.trace_out}")
+    if port is not None:
+        import urllib.request
+        body = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=10).read().decode()
+        series = [ln for ln in body.splitlines()
+                  if ln and not ln.startswith("#")]
+        print(f"metrics scrape: {len(series)} series from :{port}")
 
 
 def _serve_fleet(args, cfg, mesh):
@@ -249,7 +312,9 @@ def _serve_fleet(args, cfg, mesh):
     fleet tier composes with the dist tier: every worker then shards its
     replica over its own devices)."""
     from repro.launch.trainer import build_fleet
+    from repro.obs import MetricsRegistry
 
+    registry = MetricsRegistry()
     worker_layout = None if args.mesh == "replicated" else args.mesh
     t0 = time.perf_counter()
     dispatcher, h = build_fleet(
@@ -261,7 +326,14 @@ def _serve_fleet(args, cfg, mesh):
         async_workers=args.async_ or worker_layout is not None,
         worker_layout=worker_layout, window_dtype=args.window_dtype,
         tenant_rank=args.tenant_rank if args.tenants else None,
-        tenant_budget_mb=args.tenant_budget_mb, seed=args.seed)
+        tenant_budget_mb=args.tenant_budget_mb, seed=args.seed,
+        trace=bool(args.trace_out), registry=registry)
+    # the endpoint folds the workers' last-pong snapshots into every
+    # response — one scrape sees the whole fleet
+    endpoint_port = _start_endpoint(
+        args, registry,
+        extra_snapshots=lambda: [w.metrics for w in dispatcher.workers
+                                 if w.metrics])
     print(f"fleet up: {args.fleet} workers, route={args.route}, "
           f"reconcile={not args.no_reconcile}, n={args.window} "
           f"({(time.perf_counter() - t0) * 1e3:.0f} ms)", flush=True)
@@ -305,6 +377,10 @@ def _serve_fleet(args, cfg, mesh):
                 rounds += 1
                 if args.ckpt_every and rounds % args.ckpt_every == 0:
                     dispatcher.checkpoint(args.ckpt_dir, rounds)
+                    if args.metrics_snapshot:
+                        from repro.obs import write_snapshot
+                        write_snapshot(args.metrics_snapshot,
+                                       dispatcher.fleet_metrics())
 
         dispatcher.reconcile()
         if not args.no_reconcile and len(dispatcher.workers) > 1:
@@ -334,6 +410,8 @@ def _serve_fleet(args, cfg, mesh):
             path = dispatcher.checkpoint(args.ckpt_dir, rounds)
             print(f"fleet checkpoint (per-worker ServeState + manifest) "
                   f"-> {path}")
+        _finish_obs(args, dispatcher.fleet_metrics(),
+                    tracer=dispatcher.tracer, port=endpoint_port)
     finally:
         dispatcher.shutdown()
     return dispatcher, losses

@@ -33,8 +33,10 @@ against the shared base.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import time
+from collections import deque
 from typing import Any, List, NamedTuple, Optional
 
 import jax
@@ -93,40 +95,74 @@ def _coalesced_solve(S, W, L, lam0, V, lams, *, mode, jitter, uniform,
 
 
 class ServerMetrics:
-    """Per-request wall-clock accounting (eager, python-side)."""
+    """Per-request wall-clock accounting (eager, python-side).
 
-    def __init__(self):
+    The per-request buffer is a fixed-size ring (``window`` most recent
+    requests — a long-lived server no longer grows without bound);
+    totals (``served``, token throughput, first-submit/last-done span)
+    keep counting past the ring. With a ``repro.obs`` registry attached
+    every record also lands in mergeable instruments —
+    ``<prefix>.request_latency_s`` / ``<prefix>.queue_wait_s``
+    histograms plus ``<prefix>.requests`` / ``<prefix>.tokens``
+    counters — so a fleet of processes folds into one view
+    (``obs.merge``) with percentiles from merged buckets. ``summary()``
+    keeps its historical shape; its p50/p99 cover the ring window.
+    """
+
+    def __init__(self, *, window: int = 4096, registry=None,
+                 prefix: str = "serve"):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = int(window)
+        self.registry = registry
+        self.prefix = prefix
         self.reset()
 
     def reset(self) -> None:
-        self._records: List[tuple] = []     # (t_submit, t_done, tokens)
+        # ring of (t_submit, t_done, tokens); totals survive eviction
+        self._ring: deque = deque(maxlen=self.window)
+        self._count = 0
+        self._tokens = 0
+        self._t0: Optional[float] = None
+        self._t1: Optional[float] = None
 
-    def record(self, t_submit: float, t_done: float, tokens: int) -> None:
-        self._records.append((t_submit, t_done, tokens))
+    def record(self, t_submit: float, t_done: float, tokens: int,
+               queue_s: Optional[float] = None) -> None:
+        self._ring.append((t_submit, t_done, tokens))
+        self._count += 1
+        self._tokens += tokens
+        self._t0 = t_submit if self._t0 is None else min(self._t0, t_submit)
+        self._t1 = t_done if self._t1 is None else max(self._t1, t_done)
+        reg = self.registry
+        if reg is not None:
+            p = self.prefix
+            reg.counter(f"{p}.requests").inc()
+            reg.counter(f"{p}.tokens").inc(int(tokens))
+            reg.histogram(f"{p}.request_latency_s").observe(t_done - t_submit)
+            if queue_s is not None:
+                reg.histogram(f"{p}.queue_wait_s").observe(max(queue_s, 0.0))
 
     @property
     def served(self) -> int:
-        return len(self._records)
+        return self._count
 
     def latencies_s(self) -> np.ndarray:
-        return np.asarray([d - s for s, d, _ in self._records], np.float64)
+        return np.asarray([d - s for s, d, _ in self._ring], np.float64)
 
     def summary(self) -> dict:
-        """p50/p99 latency, requests/sec, tokens/sec over the recorded
-        window (first submit → last completion)."""
-        if not self._records:
+        """p50/p99 latency (over the ring window), requests/sec and
+        tokens/sec over the full recorded span (first submit → last
+        completion, all requests ever recorded)."""
+        if not self._count:
             return {"served": 0, "p50_ms": None, "p99_ms": None,
                     "rps": None, "tokens_per_s": None}
         lat = self.latencies_s()
-        t0 = min(s for s, _, _ in self._records)
-        t1 = max(d for _, d, _ in self._records)
-        span = max(t1 - t0, 1e-12)
-        tokens = sum(t for _, _, t in self._records)
-        return {"served": len(lat),
+        span = max(self._t1 - self._t0, 1e-12)
+        return {"served": self._count,
                 "p50_ms": float(np.percentile(lat, 50) * 1e3),
                 "p99_ms": float(np.percentile(lat, 99) * 1e3),
-                "rps": len(lat) / span,
-                "tokens_per_s": tokens / span}
+                "rps": self._count / span,
+                "tokens_per_s": self._tokens / span}
 
 
 class SolveServer:
@@ -146,6 +182,14 @@ class SolveServer:
         the fused resident-L serve kernel; False forces the compositional
         solve — the baseline ``benchmarks/serve.py`` gates against.
       tenants: optional ``TenantManager`` — enables ``submit(tenant=)``.
+      registry: optional ``repro.obs`` MetricsRegistry — per-request
+        latency/queue-wait histograms, stage counters, and queue gauges
+        land there (mergeable across processes). None: wall-clock summary
+        only, zero registry overhead.
+      tracer: optional ``repro.obs.Tracer`` — per-request queue/solve/
+        fold spans, trace ids riding ``submit(trace=)``.
+      profile: optional ``repro.obs.ProfileHooks`` — ``jax.profiler``
+        step annotation around the coalesced solve.
     """
 
     def __init__(self, state: ServeState, *,
@@ -153,7 +197,9 @@ class SolveServer:
                  adaptation: Optional[OnlineAdaptation] = None,
                  policy: str = "cached", monitor_drift: bool = True,
                  jitter: float = 0.0, fused: bool = True,
-                 tenants=None, clock=time.perf_counter):
+                 tenants=None, clock=time.perf_counter,
+                 registry=None, tracer=None, profile=None,
+                 metrics_window: int = 4096):
         if policy not in ("cached", "refactorize"):
             raise ValueError(f"policy must be 'cached' or 'refactorize', "
                              f"got {policy!r}")
@@ -166,21 +212,40 @@ class SolveServer:
         self.fused = bool(fused)
         self.tenants = tenants
         self.clock = clock
-        self.metrics = ServerMetrics()
+        self.registry = registry
+        self.tracer = tracer
+        self.profile = profile
+        self.metrics = ServerMetrics(window=metrics_window,
+                                     registry=registry, prefix="serve")
+        # propagate the registry to attached components that predate it
+        if registry is not None and tenants is not None \
+                and getattr(tenants, "registry", None) is None:
+            tenants.registry = registry
+        if registry is not None and adaptation is not None \
+                and getattr(adaptation, "registry", None) is None:
+            adaptation.registry = registry
 
     # -- request intake ----------------------------------------------------
     def submit(self, v, *, damping: Optional[float] = None, tokens: int = 1,
-               rows=None, payload=None, tenant: Optional[str] = None) -> int:
+               rows=None, payload=None, tenant: Optional[str] = None,
+               trace: Optional[str] = None) -> int:
         """Enqueue one request; returns its uid. ``damping=None`` means
         the resident λ₀ (the fast path). ``tenant`` solves against (and
-        folds ``rows`` into) that tenant's delta — needs ``tenants=``."""
+        folds ``rows`` into) that tenant's delta — needs ``tenants=``.
+        ``trace`` tags the request's spans with a caller-chosen trace id
+        (the fleet dispatcher's cross-process stitching handle)."""
         if tenant is not None and self.tenants is None:
             raise RuntimeError("tenant= requires a TenantManager "
                                "(SolveServer(tenants=...))")
         lam = float(self.state.lam0) if damping is None else float(damping)
         req = self.batcher.submit(v, damping=lam, tokens=tokens, rows=rows,
-                                  payload=payload, tenant=tenant)
+                                  payload=payload, tenant=tenant, trace=trace)
         req.t_submit = self.clock()
+        if self.registry is not None:
+            qs = self.batcher.queue_stats(req.t_submit)
+            self.registry.gauge("serve.queue_depth").set(qs["depth"])
+            self.registry.gauge("serve.queue_oldest_age_s").set(
+                qs["oldest_age_s"])
         return req.uid
 
     def solve_one(self, v, *, damping: Optional[float] = None, tokens: int = 1,
@@ -216,11 +281,32 @@ class SolveServer:
                     # never the shared window
                     self.tenants.fold(self.state, mb.tenant, req.rows)
                 elif self.adaptation is not None:
-                    self.state = self.adaptation.fold(self.state, req.rows)
+                    if self.tracer is not None:
+                        with self.tracer.span("fold", cat="adapt",
+                                              trace=req.trace):
+                            self.state = self.adaptation.fold(self.state,
+                                                              req.rows)
+                    else:
+                        self.state = self.adaptation.fold(self.state,
+                                                          req.rows)
             if self.adaptation is not None:
-                self.state, _ = self.adaptation.maybe_refresh(
+                self.state, refreshed = self.adaptation.maybe_refresh(
                     self.state, damping_state=damping_state)
+                if refreshed and self.tracer is not None:
+                    self.tracer.add("refresh", cat="adapt",
+                                    ts_us=time.time() * 1e6, dur_us=0.0)
+            if self.registry is not None:
+                self._health_gauges()
         return out
+
+    def _health_gauges(self) -> None:
+        """Curvature-health gauges (fold/refresh *counters* live in
+        ``OnlineAdaptation``, python-side). The scalar pulls here ride a
+        flush that already synchronized on the solve results."""
+        reg = self.registry
+        reg.gauge("curvature.factor_age").set(int(self.state.age))
+        reg.gauge("curvature.last_drift_residual").set(
+            float(self.state.stats.last_residual))
 
     def _serve_tenant(self, mb: Microbatch):
         """Solve one tenant microbatch: the same coalesced solve with the
@@ -266,17 +352,21 @@ class SolveServer:
     def _serve(self, mb: Microbatch) -> List[SolveResult]:
         st = self.state
         lam0 = float(st.lam0)
-        if mb.tenant is not None:
-            x = self._serve_tenant(mb)
-            resid = -jnp.ones((), jnp.float32)
-        else:
-            uniform = all(r.damping == lam0 for r in mb.requests)
-            x, resid = _coalesced_solve(
-                st.S, st.W, st.L, st.lam0, mb.V, mb.dampings,
-                mode=serve_mode(st), jitter=self.jitter, uniform=uniform,
-                monitor=self.monitor_drift and self.policy == "cached",
-                refactorize=self.policy == "refactorize", fused=self.fused)
-        jax.block_until_ready(x)
+        t_start = self.clock()
+        step_ctx = self.profile.step(step=self.metrics.served) \
+            if self.profile is not None else contextlib.nullcontext()
+        with step_ctx:
+            if mb.tenant is not None:
+                x = self._serve_tenant(mb)
+                resid = -jnp.ones((), jnp.float32)
+            else:
+                uniform = all(r.damping == lam0 for r in mb.requests)
+                x, resid = _coalesced_solve(
+                    st.S, st.W, st.L, st.lam0, mb.V, mb.dampings,
+                    mode=serve_mode(st), jitter=self.jitter, uniform=uniform,
+                    monitor=self.monitor_drift and self.policy == "cached",
+                    refactorize=self.policy == "refactorize", fused=self.fused)
+            jax.block_until_ready(x)
         t_done = self.clock()
 
         k = mb.k
@@ -287,11 +377,40 @@ class SolveServer:
                                     st.stats.last_residual))
         self.state = st._replace(age=st.age + 1, stats=stats)
 
+        if self.registry is not None:
+            self.registry.counter("serve.microbatches").inc()
+            self.registry.histogram("serve.solve_latency_s").observe(
+                t_done - t_start)
+        if self.tracer is not None:
+            # one epoch anchor per microbatch: spans from every process
+            # land on the time.time() timeline while durations stay on
+            # the monotonic clock that stamped t_submit/t_done
+            epoch_done_us = time.time() * 1e6
+            solve_us = (t_done - t_start) * 1e6
+            self.tracer.add(
+                "device_solve", cat="solve", ts_us=epoch_done_us - solve_us,
+                dur_us=solve_us,
+                args={"k": k, "uids": [r.uid for r in mb.requests],
+                      "tenant": mb.tenant})
+
         results = []
         for j, req in enumerate(mb.requests):
             xj = tuple(xb[:, j] for xb in x) if isinstance(x, (tuple, list)) \
                 else x[:, j]
-            self.metrics.record(req.t_submit, t_done, req.tokens)
+            queue_s = max(t_start - req.t_submit, 0.0) \
+                if req.t_submit > 0.0 else None
+            self.metrics.record(req.t_submit, t_done, req.tokens,
+                                queue_s=queue_s)
+            if self.tracer is not None and queue_s is not None:
+                e2e_us = (t_done - req.t_submit) * 1e6
+                self.tracer.add(
+                    "queue_wait", cat="queue",
+                    ts_us=epoch_done_us - e2e_us, dur_us=queue_s * 1e6,
+                    trace=req.trace, args={"uid": req.uid})
+                self.tracer.add(
+                    "request", cat="serve",
+                    ts_us=epoch_done_us - e2e_us, dur_us=e2e_us,
+                    trace=req.trace, args={"uid": req.uid})
             results.append(SolveResult(uid=req.uid, x=xj,
                                        damping=req.damping,
                                        latency_s=t_done - req.t_submit))

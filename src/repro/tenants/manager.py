@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import pathlib
 import tempfile
+import time
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -102,7 +103,7 @@ class TenantManager:
     """Registry + memory manager over one shared base ``ServeState``."""
 
     def __init__(self, rank: int, *, budget_bytes: Optional[int] = None,
-                 spill_dir=None):
+                 spill_dir=None, registry=None):
         if rank < 1:
             raise ValueError("tenant rank budget must be >= 1")
         self.rank = int(rank)
@@ -112,6 +113,9 @@ class TenantManager:
             spill_dir if spill_dir is not None
             else tempfile.mkdtemp(prefix="tenant_spill_"))
         self.stats = TenantStats()
+        # optional repro.obs.MetricsRegistry: occupancy gauges plus
+        # evict/activate latency histograms (the residency tier's health)
+        self.registry = registry
         self._tenants: Dict[str, _Tenant] = {}
         self._tick = 0            # LRU clock: bumped on every touch
 
@@ -172,6 +176,9 @@ class TenantManager:
                 [ev_rows, np.asarray(signs, np.float32).reshape(k, 1)],
                 axis=1)
         t.journal.append_fold(slots, ev_rows, origin=t.tid)
+        if self.registry is not None:
+            self.registry.counter("tenants.folds").inc()
+            self.registry.counter("tenants.fold_rows").inc(k)
         if t.resident:
             t.delta, got = delta_fold(t.delta, Q, signs=signs)
             if got != slots:
@@ -198,6 +205,7 @@ class TenantManager:
     def _activate(self, t: _Tenant) -> None:
         if t.resident:
             return
+        t0 = time.perf_counter()
         arrays, meta = load_tenant_spill(t.spill_path)
         t.delta = TenantDelta(
             cols=jnp.asarray(arrays["cols"]),
@@ -209,6 +217,11 @@ class TenantManager:
             self._apply_event(t, ev)
         t.applied = t.journal.head
         self.stats.activations += 1
+        if self.registry is not None:
+            self.registry.counter("tenants.activations").inc()
+            self.registry.histogram("tenants.activate_latency_s").observe(
+                time.perf_counter() - t0)
+            self._occupancy_gauges()
         self._ensure_budget(exempt=t.tid)
 
     def evict(self, tid) -> pathlib.Path:
@@ -217,6 +230,7 @@ class TenantManager:
         t = self._get(tid, create=False)
         if not t.resident:
             return t.spill_path
+        t0 = time.perf_counter()
         path = self.spill_dir / f"tenant_{t.tid}.npz"
         t.spill_path = save_tenant_spill(
             path,
@@ -228,6 +242,11 @@ class TenantManager:
         t.delta, t.L, t.factor_key = None, None, None
         t.journal.compact(t.applied)       # the npz covers that prefix
         self.stats.evictions += 1
+        if self.registry is not None:
+            self.registry.counter("tenants.evictions").inc()
+            self.registry.histogram("tenants.evict_latency_s").observe(
+                time.perf_counter() - t0)
+            self._occupancy_gauges()
         return t.spill_path
 
     def _ensure_budget(self, *, exempt: Optional[str] = None) -> None:
@@ -261,10 +280,27 @@ class TenantManager:
             t.L = delta_factor(t.delta, base_L, lam_v)
             t.factor_key = key
             self.stats.materializations += 1
+            if self.registry is not None:
+                self.registry.counter("tenants.materializations").inc()
             self._ensure_budget(exempt=t.tid)
         t.served += 1
         self._touch(t)
+        if self.registry is not None:
+            self._occupancy_gauges()
         return t.L
+
+    def _occupancy_gauges(self) -> None:
+        """Hot/warm/spilled occupancy into the registry (hot = factor
+        cached; warm = delta resident, factor not)."""
+        reg = self.registry
+        hot = sum(1 for t in self._tenants.values()
+                  if t.resident and t.L is not None)
+        resident = self.resident_count()
+        reg.gauge("tenants.registered").set(len(self._tenants))
+        reg.gauge("tenants.hot").set(hot)
+        reg.gauge("tenants.warm").set(resident - hot)
+        reg.gauge("tenants.spilled").set(len(self._tenants) - resident)
+        reg.gauge("tenants.resident_bytes").set(self.resident_bytes())
 
     # -- accounting ------------------------------------------------------------
     def resident_bytes(self) -> int:

@@ -568,6 +568,75 @@ def test_subprocess_fleet_by_adapter_partitions_exactly():
         disp.shutdown(timeout=60)
 
 
+@pytest.mark.slow
+def test_subprocess_fleet_obs_merges_metrics_and_stitches_traces(tmp_path):
+    """Fleet observability end to end: worker registries ship snapshots in
+    heartbeat pongs and ``fleet_metrics`` merges them with the
+    dispatcher's own front-tier series; trace ids ride the solve frames
+    out and the workers' spans ride the result frames home, so one trace
+    id collects spans from >=2 distinct processes — the stitching the
+    Chrome-trace export relies on."""
+    n, m, requests, k = 8, 96, 8, 2
+    S = _window(n, m, seed=6)
+    trace = _mixed_trace(m, requests, seed=7)
+
+    from repro.obs import MetricsRegistry, quantile
+    registry = MetricsRegistry()
+    disp = launch_fleet(2, init_meta={"mode": "inline", "damping": 0.1,
+                                      "max_requests": k,
+                                      "refresh_every": 10 ** 6,
+                                      "drift_frac": None,
+                                      "obs": True, "trace": True},
+                        init_arrays={"S0": np.asarray(S)},
+                        route="round_robin", gossip=True,
+                        registry=registry)
+    try:
+        for i, (v, lam, rows, adapter) in enumerate(trace):
+            disp.submit(v, damping=lam, rows=rows, adapter=adapter)
+        assert len(disp.flush(timeout=300)) == requests
+
+        # heartbeat surfaces batcher queue state (satellite b)
+        reports = disp.heartbeat(timeout=300)
+        for rep in reports.values():
+            assert rep["queue_depth"] == 0       # drained by flush
+            assert rep["oldest_age_s"] == 0.0
+
+        # merged fleet view: worker serve.* sums, dispatcher fleet.* rides
+        # along under its own prefix (no double counting)
+        snap = disp.fleet_metrics(refresh=False)  # heartbeat above refreshed
+        assert snap["counters"]["serve.requests"] == requests
+        assert snap["counters"]["fleet.requests"] == requests
+        per_worker = [w.metrics for w in disp.workers if w.metrics]
+        assert len(per_worker) == 2
+        counts = [p["counters"].get("serve.requests", 0) for p in per_worker]
+        assert sum(counts) == requests and all(c > 0 for c in counts)
+        h = snap["histograms"]["serve.request_latency_s"]
+        assert h["count"] == requests
+        assert 0.0 < quantile(h, 0.5) <= quantile(h, 0.99)
+        assert snap["histograms"]["serve.queue_wait_s"]["count"] == requests
+
+        # cross-process stitching: worker spans (foreign pid) + the
+        # dispatcher's rpc span share one trace id
+        events = disp.tracer.events()
+        by_trace = {}
+        for e in events:
+            tid = e.get("args", {}).get("trace")
+            if tid is not None:
+                by_trace.setdefault(tid, []).append(e)
+        stitched = {tid: evs for tid, evs in by_trace.items()
+                    if len({e["pid"] for e in evs}) >= 2}
+        assert stitched, "no trace id spans >=2 processes"
+        names = {e["name"] for evs in stitched.values() for e in evs}
+        assert "request" in names and "rpc" in names
+
+        out = tmp_path / "fleet_trace.json"
+        assert disp.tracer.export(out) == len(events) > 0
+        doc = json.loads(out.read_text())
+        assert all(e["ph"] == "X" for e in doc["traceEvents"])
+    finally:
+        disp.shutdown(timeout=60)
+
+
 def test_build_fleet_wiring():
     """build_fleet returns a dispatcher + traffic-side handles wired to
     the same window; the full request → solve → update loop runs."""
