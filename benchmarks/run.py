@@ -112,6 +112,10 @@ def main(argv=None) -> None:
     # observability cost ceiling: metrics+tracing <= 5% req/s on the
     # coalesced path, gated at the real shape (tiny rows report-only).
     serve.run_obs_overhead(emit=emit, assert_overhead=not tiny, **sv)
+    # numerical-health observatory ceiling: margins + cadenced
+    # condest/residual audit + rule engine keep >= 95% of audit-off
+    # req/s, gated at the real shape (tiny rows report-only).
+    serve.run_audit_overhead(emit=emit, assert_overhead=not tiny, **sv)
     serve_rows += rows
 
     from benchmarks import serve_dist

@@ -12,10 +12,20 @@ Three layers, each usable on its own:
 * ``cache``     — ``StreamingCurvature`` / ``CurvatureCache``: carry the
   Gram across optimizer steps with age- and drift-triggered refreshes and
   ``with_damping``-style λ re-damping; jit-safe state + hit/refresh stats.
+* ``audit``     — cheap online numerical-health estimators for the
+  resident factor: Hager/Higham 1-norm condition estimate, Hutchinson
+  factor-residual probe (both O(n²), no refactorization) — the signals
+  ``repro.obs.health`` turns into verdicts.
 
 ``repro.optim.NaturalGradient(curvature=...)`` and the trainer's
 ``--curvature streaming`` flag wire this into training end to end.
 """
+from repro.curvature.audit import (
+    FactorAudit,
+    audit_factor,
+    condest,
+    factor_residual_probe,
+)
 from repro.curvature.cache import (
     CurvatureCache,
     CurvatureState,
@@ -24,6 +34,7 @@ from repro.curvature.cache import (
 )
 from repro.curvature.streaming import StreamingGram, accumulate_gram
 from repro.curvature.update import (
+    DowndateAux,
     chol_append,
     chol_downdate,
     chol_drop_leading,
@@ -33,8 +44,9 @@ from repro.curvature.update import (
 )
 
 __all__ = [
-    "CurvatureCache", "CurvatureState", "CurvatureStats",
-    "StreamingCurvature", "StreamingGram", "accumulate_gram",
-    "chol_append", "chol_downdate", "chol_drop_leading", "chol_update",
-    "replace_factors", "signed_split",
+    "CurvatureCache", "CurvatureState", "CurvatureStats", "DowndateAux",
+    "FactorAudit", "StreamingCurvature", "StreamingGram", "accumulate_gram",
+    "audit_factor", "chol_append", "chol_downdate", "chol_drop_leading",
+    "chol_update", "condest", "factor_residual_probe", "replace_factors",
+    "signed_split",
 ]

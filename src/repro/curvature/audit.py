@@ -1,0 +1,149 @@
+"""Cheap online audits of the resident damped-Fisher factor.
+
+The streaming factor L is maintained for thousands of folds between
+refactorizations (the paper's core trick), which is exactly how
+conditioning and drift decay *silently*: every individual rank-k step
+looks fine while ‖L·L† − (W + λĨ)‖ creeps up and κ(W + λĨ) explodes as
+λ shrinks. These probes put numbers on both failure axes without a
+refactorization and without touching the O(n²·m) Gram path:
+
+* ``condest`` — Hager/Higham-style 1-norm condition estimate of
+  A = W + λĨ: the exact ‖A‖₁ is a column-sum over the already-resident
+  Gram (O(n²)), and ‖A⁻¹‖₁ is estimated by a few A⁻¹-applications,
+  each two triangular solves through L (O(n²) apiece). Estimates are
+  lower bounds, almost always within a small factor of the truth.
+* ``factor_residual_probe`` — stochastic Hutchinson probe of the
+  factor's drift from the matrix it claims to factor: for Rademacher z,
+  z†(L·L† − W − λĨ)z costs one L†-matvec plus one W-matvec (O(n²) per
+  probe) and its relative size estimates ‖L·L† − A‖/‖A‖.
+* ``audit_factor`` — both at once as one jittable pytree-in/pytree-out
+  step, designed to ride an existing host-sync boundary (the serve
+  tier's ``maybe_refresh``) so auditing adds no *new* device round
+  trips on the hot path.
+
+Everything here is jit-safe; randomness is derived from an integer
+``step`` folded into a fixed key, so audits are deterministic and
+reproducible across workers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+__all__ = [
+    "FactorAudit",
+    "audit_factor",
+    "condest",
+    "factor_residual_probe",
+]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+class FactorAudit(NamedTuple):
+    """One audit pass over the resident factor (jit-safe scalars)."""
+
+    condest: jax.Array    # 1-norm condition estimate of W + λĨ
+    residual: jax.Array   # relative Hutchinson estimate of ‖LL† − W − λĨ‖
+
+
+def _solve_gram(L: jax.Array, b: jax.Array) -> jax.Array:
+    """(L·L†)⁻¹ · b via two triangular solves — O(n²) per column."""
+    y = solve_triangular(L, b, lower=True)
+    return solve_triangular(L.conj().T, y, lower=False)
+
+
+def _sign_like(y: jax.Array) -> jax.Array:
+    if jnp.issubdtype(y.dtype, jnp.complexfloating):
+        mag = jnp.maximum(jnp.abs(y), jnp.finfo(y.real.dtype).tiny)
+        return y / mag
+    return jnp.where(y >= 0, 1.0, -1.0).astype(y.dtype)
+
+
+def invnorm1_est(L: jax.Array, *, iters: int = 2) -> jax.Array:
+    """Hager power-iteration estimate of ‖(L·L†)⁻¹‖₁.
+
+    Each iteration applies A⁻¹ twice (A = L·L† is Hermitian, so A⁻† is
+    the same solve): 4·iters triangular solves total, O(n²) each, no
+    refactorization. Returns a lower bound that is in practice within a
+    small factor of the truth (Higham 1988).
+    """
+    L = jnp.asarray(L)
+    n = L.shape[0]
+    rdtype = jnp.zeros((), L.dtype).real.dtype
+    x0 = jnp.full((n, 1), 1.0 / n, L.dtype)
+
+    def body(_, carry):
+        x, est = carry
+        y = _solve_gram(L, x)
+        est = jnp.maximum(est, jnp.sum(jnp.abs(y)).astype(rdtype))
+        z = _solve_gram(L, _sign_like(y))
+        j = jnp.argmax(jnp.abs(z))
+        x = jnp.zeros_like(x).at[j, 0].set(1.0)
+        return x, est
+
+    x, est = jax.lax.fori_loop(0, iters, body,
+                               (x0, jnp.zeros((), rdtype)))
+    y = _solve_gram(L, x)                     # evaluate at the final e_j
+    return jnp.maximum(est, jnp.sum(jnp.abs(y)).astype(rdtype))
+
+
+def condest(W: jax.Array, L: jax.Array, lam: jax.Array | float,
+            *, iters: int = 2) -> jax.Array:
+    """1-norm condition estimate of A = W + λĨ given its resident factor.
+
+    ‖A‖₁ is exact (max absolute column sum of the materialized Gram plus
+    damping, O(n²)); ‖A⁻¹‖₁ comes from ``invnorm1_est``. The product is
+    a lower bound on κ₁(A) — the right direction for alarms, which care
+    about the estimate being *large*.
+    """
+    W = jnp.asarray(W)
+    lam = jnp.asarray(lam, W.real.dtype)
+    n = W.shape[0]
+    colsums = jnp.sum(jnp.abs(W + lam * jnp.eye(n, dtype=W.dtype)), axis=0)
+    return jnp.max(colsums) * invnorm1_est(L, iters=iters)
+
+
+def factor_residual_probe(W: jax.Array, L: jax.Array,
+                          lam: jax.Array | float, *, probes: int = 2,
+                          step: jax.Array | int = 0) -> jax.Array:
+    """Relative Hutchinson probe of z†(L·L† − W − λĨ)z.
+
+    Rademacher probes give an unbiased trace estimate of the residual;
+    reported as max over probes of |z†LL†z − z†Wz − λ‖z‖²| relative to
+    z†Wz + λ‖z‖² — a drift meter for the incremental factor, O(n²) per
+    probe. ``step`` seeds the probe vectors deterministically.
+    """
+    W = jnp.asarray(W)
+    L = jnp.asarray(L)
+    rdtype = jnp.zeros((), W.dtype).real.dtype
+    lam = jnp.asarray(lam, rdtype)
+    n = W.shape[0]
+    key = jax.random.fold_in(jax.random.PRNGKey(0x5EED),
+                             jnp.asarray(step, jnp.uint32))
+    z = jax.random.rademacher(key, (n, probes), dtype=rdtype).astype(W.dtype)
+    Ltz = jnp.matmul(L.conj().T, z, precision=_HI)          # (n, probes)
+    quad_f = jnp.real(jnp.sum(jnp.conj(Ltz) * Ltz, axis=0))  # z†LL†z
+    Wz = jnp.matmul(W, z, precision=_HI)
+    quad_w = jnp.real(jnp.sum(jnp.conj(z) * Wz, axis=0)) + lam * n
+    tiny = jnp.asarray(jnp.finfo(rdtype).tiny, rdtype)
+    rel = jnp.abs(quad_f - quad_w) / jnp.maximum(jnp.abs(quad_w), tiny)
+    return jnp.max(rel).astype(rdtype)
+
+
+def audit_factor(W: jax.Array, L: jax.Array, lam: jax.Array | float,
+                 *, iters: int = 2, probes: int = 2,
+                 step: jax.Array | int = 0) -> FactorAudit:
+    """One combined audit pass: condition estimate + drift probe.
+
+    Jittable with ``iters``/``probes`` static; total cost a handful of
+    O(n²) matvecs/solves — comparable to serving one request, so safe to
+    run every ``audit_every`` folds.
+    """
+    return FactorAudit(
+        condest=condest(W, L, lam, iters=iters),
+        residual=factor_residual_probe(W, L, lam, probes=probes, step=step),
+    )

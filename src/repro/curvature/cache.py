@@ -198,6 +198,30 @@ class CurvatureCache:
                 float(st.stats.last_residual))
         return x
 
+    def audit(self, S, damping, *, iters: int = 2, probes: int = 2,
+              step: int = 0) -> dict:
+        """Explicit numerical audit of the *cached* W at the given λ:
+        Hager/Higham condition estimate plus a Hutchinson residual probe
+        of the freshly-damped factor (``repro.curvature.audit``). Eager
+        and off the training step path — an ops/debug hook, priced like
+        one extra solve, mirrored into ``curvature.condest`` /
+        ``curvature.factor_residual`` when a registry is attached."""
+        from repro.curvature.audit import audit_factor
+        if isinstance(S, LazyBlockedScores):
+            S = S.materialize()
+        lam = jnp.asarray(damping, jnp.float32)
+        fac = chol_factorize(S, lam, W=self.state.W, mode=self.policy.mode,
+                             jitter=self.policy.jitter)
+        res = audit_factor(fac.W, fac.L, lam, iters=iters, probes=probes,
+                           step=step)
+        out = {"condest": float(res.condest),
+               "residual": float(res.residual)}
+        if self.registry is not None:
+            self.registry.gauge("curvature.condest").set(out["condest"])
+            self.registry.gauge(
+                "curvature.factor_residual").set(out["residual"])
+        return out
+
     @property
     def stats(self) -> CurvatureStats:
         return self.state.stats

@@ -47,13 +47,14 @@ On top of the rank-1 engine:
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
 __all__ = [
+    "DowndateAux",
     "chol_update",
     "chol_downdate",
     "chol_append",
@@ -63,6 +64,28 @@ __all__ = [
 ]
 
 _HI = jax.lax.Precision.HIGHEST
+
+
+class DowndateAux(NamedTuple):
+    """Breakdown diagnostics from one downdate, as jit-safe scalars.
+
+    ``margin`` is the worst *relative* positive-definiteness margin seen:
+    for the rotation sweep min_j (a_j² − ‖b_j‖²)/a_j² over every pivot
+    (the pre-clamp value the ``eps`` floor would otherwise hide); for the
+    composed method the smallest eigenvalue of Ĩ − P·P† (= 1 − σ_max(P)²),
+    which is the same quantity seen all at once. Healthy downdates sit
+    near 1; → 0 means the factor is approaching loss of positive
+    definiteness; ≤ 0 means the downdate was invalid (clamped in the
+    rotation sweep, NaN in the composed Cholesky).
+
+    ``min_pivot`` is the raw (unnormalised) minimum — the actual pivot²
+    that was fed to the sqrt — and ``clamped`` is True when it fell at or
+    below the clamp floor (rotations) or below zero (composed).
+    """
+
+    margin: jax.Array
+    min_pivot: jax.Array
+    clamped: jax.Array
 
 
 def _promote(A: jax.Array) -> jax.Array:
@@ -107,6 +130,81 @@ def _rank1(L: jax.Array, x: jax.Array, *, sign: int, eps: float) -> jax.Array:
     return L
 
 
+def _rank1_down_aux(L: jax.Array, x: jax.Array, *, eps: float
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``_rank1`` with sign=-1, also returning (min relative margin,
+    min raw pre-clamp pivot²) over the sweep's hyperbolic rotations."""
+    n = L.shape[0]
+    complex_ = jnp.issubdtype(L.dtype, jnp.complexfloating)
+    rdtype = jnp.zeros((), L.dtype).real.dtype
+    tiny = jnp.asarray(jnp.finfo(rdtype).tiny, rdtype)
+
+    def body(j, carry):
+        L, x, m_rel, m_raw = carry
+        col = jax.lax.dynamic_slice(L, (0, j), (n, 1))
+        a = jnp.real(jax.lax.dynamic_slice(col, (j, 0), (1, 1)))
+        b = jax.lax.dynamic_slice(x, (j, 0), (1, 1))
+        bb = jnp.real(b * jnp.conj(b)) if complex_ else b * b
+        pre = a * a - bb                       # pre-clamp pivot², (1, 1)
+        rel = (pre / jnp.maximum(a * a, tiny))[0, 0]
+        # comparison-based min: once a pivot breaks down the rest of the
+        # sweep turns NaN, and jnp.minimum would let that NaN erase the
+        # negative margin that explains it
+        m_rel = jnp.where(rel < m_rel, rel, m_rel)
+        m_raw = jnp.where(pre[0, 0] < m_raw, pre[0, 0], m_raw)
+        r = jnp.sqrt(jnp.maximum(pre, eps))
+        c, s = a / r, b / r
+        new_col = c * col - jnp.conj(s) * x
+        x_new = -s * col + c * x
+        return (jax.lax.dynamic_update_slice(L, new_col, (0, j)), x_new,
+                m_rel, m_raw)
+
+    inf = jnp.asarray(jnp.inf, rdtype)
+    L, _, m_rel, m_raw = jax.lax.fori_loop(
+        0, n, body, (L, x[:, None], inf, inf))
+    return L, m_rel, m_raw
+
+
+def _rank_k_down_aux(L: jax.Array, X: jax.Array, *, eps: float, method: str
+                     ) -> Tuple[jax.Array, DowndateAux]:
+    """Downdate with breakdown diagnostics (see ``DowndateAux``)."""
+    L = _promote(L)
+    X = _as_cols(X, L.shape[0])
+    dtype = jnp.promote_types(L.dtype, X.dtype)
+    L, X = L.astype(dtype), X.astype(dtype)
+    rdtype = jnp.zeros((), dtype).real.dtype
+    if method == "composed":
+        n, _ = X.shape
+        P = solve_triangular(L, X, lower=True)
+        # min eig of Ĩ − P·P† = 1 − λ_max(P†P): a k×k eig problem, so the
+        # margin costs O(n·k² + k³) on top of the downdate itself.
+        G = jnp.matmul(P.conj().T, P, precision=_HI)
+        G = (G + G.conj().T) / 2
+        lam_max = jnp.real(jnp.linalg.eigvalsh(G)[-1]).astype(rdtype)
+        margin = jnp.asarray(1.0, rdtype) - lam_max
+        M = jnp.eye(n, dtype=dtype) - jnp.matmul(
+            P, P.conj().T, precision=_HI)
+        Lp = jnp.matmul(L, jnp.linalg.cholesky(M), precision=_HI)
+        return Lp, DowndateAux(margin=margin, min_pivot=margin,
+                               clamped=margin <= 0.0)
+    if method != "rotations":
+        raise ValueError(f"method must be 'composed' or 'rotations', "
+                         f"got {method!r}")
+    rank1 = functools.partial(_rank1_down_aux, eps=eps)
+
+    def step(carry, x):
+        L, m_rel, m_raw = carry
+        Lp, rel, raw = rank1(L, x)
+        return (Lp, jnp.where(rel < m_rel, rel, m_rel),
+                jnp.where(raw < m_raw, raw, m_raw)), None
+
+    inf = jnp.asarray(jnp.inf, rdtype)
+    (Lout, m_rel, m_raw), _ = jax.lax.scan(step, (L, inf, inf), X.T)
+    Lout = Lout * jnp.tri(L.shape[0], dtype=rdtype)
+    return Lout, DowndateAux(margin=m_rel, min_pivot=m_raw,
+                             clamped=m_raw <= eps)
+
+
 def _rank_k(L: jax.Array, X: jax.Array, *, sign: int, eps: float,
             method: str) -> jax.Array:
     L = _promote(L)
@@ -136,7 +234,7 @@ def chol_update(L: jax.Array, X: jax.Array, *, eps: float = 1e-30,
 
 
 def chol_downdate(L: jax.Array, X: jax.Array, *, eps: float = 1e-30,
-                  method: str = "composed") -> jax.Array:
+                  method: str = "composed", return_aux: bool = False):
     """L' = chol(L·L† − X·X†).
 
     Requires L·L† − X·X† positive definite (guaranteed when downdating a
@@ -144,7 +242,14 @@ def chol_downdate(L: jax.Array, X: jax.Array, *, eps: float = 1e-30,
     still PSD and the +λĨ keeps it PD). In the rotation sweep,
     near-singular pivots are clamped at ``eps`` rather than NaN-ing,
     matching the jitter philosophy elsewhere.
+
+    With ``return_aux=True`` returns ``(L', DowndateAux)`` instead: the
+    worst positive-definiteness margin the sweep saw *before* the clamp —
+    the signal the clamp otherwise destroys — so callers can watch a
+    factor drift toward breakdown without paying for a refactorization.
     """
+    if return_aux:
+        return _rank_k_down_aux(L, X, eps=eps, method=method)
     return _rank_k(L, X, sign=-1, eps=eps, method=method)
 
 

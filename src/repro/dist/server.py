@@ -184,8 +184,8 @@ class AsyncSolveServer:
         no ``dist`` bound yet, the state's spec is bound automatically so
         folds and refreshes run through the sharded cholupdate.
       clock: latency timestamps (injectable for tests).
-      registry / tracer / profile: as on ``SolveServer`` — the async
-        server additionally splits queue wait at the *dispatch* boundary
+      registry / tracer / profile / health: as on ``SolveServer`` — the
+        async server additionally splits queue wait at the *dispatch* boundary
         (submit → dispatch vs dispatch → materialized), which is where
         the pipelining happens.
 
@@ -198,7 +198,7 @@ class AsyncSolveServer:
                  adaptation=None, policy: str = "cached",
                  monitor_drift: bool = True, jitter: float = 0.0,
                  tenants=None, clock=time.perf_counter,
-                 registry=None, tracer=None, profile=None,
+                 registry=None, tracer=None, profile=None, health=None,
                  metrics_window: int = 4096):
         if policy not in ("cached", "refactorize"):
             raise ValueError(f"policy must be 'cached' or 'refactorize', "
@@ -246,6 +246,14 @@ class AsyncSolveServer:
         if registry is not None and self.adaptation is not None \
                 and getattr(self.adaptation, "registry", None) is None:
             self.adaptation.registry = registry
+        # the HealthMonitor rides the adaptation: margins drain and the
+        # audit cadence ticks inside maybe_refresh, which the worker runs
+        # after every maintenance batch — the probe literally rides the
+        # async maintenance queue between microbatches
+        self.health = health
+        if health is not None and self.adaptation is not None \
+                and getattr(self.adaptation, "health", None) is None:
+            self.adaptation.health = health
         self.damping_state = None          # read by the worker's refresh
 
         self._solve_cache: Dict[tuple, Any] = {}

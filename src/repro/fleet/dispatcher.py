@@ -69,6 +69,7 @@ from repro.fleet.wire import Channel, WireError, get_blocks, listen, \
     put_blocks
 from repro.obs import Tracer
 from repro.obs import merge as merge_snapshots
+from repro.obs import merge_health
 from repro.serve.server import ServerMetrics, SolveResult
 
 __all__ = ["Dispatcher", "WorkerHandle", "launch_fleet", "ROUTES"]
@@ -107,6 +108,7 @@ class WorkerHandle:
         self.tenants: dict = {}     # last reported tenant packing stats
         self.oldest_age_s = 0.0     # last reported oldest queued request
         self.metrics: dict = {}     # last obs registry snapshot (pong)
+        self.health: dict = {}      # last health report (pong)
         self.n = None
 
     def __repr__(self):
@@ -260,8 +262,14 @@ class Dispatcher:
         if self.route == "least_loaded":
             self._pump(0.0)          # drain landed results: current counts
             alive = self._alive()    # the pump may have buried a worker
-            return min(alive, key=lambda w: (len(w.inflight), w.queued,
-                                             w.worker_id))
+            # numerically-critical replicas (heartbeat health verdict)
+            # take new traffic only when nothing healthier is left:
+            # their resident factor needs a refresh, not more load
+            healthy = [w for w in alive
+                       if w.health.get("verdict") != "critical"]
+            return min(healthy or alive,
+                       key=lambda w: (len(w.inflight), w.queued,
+                                      w.worker_id))
         self._rr += 1
         return alive[self._rr % len(alive)]
 
@@ -321,6 +329,7 @@ class Dispatcher:
             w.tenants = msg.meta.get("tenants", w.tenants) or {}
             w.oldest_age_s = float(msg.meta.get("oldest_age_s", 0.0))
             w.metrics = msg.meta.get("metrics", w.metrics) or {}
+            w.health = msg.meta.get("health", w.health) or {}
             w.pongs += 1
         elif msg.kind == "drained":
             self._drained.add(w.worker_id)
@@ -433,7 +442,8 @@ class Dispatcher:
                               "oldest_age_s": w.oldest_age_s,
                               "served": w.served,
                               "inflight": len(w.inflight),
-                              "tenants": w.tenants}
+                              "tenants": w.tenants,
+                              "verdict": w.health.get("verdict", "ok")}
                 for w in self._alive()}
 
     def fleet_metrics(self, *, refresh: bool = True,
@@ -450,6 +460,18 @@ class Dispatcher:
         if self.registry is not None:
             snaps.append(self.registry.snapshot())
         return merge_snapshots(snaps)
+
+    def fleet_health(self, *, refresh: bool = True,
+                     timeout: float = 10.0) -> dict:
+        """One merged health view for the whole fleet: the workers' health
+        reports (shipped in heartbeat pongs next to the metrics snapshot)
+        folded by ``obs.merge_health`` — worst member verdict wins, active
+        rules union at worst severity, recent events interleave by
+        timestamp. ``refresh=False`` merges the last-seen pongs without
+        pinging."""
+        if refresh:
+            self.heartbeat(timeout=timeout)
+        return merge_health(w.health for w in self.workers if w.alive)
 
     # -- checkpoint --------------------------------------------------------
     def checkpoint(self, ckpt_dir, step: int, *,

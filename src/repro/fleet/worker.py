@@ -62,6 +62,8 @@ class FleetWorker:
         self.tenants = None                   # TenantManager (init frame)
         self.registry = None                  # obs registry (init frame)
         self.tracer = None                    # obs tracer (init "trace")
+        self.health = None                    # HealthMonitor (with registry)
+        self.profile = None                   # ProfileHooks ("profile_dir")
         self._async = False
         self._uid_map: Dict[int, int] = {}    # inner uid -> dispatcher uid
         self._running = True
@@ -82,11 +84,19 @@ class FleetWorker:
         # heartbeat pongs — the dispatcher's fleet view); span tracing is
         # opt-in ("trace": True) since spans ride every result frame
         if meta.get("obs", True):
-            from repro.obs import MetricsRegistry
+            from repro.obs import HealthMonitor, MetricsRegistry
             self.registry = MetricsRegistry()
+            # per-process numerical-health verdicts; the report rides the
+            # pong next to the metrics snapshot (Dispatcher.fleet_health)
+            self.health = HealthMonitor(self.registry)
         if meta.get("trace", False):
             from repro.obs import Tracer
             self.tracer = Tracer()
+        if meta.get("profile_dir"):
+            from repro.obs import ProfileHooks
+            self.profile = ProfileHooks(os.path.join(
+                str(meta["profile_dir"]), f"worker{self.worker_id}"))
+            self.profile.start()
         if meta.get("tenant_rank"):
             from repro.tenants import TenantManager
             budget_mb = meta.get("tenant_budget_mb")
@@ -101,7 +111,9 @@ class FleetWorker:
             drift_tol=meta.get("drift_tol"),
             drift_frac=meta.get("drift_frac"),
             jitter=float(meta.get("jitter", 0.0)),
-            journal=self.journal)
+            journal=self.journal,
+            audit_every=int(meta.get("audit_every", 0)),
+            audit_probes=int(meta.get("audit_probes", 2)))
         if meta.get("mode", "inline") == "build":
             from repro import configs
             from repro.launch.mesh import make_mesh
@@ -123,7 +135,10 @@ class FleetWorker:
                 layout=meta.get("layout"), async_=self._async,
                 window_dtype=meta.get("window_dtype"),
                 seed=int(meta.get("seed", 0)),
-                registry=self.registry, tracer=self.tracer)
+                audit_every=adaptation.audit_every,
+                audit_probes=adaptation.audit_probes,
+                registry=self.registry, tracer=self.tracer,
+                profile=self.profile, health=self.health)
             # share the worker's journal so gossiped replays are recorded
             self.server.adaptation.journal = self.journal
             self.server.tenants = self.tenants
@@ -160,7 +175,8 @@ class FleetWorker:
                     state, batcher=batcher, adaptation=adaptation,
                     policy=meta.get("policy", "cached"), jitter=jitter,
                     tenants=self.tenants, registry=self.registry,
-                    tracer=self.tracer)
+                    tracer=self.tracer, profile=self.profile,
+                    health=self.health)
             else:
                 self.server = SolveServer(
                     init_serve_state(S0, damping, jitter=jitter,
@@ -168,7 +184,8 @@ class FleetWorker:
                     batcher=batcher, adaptation=adaptation,
                     policy=meta.get("policy", "cached"), jitter=jitter,
                     tenants=self.tenants, registry=self.registry,
-                    tracer=self.tracer)
+                    tracer=self.tracer, profile=self.profile,
+                    health=self.health)
             if meta.get("restore_dir"):
                 restored, _ = restore_serve_state(
                     meta["restore_dir"], int(meta["restore_step"]),
@@ -226,6 +243,10 @@ class FleetWorker:
             # the mergeable snapshot rides the pong: the dispatcher folds
             # every worker's into one fleet view (Dispatcher.fleet_metrics)
             meta["metrics"] = self.registry.snapshot()
+        if self.health is not None:
+            # verdict + active rules + recent events: the dispatcher's
+            # fleet_health() merge and critical-skip routing feed on this
+            meta["health"] = self.health.report()
         self.chan.send("pong", meta)
 
     def _handle_ckpt(self, msg: Message) -> None:
@@ -327,6 +348,8 @@ class FleetWorker:
                     self.server.shutdown(drain=True)
         except BaseException:
             pass
+        if self.profile is not None:
+            self.profile.stop()
         self.chan.close()
 
     def _sigterm(self, signum, frame) -> None:

@@ -215,7 +215,8 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                  jitter: float = 0.0, score_chunk=None, policy: str = "cached",
                  layout=None, async_: bool = False, oversize: str = "split",
                  window_dtype=None, tenant_rank=None, tenant_budget_mb=None,
-                 seed: int = 0, registry=None, tracer=None, profile=None):
+                 seed: int = 0, audit_every: int = 0, audit_probes: int = 2,
+                 registry=None, tracer=None, profile=None, health=None):
     """Config → mesh → model → resident curvature window → server.
 
     The serving twin of ``build_trainer``: builds the jitted serve steps
@@ -245,6 +246,9 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
     ``registry`` / ``tracer`` / ``profile`` (``repro.obs``): thread the
     observability fabric through the server — mergeable metrics, per-
     request spans, optional ``jax.profiler`` capture around the solve.
+    ``health`` (``repro.obs.HealthMonitor``) attaches the numerical-health
+    rule engine; ``audit_every`` runs the ``curvature.audit`` condest +
+    residual probe every that many maintenance passes (0: off).
     """
     from repro.serve import (OnlineAdaptation, SolveServer,
                              TokenBudgetBatcher, init_serve_state)
@@ -253,7 +257,8 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                                      score_chunk=score_chunk, seed=seed)
     adaptation = OnlineAdaptation(refresh_every=refresh_every,
                                   drift_tol=drift_tol, drift_frac=drift_frac,
-                                  jitter=jitter)
+                                  jitter=jitter, audit_every=audit_every,
+                                  audit_probes=audit_probes)
     batcher = TokenBudgetBatcher(max_tokens=max_tokens,
                                  max_requests=max_requests,
                                  oversize=oversize)
@@ -282,14 +287,14 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                                   adaptation=adaptation, policy=policy,
                                   jitter=jitter, tenants=tenants,
                                   registry=registry, tracer=tracer,
-                                  profile=profile)
+                                  profile=profile, health=health)
     else:
         server = SolveServer(init_serve_state(S0, damping, jitter=jitter,
                                               window_dtype=window_dtype),
                              batcher=batcher, adaptation=adaptation,
                              policy=policy, jitter=jitter, tenants=tenants,
                              registry=registry, tracer=tracer,
-                             profile=profile)
+                             profile=profile, health=health)
     return server, handles
 
 
@@ -301,7 +306,8 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
                 score_chunk=None, policy: str = "cached",
                 async_workers: bool = False, worker_layout=None,
                 window_dtype=None, tenant_rank=None, tenant_budget_mb=None,
-                seed: int = 0, trace: bool = False, registry=None):
+                seed: int = 0, trace: bool = False, registry=None,
+                audit_every: int = 0, profile_dir=None):
     """Config → model → seeded window → N-process serving fleet.
 
     The fleet twin of ``build_server``: the model (score-grad pass,
@@ -334,6 +340,12 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
     trace. ``registry``: dispatcher-side ``repro.obs.MetricsRegistry``
     (routing latency under the ``fleet.*`` prefix); worker registries are
     always on and merge via ``dispatcher.fleet_metrics()``.
+
+    ``audit_every``: each worker runs the ``curvature.audit`` condest +
+    residual probe every that many maintenance passes (0: off); per-
+    worker health verdicts ride heartbeat pongs and merge via
+    ``dispatcher.fleet_health()``. ``profile_dir``: each worker captures
+    a ``jax.profiler`` trace into ``<dir>/worker<i>/``.
     """
     from repro.fleet import launch_fleet
     from repro.fleet.wire import put_blocks
@@ -350,7 +362,9 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
             else str(jnp.dtype(window_dtype)),
             "tenant_rank": None if tenant_rank is None else int(tenant_rank),
             "tenant_budget_mb": tenant_budget_mb,
-            "obs": True, "trace": bool(trace)}
+            "obs": True, "trace": bool(trace),
+            "audit_every": int(audit_every),
+            "profile_dir": None if profile_dir is None else str(profile_dir)}
     arrays = {}
     from repro.core.operator import is_blocked
     put_blocks(arrays, meta, "S0",

@@ -4,12 +4,22 @@
   histograms whose snapshots merge across processes (fleet view).
 - ``trace``: per-request span tracing with cross-process trace ids and
   Chrome-trace/Perfetto JSON export.
-- ``export``: stdlib HTTP endpoint (Prometheus text + JSON) and
-  snapshot files next to checkpoints.
+- ``export``: stdlib HTTP endpoint (Prometheus text + JSON + /health)
+  and snapshot files next to checkpoints.
+- ``health``: rule engine over registry series — structured
+  ``HealthEvent`` log + per-process ``ok``/``degraded``/``critical``
+  verdicts that merge across a fleet.
 - ``profile``: optional ``jax.profiler`` hooks around the solve.
 """
 
 from .export import prometheus_text, start_metrics_server, write_snapshot
+from .health import (
+    HealthEvent,
+    HealthMonitor,
+    HealthRule,
+    default_rules,
+    merge_health,
+)
 from .metrics import (
     Counter,
     Gauge,
@@ -26,13 +36,18 @@ from .trace import Span, Tracer
 __all__ = [
     "Counter",
     "Gauge",
+    "HealthEvent",
+    "HealthMonitor",
+    "HealthRule",
     "Histogram",
     "MetricsRegistry",
     "ProfileHooks",
     "Span",
     "Tracer",
     "default_buckets",
+    "default_rules",
     "merge",
+    "merge_health",
     "prometheus_text",
     "quantile",
     "registry",

@@ -3,9 +3,11 @@
 ``start_metrics_server`` serves the live registry at ``/metrics``
 (Prometheus text exposition) and ``/metrics.json`` (the raw snapshot)
 from a daemon thread — no dependencies beyond the stdlib, safe to run
-beside the serving loop.  ``write_snapshot`` drops the same JSON next
-to checkpoints so a run leaves a scrapeable record even without the
-endpoint.
+beside the serving loop.  With a ``health`` callable it also serves
+``/health``: the JSON verdict + recent-event report produced by
+``obs.health.HealthMonitor`` (fleet-merged when the callable merges).
+``write_snapshot`` drops the same JSON next to checkpoints so a run
+leaves a scrapeable record even without the endpoint.
 """
 
 from __future__ import annotations
@@ -52,10 +54,23 @@ def prometheus_text(snapshot: dict) -> str:
 class _Handler(BaseHTTPRequestHandler):
     registry: MetricsRegistry  # set on the subclass by start_metrics_server
     extra_snapshots = None  # optional callable -> list of foreign snapshots
+    health = None  # optional callable -> wire-safe health report dict
 
     def do_GET(self) -> None:  # noqa: N802 (stdlib API)
         from .metrics import merge
 
+        if self.path.startswith("/health"):
+            if self.health is None:
+                self.send_response(404)
+                self.end_headers()
+                return
+            body = json.dumps(type(self).health()).encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+            return
         snap = self.registry.snapshot()
         if self.extra_snapshots is not None:
             snap = merge([snap, *type(self).extra_snapshots()])
@@ -84,6 +99,7 @@ def start_metrics_server(
     port: int = 0,
     host: str = "127.0.0.1",
     extra_snapshots=None,
+    health=None,
 ) -> tuple[ThreadingHTTPServer, int]:
     """Serve ``registry`` over HTTP from a daemon thread.
 
@@ -91,12 +107,17 @@ def start_metrics_server(
     ``extra_snapshots`` is an optional zero-arg callable returning
     foreign snapshots (e.g. the dispatcher's last worker pongs) merged
     into every response, so one endpoint exposes the whole fleet.
+    ``health`` is an optional zero-arg callable returning a wire-safe
+    health report (e.g. ``HealthMonitor.report`` or the dispatcher's
+    fleet-merged view), served as JSON at ``/health``.
     """
     handler = type(
         "_BoundHandler",
         (_Handler,),
-        {"registry": registry, "extra_snapshots": staticmethod(extra_snapshots)
-         if extra_snapshots is not None else None},
+        {"registry": registry,
+         "extra_snapshots": staticmethod(extra_snapshots)
+         if extra_snapshots is not None else None,
+         "health": staticmethod(health) if health is not None else None},
     )
     srv = ThreadingHTTPServer((host, port), handler)
     srv.daemon_threads = True

@@ -17,9 +17,11 @@ Merge semantics by instrument:
   so merged percentiles are exact at bucket resolution.
 - gauges: summed by default (occupancy/depth/bytes add across
   workers), except names whose last path segment ends in one of
-  ``_MAX_GAUGE_SUFFIXES`` (ages, residuals, timestamps) which take the
-  max — "oldest request age" across a fleet is the max of the
-  per-worker oldest ages, not their sum.
+  ``_MAX_GAUGE_SUFFIXES`` (ages, residuals, timestamps, condition
+  estimates, verdicts) which take the max — "oldest request age" across
+  a fleet is the max of the per-worker oldest ages, not their sum — and
+  ``_MIN_GAUGE_SUFFIXES`` (breakdown margins) which take the min: the
+  fleet's margin is its weakest member's.
 """
 
 from __future__ import annotations
@@ -159,13 +161,24 @@ class MetricsRegistry:
 
 
 # Gauge names whose last segment ends with one of these merge via max:
-# ages/residuals/timestamps answer "worst anywhere", not "total".
-_MAX_GAUGE_SUFFIXES = ("_age", "_age_s", "_residual", "_ts")
+# ages/residuals/timestamps/condition-numbers/verdicts answer "worst
+# anywhere", not "total".
+_MAX_GAUGE_SUFFIXES = ("_age", "_age_s", "_residual", "_ts", "condest",
+                       "verdict")
+
+# ... and margins merge via min: the fleet's breakdown margin is the
+# *smallest* per-worker margin, not the sum or the best.
+_MIN_GAUGE_SUFFIXES = ("_margin",)
 
 
 def _gauge_merges_max(name: str) -> bool:
     leaf = name.rsplit(".", 1)[-1]
     return leaf.endswith(_MAX_GAUGE_SUFFIXES)
+
+
+def _gauge_merges_min(name: str) -> bool:
+    leaf = name.rsplit(".", 1)[-1]
+    return leaf.endswith(_MIN_GAUGE_SUFFIXES)
 
 
 def merge(snapshots: Iterable[dict]) -> dict:
@@ -180,7 +193,12 @@ def merge(snapshots: Iterable[dict]) -> dict:
             counters[k] = counters.get(k, 0) + v
         for k, v in snap.get("gauges", {}).items():
             if k in gauges:
-                gauges[k] = max(gauges[k], v) if _gauge_merges_max(k) else gauges[k] + v
+                if _gauge_merges_max(k):
+                    gauges[k] = max(gauges[k], v)
+                elif _gauge_merges_min(k):
+                    gauges[k] = min(gauges[k], v)
+                else:
+                    gauges[k] = gauges[k] + v
             else:
                 gauges[k] = v
         for k, h in snap.get("histograms", {}).items():
@@ -206,19 +224,24 @@ def merge(snapshots: Iterable[dict]) -> dict:
 def quantile(hist: dict, q: float) -> float:
     """q-quantile from a histogram snapshot (upper bound of its bucket).
 
-    Overflow samples report the last finite bound — the histogram can't
-    say more than "above everything it can resolve".
+    An empty histogram has no quantiles — returns ``nan`` (0.0 used to
+    masquerade as a real observation). A quantile landing in the
+    overflow bucket returns ``inf``: the histogram only knows the sample
+    was above everything it can resolve, and reporting the top finite
+    bound silently *understated* tail latency.
     """
     total = hist["count"]
     if total <= 0:
-        return 0.0
+        return float("nan")
     rank = q * total
     acc = 0.0
     for i, c in enumerate(hist["counts"]):
         acc += c
         if acc >= rank and c > 0:
-            return hist["bounds"][min(i, len(hist["bounds"]) - 1)]
-    return hist["bounds"][-1]
+            if i >= len(hist["bounds"]):
+                return float("inf")
+            return hist["bounds"][i]
+    return float("inf")
 
 
 _default = MetricsRegistry()

@@ -86,11 +86,14 @@ def pad_to_window_cols(S, values, *, axis: int, cast: Optional[bool] = None):
     return padded[0]
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def _fold_window(S, W, L, slot, rows, *, mode):
+@functools.partial(jax.jit, static_argnames=("mode", "with_aux"))
+def _fold_window(S, W, L, slot, rows, *, mode, with_aux=False):
     """One FIFO fold: rows (k, m) dense or tuple of per-block (k, m_b)
     pieces replace the k oldest window samples; returns (S', W', L',
-    slot'). Pure and jitted — the fold is request-path-adjacent work."""
+    slot') — plus the downdate's ``DowndateAux`` when ``with_aux`` (the
+    breakdown margin stays an unmaterialized device scalar until a host
+    sync site reads it). Pure and jitted — the fold is
+    request-path-adjacent work."""
     n = W.shape[0]
     blocked = isinstance(S, BlockedScores)
     row_blocks = tuple(rows) if isinstance(rows, (tuple, list)) else (rows,)
@@ -110,11 +113,17 @@ def _fold_window(S, W, L, slot, rows, *, mode):
     cols = cols.at[idx, :].set(corner)
 
     X, Y, Wp = replace_factors(W, cols, idx)
-    Lp = chol_downdate(chol_update(L, X), Y)
+    aux = None
+    if with_aux:
+        Lp, aux = chol_downdate(chol_update(L, X), Y, return_aux=True)
+    else:
+        Lp = chol_downdate(chol_update(L, X), Y)
     new_blocks = tuple(b.at[idx, :].set(r.astype(b.dtype))
                        for b, r in zip(S_blocks, row_blocks))
     Sp = BlockedScores(new_blocks, names=S.names) if blocked \
         else new_blocks[0]
+    if with_aux:
+        return Sp, Wp, Lp, (slot + k) % n, aux
     return Sp, Wp, Lp, (slot + k) % n
 
 
@@ -131,7 +140,9 @@ class OnlineAdaptation:
                  drift_tol: Optional[float] = None,
                  drift_frac: Optional[float] = 0.25,
                  jitter: float = 0.0, dist=None, journal=None,
-                 on_fold=None, registry=None):
+                 on_fold=None, registry=None, health=None,
+                 audit_every: int = 0, audit_probes: int = 2,
+                 condest_iters: int = 2):
         if refresh_every < 1:
             raise ValueError("refresh_every must be >= 1")
         self.refresh_every = int(refresh_every)
@@ -139,6 +150,24 @@ class OnlineAdaptation:
         # window-bytes health series (all python-side — no device syncs
         # beyond the ones the staleness policy already does)
         self.registry = registry
+        # optional repro.obs.HealthMonitor: receives fold-row rejection
+        # events and is re-evaluated at every maybe_refresh boundary
+        self.health = health
+        # factor audit cadence (condest + Hutchinson residual probe),
+        # counted in maybe_refresh calls (one per microbatch boundary);
+        # 0 disables. The audit and the downdate margins both materialize
+        # at the maybe_refresh host sync the staleness policy already
+        # pays for — no new device round trips on the request path.
+        self.audit_every = int(audit_every)
+        self.audit_probes = int(audit_probes)
+        self.condest_iters = int(condest_iters)
+        self._audit_tick = 0
+        self._audit_step = 0
+        self._audit_fn = None
+        # unmaterialized DowndateAux scalars from recent folds, drained
+        # (host-read) at the next maybe_refresh; bounded so a caller that
+        # never reaches maybe_refresh can't grow it without limit
+        self._pending_aux: list = []
         self.drift_tol = None if drift_tol is None else float(drift_tol)
         self.drift_frac = None if drift_frac is None else float(drift_frac)
         self.jitter = float(jitter)
@@ -219,10 +248,35 @@ class OnlineAdaptation:
         # window storage dtype here, so journal/gossip, the cols pass and
         # the FIFO write all see the same stored values
         rows_in = pad_to_window_cols(state.S, rows_in, axis=1)
+        if not self._rows_finite(rows_in):
+            # a single NaN/Inf row would poison W, L and the FIFO slab at
+            # once — reject the fold (deterministic everywhere, so gossip
+            # replicas reject the same event) and surface it instead
+            if self.registry is not None:
+                self.registry.counter("serve.fold.rejected_nonfinite").inc()
+            if self.health is not None:
+                import time as _time
+
+                from repro.obs.health import HealthEvent
+                self.health.record_event(HealthEvent(
+                    ts=_time.time(), severity="degraded",
+                    rule="nonfinite_folds",
+                    series="serve.fold.rejected_nonfinite",
+                    value=1.0, bound=0.0,
+                    recommendation="fold rows with NaN/Inf were rejected: "
+                                   "check the score producer upstream"))
+            return state
+        track_aux = self.registry is not None and self.dist is None
         if self.dist is not None:
             fold = self._dist_fn("fold", serve_mode(state))
             Sp, Wp, Lp, slot = fold(state.S, state.W, state.L, state.slot,
                                     rows_in)
+        elif track_aux:
+            Sp, Wp, Lp, slot, aux = _fold_window(
+                state.S, state.W, state.L, state.slot, rows_in,
+                mode=serve_mode(state), with_aux=True)
+            if len(self._pending_aux) < 1024:
+                self._pending_aux.append(aux)
         else:
             Sp, Wp, Lp, slot = _fold_window(
                 state.S, state.W, state.L, state.slot, rows_in,
@@ -244,6 +298,18 @@ class OnlineAdaptation:
                                    rows=rows_in)
                 self.on_fold(ev)
         return state._replace(S=Sp, W=Wp, L=Lp, slot=slot, stats=stats)
+
+    @staticmethod
+    def _rows_finite(rows_in) -> bool:
+        """One fused isfinite reduction over the (already device-resident)
+        fold rows. The host read rides the same boundary as the journal's
+        cursor read — a scalar pull, not a data transfer."""
+        blocks = tuple(rows_in) if isinstance(rows_in, (tuple, list)) \
+            else (rows_in,)
+        ok = jnp.asarray(True)
+        for b in blocks:
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(b)))
+        return bool(ok)
 
     def _window_gauges(self, S) -> None:
         """Window storage by dtype — shape/dtype metadata only, no device
@@ -286,24 +352,99 @@ class OnlineAdaptation:
         r = float(state.stats.last_residual)
         age_due = int(state.age) >= self.refresh_every
         drift_due = tol is not None and r >= 0.0 and r > float(tol)
-        if not (force or age_due or drift_due):
-            return state, False
-        if record and self.journal is not None:
-            self.journal.append_refresh()
-        if self.dist is not None:
-            W, L = self._dist_fn("refresh", serve_mode(state))(
-                state.S, state.lam0)
-        else:
-            fac = chol_factorize(state.S, state.lam0, mode=serve_mode(state),
-                                 jitter=self.jitter)
-            W, L = fac.W, fac.L
-        stats = state.stats._replace(
-            refreshes=state.stats.refreshes + 1,
-            last_residual=-jnp.ones((), jnp.float32))
+        refreshed = force or age_due or drift_due
+        if refreshed:
+            if record and self.journal is not None:
+                self.journal.append_refresh()
+            if self.dist is not None:
+                W, L = self._dist_fn("refresh", serve_mode(state))(
+                    state.S, state.lam0)
+            else:
+                fac = chol_factorize(state.S, state.lam0,
+                                     mode=serve_mode(state),
+                                     jitter=self.jitter)
+                W, L = fac.W, fac.L
+            stats = state.stats._replace(
+                refreshes=state.stats.refreshes + 1,
+                last_residual=-jnp.ones((), jnp.float32))
+            if self.registry is not None:
+                self.registry.counter("curvature.refreshes").inc()
+                reason = "force" if force else ("age" if age_due else "drift")
+                self.registry.counter(f"curvature.refresh_{reason}").inc()
+            state = state._replace(W=W, L=L,
+                                   age=jnp.zeros((), jnp.int32),
+                                   stats=stats)
+        # we are at the maintenance host-sync boundary anyway — drain the
+        # pending downdate margins, run the periodic factor audit, and
+        # let the health rules look at the fresh numbers
+        self._observe_health(state)
+        return state, refreshed
+
+    def _observe_health(self, state: ServeState) -> None:
+        """Materialize pending downdate margins + run the audit cadence.
+
+        Called from ``maybe_refresh`` (already a host-sync site). The
+        fleet-facing gauges: ``curvature.downdate_margin`` (worst margin
+        since last drain — min-merged across workers),
+        ``curvature.downdate_clamped`` (count of clamped sweeps),
+        ``curvature.condest`` and ``curvature.factor_residual`` from the
+        periodic audit.
+        """
+        if self.registry is None:
+            self._pending_aux.clear()
+            return
+        if self._pending_aux:
+            # drain only folds whose device computation already finished:
+            # blocking here would serialize the in-flight fold chain
+            # against the next microbatch's host-side batching. The folds
+            # execute in order, so stop at the first unready one; a
+            # backlog past 64 force-drains, bounding the gauge's lag.
+            pending = self._pending_aux
+            split = len(pending)
+            if split <= 64:
+                for i, a in enumerate(pending):
+                    ready = getattr(a.margin, "is_ready", None)
+                    if ready is not None and not ready():
+                        split = i
+                        break
+            done, self._pending_aux = pending[:split], pending[split:]
+            margins = [float(a.margin) for a in done]
+            clamped = sum(bool(a.clamped) for a in done)
+            vals = [v for v in margins if v == v]      # NaN-proof min
+            if vals:
+                self.registry.gauge(
+                    "curvature.downdate_margin").set(min(vals))
+            if clamped:
+                self.registry.counter(
+                    "curvature.downdate_clamped").inc(clamped)
+        if self.audit_every > 0:
+            self._audit_tick += 1
+            if self._audit_tick >= self.audit_every:
+                self._audit_tick = 0
+                self.audit(state)
+        if self.health is not None:
+            self.health.evaluate()
+
+    def audit(self, state: ServeState) -> dict:
+        """One explicit factor audit: Hager/Higham 1-norm condition
+        estimate of W + λĨ plus a Hutchinson probe of the factor
+        residual — a handful of O(n²) solves/matvecs against the
+        *resident* W and L, no refactorization. Mirrors the results into
+        ``curvature.condest`` / ``curvature.factor_residual`` and
+        returns them as floats.
+        """
+        from repro.curvature.audit import audit_factor
+        if self._audit_fn is None:
+            self._audit_fn = jax.jit(functools.partial(
+                audit_factor, iters=self.condest_iters,
+                probes=self.audit_probes))
+        self._audit_step += 1
+        res = self._audit_fn(state.W, state.L, state.lam0,
+                             step=self._audit_step)
+        out = {"condest": float(res.condest),
+               "residual": float(res.residual)}
         if self.registry is not None:
-            self.registry.counter("curvature.refreshes").inc()
-            reason = "force" if force else ("age" if age_due else "drift")
-            self.registry.counter(f"curvature.refresh_{reason}").inc()
-        return state._replace(W=W, L=L,
-                              age=jnp.zeros((), jnp.int32),
-                              stats=stats), True
+            self.registry.gauge("curvature.condest").set(out["condest"])
+            self.registry.gauge(
+                "curvature.factor_residual").set(out["residual"])
+        return out

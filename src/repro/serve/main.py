@@ -133,7 +133,16 @@ def serve_main(argv=None):
                          "from every worker stitch into one file)")
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of the coalesced "
-                         "solves into DIR (in-process server only)")
+                         "solves into DIR (--fleet: each worker writes "
+                         "its own trace under DIR/worker<i>/)")
+    ap.add_argument("--audit-every", type=int, default=4, metavar="K",
+                    help="run the curvature.audit condition estimate + "
+                         "Hutchinson factor-residual probe every K "
+                         "maintenance passes (0: off)")
+    ap.add_argument("--health-port", type=int, default=None, metavar="PORT",
+                    help="bind an extra HTTP endpoint serving the "
+                         "numerical-health report at /health (0: ephemeral "
+                         "port). /health also rides --metrics-port.")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -152,8 +161,10 @@ def serve_main(argv=None):
     layout = None if args.mesh == "replicated" else args.mesh
     async_ = args.async_ or layout is not None
 
-    from repro.obs import MetricsRegistry, ProfileHooks, Tracer
+    from repro.obs import HealthMonitor, MetricsRegistry, ProfileHooks, \
+        Tracer
     registry = MetricsRegistry()
+    health = HealthMonitor(registry)
     tracer = Tracer() if args.trace_out else None
     profile = ProfileHooks(args.profile_dir) if args.profile_dir else None
     if profile is not None:
@@ -168,8 +179,9 @@ def serve_main(argv=None):
         layout=layout, async_=async_, window_dtype=args.window_dtype,
         tenant_rank=args.tenant_rank if args.tenants else None,
         tenant_budget_mb=args.tenant_budget_mb, seed=args.seed,
-        registry=registry, tracer=tracer, profile=profile)
-    endpoint_port = _start_endpoint(args, registry)
+        audit_every=args.audit_every,
+        registry=registry, tracer=tracer, profile=profile, health=health)
+    endpoint_port = _start_endpoint(args, registry, health=health.report)
     kind = f"async {layout or 'replicated'}" if async_ else "eager"
     print(f"resident window factorized: n={args.window} "
           f"m={server.state.S.shape[1]} λ0={args.damping} [{kind}] "
@@ -242,6 +254,9 @@ def serve_main(argv=None):
     print(f"served {s['served']} requests: "
           f"p50 {s['p50_ms']:.1f} ms  p99 {s['p99_ms']:.1f} ms  "
           f"{s['rps']:.1f} req/s  {s['tokens_per_s']:.0f} tok/s")
+    rep = health.report()
+    print(f"health: {rep['verdict']} "
+          f"(active: {sorted(rep['active']) or 'none'})")
     print(f"window: adapted {int(st.adapted)} rows, "
           f"{int(st.refreshes)} full refreshes over "
           f"{int(st.microbatches)} microbatches "
@@ -266,24 +281,35 @@ def serve_main(argv=None):
     if profile is not None:
         profile.stop()
     _finish_obs(args, registry.snapshot(), tracer=tracer,
-                port=endpoint_port)
+                port=endpoint_port, health=True)
     if async_:
         server.shutdown()
     return server, losses
 
 
-def _start_endpoint(args, registry, extra_snapshots=None):
-    """``--metrics-port``: bind the stdlib HTTP exposition endpoint."""
-    if args.metrics_port is None:
-        return None
-    from repro.obs import start_metrics_server
-    _, port = start_metrics_server(registry, port=args.metrics_port,
-                                   extra_snapshots=extra_snapshots)
-    print(f"metrics endpoint: http://127.0.0.1:{port}/metrics", flush=True)
+def _start_endpoint(args, registry, extra_snapshots=None, health=None):
+    """``--metrics-port`` / ``--health-port``: bind the stdlib HTTP
+    exposition endpoint(s); ``health`` (a zero-arg callable returning the
+    health report dict) is served at ``/health`` on each."""
+    port = None
+    if args.metrics_port is not None:
+        from repro.obs import start_metrics_server
+        _, port = start_metrics_server(registry, port=args.metrics_port,
+                                       extra_snapshots=extra_snapshots,
+                                       health=health)
+        print(f"metrics endpoint: http://127.0.0.1:{port}/metrics",
+              flush=True)
+    if args.health_port is not None and args.health_port != port:
+        from repro.obs import start_metrics_server
+        _, hport = start_metrics_server(registry, port=args.health_port,
+                                        extra_snapshots=extra_snapshots,
+                                        health=health)
+        print(f"health endpoint: http://127.0.0.1:{hport}/health",
+              flush=True)
     return port
 
 
-def _finish_obs(args, snapshot, *, tracer=None, port=None):
+def _finish_obs(args, snapshot, *, tracer=None, port=None, health=False):
     """Exit-time observability: final snapshot file, Chrome-trace export,
     and a self-scrape of the live endpoint (proves the exposition path
     end to end — CI asserts on the printed series count)."""
@@ -301,6 +327,14 @@ def _finish_obs(args, snapshot, *, tracer=None, port=None):
         series = [ln for ln in body.splitlines()
                   if ln and not ln.startswith("#")]
         print(f"metrics scrape: {len(series)} series from :{port}")
+        if health:
+            # self-scrape of the live /health route: proves the verdict
+            # path end to end — CI asserts on this line
+            import json
+            rep = json.loads(urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/health", timeout=10).read())
+            print(f"health scrape: verdict={rep['verdict']} "
+                  f"active={sorted(rep.get('active', {})) or 'none'}")
 
 
 def _serve_fleet(args, cfg, mesh):
@@ -327,13 +361,17 @@ def _serve_fleet(args, cfg, mesh):
         worker_layout=worker_layout, window_dtype=args.window_dtype,
         tenant_rank=args.tenant_rank if args.tenants else None,
         tenant_budget_mb=args.tenant_budget_mb, seed=args.seed,
-        trace=bool(args.trace_out), registry=registry)
+        trace=bool(args.trace_out), registry=registry,
+        audit_every=args.audit_every, profile_dir=args.profile_dir)
     # the endpoint folds the workers' last-pong snapshots into every
-    # response — one scrape sees the whole fleet
+    # response — one scrape sees the whole fleet. /health merges the
+    # last-seen pong verdicts (refresh=False: the HTTP thread must not
+    # pump the dispatcher's channels under the serving loop)
     endpoint_port = _start_endpoint(
         args, registry,
         extra_snapshots=lambda: [w.metrics for w in dispatcher.workers
-                                 if w.metrics])
+                                 if w.metrics],
+        health=lambda: dispatcher.fleet_health(refresh=False))
     print(f"fleet up: {args.fleet} workers, route={args.route}, "
           f"reconcile={not args.no_reconcile}, n={args.window} "
           f"({(time.perf_counter() - t0) * 1e3:.0f} ms)", flush=True)
@@ -396,6 +434,9 @@ def _serve_fleet(args, cfg, mesh):
         print(f"served {s['served']} requests: "
               f"p50 {s['p50_ms']:.1f} ms  p99 {s['p99_ms']:.1f} ms  "
               f"{s['rps']:.1f} req/s")
+        fh = dispatcher.fleet_health()
+        print(f"fleet health: {fh['verdict']} ({fh['members']} members, "
+              f"active: {sorted(fh['active']) or 'none'})")
         for wid, rep in sorted(dispatcher.heartbeat().items()):
             line = (f"  worker {wid}: served {rep['served']}, "
                     f"applied {rep['applied']} fold events")
@@ -411,7 +452,8 @@ def _serve_fleet(args, cfg, mesh):
             print(f"fleet checkpoint (per-worker ServeState + manifest) "
                   f"-> {path}")
         _finish_obs(args, dispatcher.fleet_metrics(),
-                    tracer=dispatcher.tracer, port=endpoint_port)
+                    tracer=dispatcher.tracer, port=endpoint_port,
+                    health=True)
     finally:
         dispatcher.shutdown()
     return dispatcher, losses

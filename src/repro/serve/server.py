@@ -190,6 +190,9 @@ class SolveServer:
         fold spans, trace ids riding ``submit(trace=)``.
       profile: optional ``repro.obs.ProfileHooks`` — ``jax.profiler``
         step annotation around the coalesced solve.
+      health: optional ``repro.obs.HealthMonitor`` — propagated to the
+        adaptation (margin/audit events) and re-evaluated per flush, so
+        the verdict tracks the freshest numerical-health gauges.
     """
 
     def __init__(self, state: ServeState, *,
@@ -198,7 +201,7 @@ class SolveServer:
                  policy: str = "cached", monitor_drift: bool = True,
                  jitter: float = 0.0, fused: bool = True,
                  tenants=None, clock=time.perf_counter,
-                 registry=None, tracer=None, profile=None,
+                 registry=None, tracer=None, profile=None, health=None,
                  metrics_window: int = 4096):
         if policy not in ("cached", "refactorize"):
             raise ValueError(f"policy must be 'cached' or 'refactorize', "
@@ -215,6 +218,7 @@ class SolveServer:
         self.registry = registry
         self.tracer = tracer
         self.profile = profile
+        self.health = health
         self.metrics = ServerMetrics(window=metrics_window,
                                      registry=registry, prefix="serve")
         # propagate the registry to attached components that predate it
@@ -224,6 +228,9 @@ class SolveServer:
         if registry is not None and adaptation is not None \
                 and getattr(adaptation, "registry", None) is None:
             adaptation.registry = registry
+        if health is not None and adaptation is not None \
+                and getattr(adaptation, "health", None) is None:
+            adaptation.health = health
 
     # -- request intake ----------------------------------------------------
     def submit(self, v, *, damping: Optional[float] = None, tokens: int = 1,
@@ -297,6 +304,8 @@ class SolveServer:
                                     ts_us=time.time() * 1e6, dur_us=0.0)
             if self.registry is not None:
                 self._health_gauges()
+        if self.health is not None:
+            self.health.evaluate()
         return out
 
     def _health_gauges(self) -> None:

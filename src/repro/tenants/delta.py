@@ -155,8 +155,7 @@ def delta_fold(delta: TenantDelta, Q, *, signs=None
                           age=delta.age + 1), slots
 
 
-def delta_correction(delta: TenantDelta, lam
-                     ) -> Tuple[jax.Array, jax.Array]:
+def delta_correction(delta: TenantDelta, lam, *, return_cond: bool = False):
     """The signed factor correction at damping ``lam``: (up, down) with
 
         (W + λĨ) + up·up† − down·down†  =  W + λ·M⁻¹,
@@ -164,7 +163,12 @@ def delta_correction(delta: TenantDelta, lam
     i.e. ``L_t = chol_downdate(chol_update(L, up), down)``. Derived from
     the r×r core  diag(s)⁻¹ + P†P  (empty slots pinned at a huge positive
     eigenvalue, so their columns scale to exactly zero). All-(+1) deltas
-    produce a pure downdate — adding tenant curvature shrinks λM⁻¹."""
+    produce a pure downdate — adding tenant curvature shrinks λM⁻¹.
+
+    ``return_cond=True`` appends the conditioning of the *live* core
+    spectrum (max |ev| / min |ev| over genuine delta directions, 1.0 for
+    an empty delta) — the eigenvalues are computed here anyway, so the
+    health gauge is free."""
     P = delta.cols
     r = delta.rank
     s = delta.signs.astype(P.real.dtype)
@@ -182,16 +186,29 @@ def delta_correction(delta: TenantDelta, lam
     C = jnp.matmul(P, V, precision=_HI) * scale[None, :]
     up = jnp.where(ev < 0, 1.0, 0.0)[None, :] * C     # chol_update columns
     down = jnp.where(ev > 0, 1.0, 0.0)[None, :] * C   # chol_downdate columns
+    if return_cond:
+        a = jnp.real(jnp.abs(ev))
+        mx = jnp.max(jnp.where(live, a, 0.0))
+        mn = jnp.min(jnp.where(live, a, jnp.inf))
+        cond = jnp.where(jnp.isfinite(mn) & (mx > 0),
+                         mx / jnp.maximum(mn, 1e-30), 1.0)
+        return up, down, cond
     return up, down
 
 
 def delta_factor(delta: TenantDelta, L: jax.Array, lam, *,
-                 method: str = "composed") -> jax.Array:
+                 method: str = "composed", return_cond: bool = False):
     """The tenant's resident-λ factor from the base factor: O(n²·r).
 
     ``L`` must be the base chol(W + λĨ) at the same ``lam``; hot tenants
     cache the result (``TenantManager``), cold tenants recompute on
-    demand. An empty delta returns a factor equal to L."""
+    demand. An empty delta returns a factor equal to L.
+    ``return_cond=True``: also return the live core conditioning (see
+    ``delta_correction``) as ``(L_t, cond)``."""
+    if return_cond:
+        up, down, cond = delta_correction(delta, lam, return_cond=True)
+        return chol_downdate(chol_update(L, up, method=method), down,
+                             method=method), cond
     up, down = delta_correction(delta, lam)
     return chol_downdate(chol_update(L, up, method=method), down,
                          method=method)

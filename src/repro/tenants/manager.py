@@ -277,7 +277,19 @@ class TenantManager:
             if lam is not None and lam_v != float(state.lam0):
                 eye = jnp.eye(state.W.shape[0], dtype=state.W.dtype)
                 base_L = jnp.linalg.cholesky(state.W + lam_v * eye)
-            t.L = delta_factor(t.delta, base_L, lam_v)
+            if self.registry is not None:
+                # the rank-r core eigenvalues are computed for the
+                # correction anyway — gauge their conditioning (worst
+                # across tenants wins: max-merged via the condest suffix)
+                t.L, cond = delta_factor(t.delta, base_L, lam_v,
+                                         return_cond=True)
+                cond_v = float(cond)
+                prev = self.registry.gauge(
+                    "tenants.delta_core_condest").value
+                self.registry.gauge("tenants.delta_core_condest").set(
+                    max(prev, cond_v))
+            else:
+                t.L = delta_factor(t.delta, base_L, lam_v)
             t.factor_key = key
             self.stats.materializations += 1
             if self.registry is not None:

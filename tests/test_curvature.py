@@ -102,6 +102,95 @@ def test_update_then_downdate_recovers_base_factor(n, k, seed, complex_,
         _chol(W + P @ P.conj().T), rtol=2e-3, atol=2e-4)
 
 
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(seed=st.integers(0, 2 ** 16), n=st.integers(4, 16),
+                  complex_=st.sampled_from([False, True]),
+                  method=st.sampled_from(["composed", "rotations"]))
+def test_downdate_margin_decays_toward_singularity(seed, n, complex_,
+                                                   method):
+    """Property: the breakdown margin is a usable early-warning signal.
+
+    Downdating W = I + uu† by t·u hits singularity at t² = 1 + 1/‖u‖²;
+    as t climbs toward that critical value the pre-clamp margin must
+    fall monotonically from ≈1 toward 0 while staying positive — for the
+    composed method it equals 1 − f² exactly at t = f·t_crit — so a
+    monitor watching the gauge sees the drift long before the clamp."""
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(n, 1))
+    if complex_:
+        u = u + 1j * rng.normal(size=(n, 1))
+    dt = jnp.complex64 if complex_ else jnp.float32
+    u = jnp.asarray(u, dt)
+    W = jnp.eye(n, dtype=dt) + u @ u.conj().T
+    L = jnp.linalg.cholesky(W)
+    t_crit = float(np.sqrt(1 + 1 / float(jnp.real(u.conj().T @ u)[0, 0])))
+    fracs = (0.2, 0.5, 0.8, 0.95, 0.999)
+    margins = []
+    for f in fracs:
+        Ld, aux = chol_downdate(L, jnp.asarray(f * t_crit, dt) * u,
+                                method=method, return_aux=True)
+        assert not bool(aux.clamped)
+        assert np.all(np.isfinite(np.asarray(Ld)))
+        margins.append(float(aux.margin))
+    assert all(0 < m <= 1 + 1e-6 for m in margins)
+    assert all(a > b for a, b in zip(margins, margins[1:]))
+    assert margins[0] > 0.9 and margins[-1] < 0.2
+    if method == "composed":
+        np.testing.assert_allclose(margins, [1 - f * f for f in fracs],
+                                   rtol=1e-2, atol=1e-3)
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(seed=st.integers(0, 2 ** 16),
+                  overshoot=st.floats(1.01, 1.5),
+                  complex_=st.sampled_from([False, True]),
+                  method=st.sampled_from(["composed", "rotations"]))
+def test_invalid_downdate_clamps_and_reports_not_nan(seed, overshoot,
+                                                     complex_, method):
+    """Property: past the breakdown point the aux is still a reportable
+    statistic — ``clamped`` fires and the margin is ≤ 0 but never NaN,
+    so the rule engine's ``lt 0`` comparison sees it even though the
+    factor itself is garbage (which is exactly why the monitor, not the
+    factor, is the place to look)."""
+    rng = np.random.default_rng(seed)
+    n = 10
+    u = rng.normal(size=(n, 1))
+    if complex_:
+        u = u + 1j * rng.normal(size=(n, 1))
+    dt = jnp.complex64 if complex_ else jnp.float32
+    u = jnp.asarray(u, dt)
+    W = jnp.eye(n, dtype=dt) + u @ u.conj().T
+    L = jnp.linalg.cholesky(W)
+    t_crit = float(np.sqrt(1 + 1 / float(jnp.real(u.conj().T @ u)[0, 0])))
+    Ld, aux = chol_downdate(L, jnp.asarray(overshoot * t_crit, dt) * u,
+                            method=method, return_aux=True)
+    m = float(aux.margin)
+    assert m == m                    # not NaN: the signal survives
+    assert m <= 0                    # and says "invalid", signed
+    assert bool(aux.clamped)
+    assert float(aux.min_pivot) <= 0 or bool(aux.clamped)
+    del Ld                           # invalid by construction: only the
+    #                                  aux diagnostics are meaningful
+
+
+def test_downdate_aux_healthy_matches_plain_result():
+    """return_aux must not change the numbers: the aux path's L' is the
+    plain downdate bit-for-bit on a healthy problem."""
+    for method in ("composed", "rotations"):
+        S, _ = _mk(n=12, seed=5)
+        X, _ = _mk(n=12, m=3, seed=6)
+        W = S @ S.T + 0.5 * jnp.eye(12, dtype=S.dtype)
+        L = jnp.linalg.cholesky(chol_update(jnp.linalg.cholesky(W), X)
+                                @ chol_update(jnp.linalg.cholesky(W),
+                                              X).conj().T)
+        Ld, aux = chol_downdate(L, X, method=method, return_aux=True)
+        np.testing.assert_array_equal(
+            np.asarray(Ld),
+            np.asarray(chol_downdate(L, X, method=method)))
+        assert float(aux.margin) > 0.1
+        assert not bool(aux.clamped)
+
+
 def test_rank1_vector_input():
     n, lam = 16, 0.2
     S, _ = _mk(n=n)

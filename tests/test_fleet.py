@@ -586,7 +586,8 @@ def test_subprocess_fleet_obs_merges_metrics_and_stitches_traces(tmp_path):
                                       "max_requests": k,
                                       "refresh_every": 10 ** 6,
                                       "drift_frac": None,
-                                      "obs": True, "trace": True},
+                                      "obs": True, "trace": True,
+                                      "audit_every": 2},
                         init_arrays={"S0": np.asarray(S)},
                         route="round_robin", gossip=True,
                         registry=registry)
@@ -614,6 +615,18 @@ def test_subprocess_fleet_obs_merges_metrics_and_stitches_traces(tmp_path):
         assert h["count"] == requests
         assert 0.0 < quantile(h, 0.5) <= quantile(h, 0.99)
         assert snap["histograms"]["serve.queue_wait_s"]["count"] == requests
+
+        # numerical-health rollup: a healthy fleet's merged verdict is
+        # ok, the per-worker reports rode the same pongs, and the
+        # cadenced audit published condest/margin gauges that min/max
+        # merge into the fleet view
+        fh = disp.fleet_health(refresh=False)
+        assert fh["verdict"] == "ok" and fh["members"] == 2
+        assert all(w.health.get("verdict") == "ok"
+                   for w in disp.workers if w.alive)
+        assert snap["gauges"]["curvature.downdate_margin"] > 1e-3
+        assert np.isfinite(snap["gauges"]["curvature.condest"])
+        assert snap["gauges"]["health.verdict"] == 0.0
 
         # cross-process stitching: worker spans (foreign pid) + the
         # dispatcher's rpc span share one trace id

@@ -1,0 +1,501 @@
+"""Numerical-health observatory tests — rules, verdicts, audits, fleet.
+
+Covers the full path the observability PR adds: the ``HealthMonitor``
+rule engine over registry series, ``merge_health`` fleet rollup, the
+``/health`` HTTP route, the ``curvature.audit`` estimators against exact
+references, the downdate-margin telemetry through the real
+``OnlineAdaptation`` fold path (healthy trace stays ``ok``; an injected
+near-rank-deficient burst at tiny λ flips the verdict within one audit
+cadence, naming the margin rule), the NaN/Inf fold-row guard, and the
+dispatcher's health merge + critical-skip routing.
+"""
+import json
+import socket
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    HealthEvent,
+    HealthMonitor,
+    HealthRule,
+    MetricsRegistry,
+    default_rules,
+    merge_health,
+    start_metrics_server,
+)
+
+jax = pytest.importorskip("jax")
+jnp = jax.numpy
+
+
+# ---------------------------------------------------------------------------
+# rule engine
+# ---------------------------------------------------------------------------
+
+def test_monitor_verdict_follows_gauges():
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg)
+    reg.gauge("curvature.downdate_margin").set(0.5)
+    reg.gauge("curvature.condest").set(10.0)
+    assert mon.evaluate() == []
+    assert mon.verdict() == "ok"
+
+    reg.gauge("curvature.downdate_margin").set(1e-5)     # < 1e-3 tol
+    new = mon.evaluate()
+    assert [e.rule for e in new] == ["downdate_margin"]
+    assert new[0].severity == "degraded"
+    assert "refresh" in new[0].recommendation
+    assert mon.verdict() == "degraded"
+    # the verdict gauge mirrors the rollup (0 ok / 1 degraded / 2 critical)
+    assert reg.snapshot()["gauges"]["health.verdict"] == 1.0
+
+    reg.gauge("curvature.downdate_margin").set(-0.25)    # invalid downdate
+    rules = {e.rule for e in mon.evaluate()}
+    assert "downdate_margin_invalid" in rules
+    assert mon.verdict() == "critical"
+    assert reg.snapshot()["gauges"]["health.verdict"] == 2.0
+
+    reg.gauge("curvature.downdate_margin").set(0.9)      # recovered
+    assert mon.evaluate() == []
+    assert mon.verdict() == "ok"
+
+
+def test_counter_rules_fire_on_delta_not_total():
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg)
+    reg.counter("serve.fold.rejected_nonfinite").inc(3)
+    assert {e.rule for e in mon.evaluate()} == {"nonfinite_folds"}
+    assert mon.verdict() == "degraded"
+    # no new rejects since the last look: the old burst must not alarm
+    # forever
+    assert mon.evaluate() == []
+    assert mon.verdict() == "ok"
+    reg.counter("serve.fold.rejected_nonfinite").inc()
+    assert {e.rule for e in mon.evaluate()} == {"nonfinite_folds"}
+
+
+def test_ongoing_condition_logs_once_until_it_moves():
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg)
+    reg.gauge("curvature.condest").set(1e9)
+    assert len(mon.evaluate()) == 1
+    assert mon.evaluate() == []                  # same condition: no spam
+    reg.gauge("curvature.condest").set(1.05e9)   # < 50% move: still quiet
+    assert mon.evaluate() == []
+    reg.gauge("curvature.condest").set(1e12)     # material move: re-logged
+    assert len(mon.evaluate()) == 1
+    rep = mon.report()
+    assert rep["verdict"] == "degraded"
+    assert rep["active"]["condest"]["value"] == pytest.approx(1e12)
+
+
+def test_record_event_and_bounded_log():
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg, max_events=4)
+    for i in range(10):
+        mon.record_event(HealthEvent(
+            ts=float(i), severity="degraded", rule=f"r{i}", series="s",
+            value=float(i), bound=0.0, recommendation="fix it"))
+    rep = mon.report(events=32)
+    assert len(rep["events"]) == 4                       # bounded
+    assert [e["rule"] for e in rep["events"]] == ["r6", "r7", "r8", "r9"]
+    mon.clear()
+    assert mon.verdict() == "ok"
+
+
+def test_custom_rules_and_fires_ops():
+    up = HealthRule("hot", "x", "gauge", "gt", 2.0, "critical", "cool down")
+    dn = HealthRule("low", "x", "gauge", "lt", 1.0, "degraded", "top up")
+    assert up.fires(3.0) and not up.fires(2.0)
+    assert dn.fires(0.5) and not dn.fires(1.0)
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg, rules=(up, dn))
+    reg.gauge("x").set(3.0)
+    assert {e.rule for e in mon.evaluate()} == {"hot"}
+    assert mon.verdict() == "critical"
+
+
+def test_default_rules_bounds_are_tunable():
+    rules = {r.name: r for r in default_rules(margin_tol=1e-6,
+                                              condest_bound=1e3)}
+    assert rules["downdate_margin"].bound == 1e-6
+    assert rules["condest"].bound == 1e3
+    # every shipped rule carries an actionable recommendation
+    assert all(r.recommendation for r in rules.values())
+
+
+# ---------------------------------------------------------------------------
+# fleet rollup + endpoint
+# ---------------------------------------------------------------------------
+
+def test_merge_health_worst_member_wins():
+    ok = {"verdict": "ok", "active": {}, "events": []}
+    deg = {"verdict": "degraded",
+           "active": {"condest": {"severity": "degraded", "ts": 2.0}},
+           "events": [{"ts": 2.0, "rule": "condest"}]}
+    crit = {"verdict": "critical",
+            "active": {"condest": {"severity": "critical", "ts": 1.0},
+                       "downdate_clamped": {"severity": "critical",
+                                            "ts": 1.0}},
+            "events": [{"ts": 1.0, "rule": "downdate_clamped"}]}
+    merged = merge_health([ok, deg, crit])
+    assert merged["verdict"] == "critical"
+    assert merged["members"] == 3
+    # per-rule worst severity wins the active union
+    assert merged["active"]["condest"]["severity"] == "critical"
+    assert "downdate_clamped" in merged["active"]
+    # events interleave by timestamp, newest last
+    assert [e["ts"] for e in merged["events"]] == [1.0, 2.0]
+    # empty / missing reports don't count as members
+    assert merge_health([{}, ok])["members"] == 1
+    assert merge_health([])["verdict"] == "ok"
+
+
+def test_health_endpoint_serves_report():
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg)
+    reg.gauge("curvature.downdate_margin").set(1e-6)
+    mon.evaluate()
+    srv, port = start_metrics_server(reg, port=0, health=mon.report)
+    try:
+        rep = json.loads(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/health", timeout=10).read())
+        assert rep["verdict"] == "degraded"
+        assert "downdate_margin" in rep["active"]
+        assert rep["active"]["downdate_margin"]["value"] == \
+            pytest.approx(1e-6)
+    finally:
+        srv.shutdown()
+
+
+def test_health_endpoint_404_without_monitor():
+    reg = MetricsRegistry()
+    srv, port = start_metrics_server(reg, port=0)
+    try:
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(f"http://127.0.0.1:{port}/health",
+                                   timeout=10)
+        assert e.value.code == 404
+    finally:
+        srv.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# audit estimators vs exact references
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("complex_", [False, True])
+def test_condest_tracks_true_condition_number(complex_):
+    from repro.curvature import condest
+    rng = np.random.default_rng(0)
+    n, m, lam = 24, 96, 1e-3
+    S = rng.normal(size=(n, m)) / np.sqrt(m)
+    if complex_:
+        S = S + 1j * rng.normal(size=(n, m)) / np.sqrt(m)
+    S = jnp.asarray(S, jnp.complex64 if complex_ else jnp.float32)
+    W = (S @ S.conj().T)
+    A = np.asarray(W) + lam * np.eye(n)
+    L = jnp.linalg.cholesky(jnp.asarray(A))
+    true = np.linalg.cond(A, 1)
+    est = float(condest(W, L, lam))
+    # Hager's estimate is a lower bound on κ₁ and in practice lands
+    # within a small factor of it
+    assert est <= true * 1.01
+    assert est >= true * 0.1
+
+
+def test_factor_residual_probe_separates_good_from_drifted():
+    from repro.curvature import factor_residual_probe
+    rng = np.random.default_rng(1)
+    n, m, lam = 24, 96, 1e-3
+    S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    W = S @ S.T
+    L = jnp.linalg.cholesky(W + lam * jnp.eye(n))
+    good = float(factor_residual_probe(W, L, lam))
+    assert good < 1e-4                            # exact factor: tiny
+    L_bad = L * (1.0 + 0.05 * jnp.eye(n))         # 5% diagonal drift
+    bad = float(factor_residual_probe(W, L_bad, lam))
+    assert bad > 10 * max(good, 1e-8)
+
+
+def test_audit_factor_is_jittable_and_deterministic():
+    from repro.curvature import audit_factor
+    rng = np.random.default_rng(2)
+    n, m, lam = 16, 64, 1e-2
+    S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    W = S @ S.T
+    L = jnp.linalg.cholesky(W + lam * jnp.eye(n))
+    a = jax.jit(audit_factor)(W, L, lam)
+    b = jax.jit(audit_factor)(W, L, lam)
+    assert float(a.condest) == float(b.condest)
+    assert float(a.residual) == float(b.residual)
+
+
+# ---------------------------------------------------------------------------
+# the serving fold path: margins, injected degradation, NaN guard
+# ---------------------------------------------------------------------------
+
+def _adaptation(S, lam, *, audit_every=1):
+    from repro.serve import OnlineAdaptation, init_serve_state
+    state = init_serve_state(jnp.asarray(S, jnp.float32), lam)
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg)
+    ad = OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
+                          drift_frac=None, registry=reg, health=mon,
+                          audit_every=audit_every)
+    return state, ad, reg, mon
+
+
+def test_healthy_fold_trace_stays_ok_with_margin_telemetry():
+    rng = np.random.default_rng(0)
+    n, m, k = 8, 32, 2
+    S = rng.normal(size=(n, m)) / np.sqrt(m)
+    state, ad, reg, mon = _adaptation(S, 1e-2)
+    for _ in range(3):
+        rows = jnp.asarray(rng.normal(size=(k, m)) / np.sqrt(m),
+                           jnp.float32)
+        state = ad.fold(state, rows)
+        jax.block_until_ready(state.L)
+        state, _ = ad.maybe_refresh(state)
+    g = reg.snapshot()["gauges"]
+    assert g["curvature.downdate_margin"] > 1e-3   # healthy: above tol
+    assert np.isfinite(g["curvature.condest"])
+    assert g["curvature.factor_residual"] < 1e-2
+    assert mon.verdict() == "ok"
+
+
+def test_injected_degradation_flips_verdict_within_one_cadence():
+    # near-rank-deficient burst: the retiring rows dominate the Gram, so
+    # the downdate removes almost all of the factor's mass — the margin
+    # collapses and the rule engine must flip the verdict on the very
+    # next maintenance pass, naming the margin rule
+    rng = np.random.default_rng(0)
+    n, m, k = 8, 32, 2
+    S = rng.normal(size=(n, m)) / np.sqrt(m)
+    S[:k] *= 1e4
+    state, ad, reg, mon = _adaptation(S, 1e-2)
+    rows = jnp.asarray(rng.normal(size=(k, m)) / np.sqrt(m), jnp.float32)
+    state = ad.fold(state, rows)
+    jax.block_until_ready(state.L)
+    state, _ = ad.maybe_refresh(state)             # one audit cadence
+    rep = mon.report()
+    assert rep["verdict"] in ("degraded", "critical")
+    assert "downdate_margin" in rep["active"]
+    ev = rep["active"]["downdate_margin"]
+    assert ev["value"] < ev["bound"]               # the margin is in the
+    assert ev["series"] == "curvature.downdate_margin"   # event payload
+
+
+def test_invalid_downdate_goes_critical_with_clamp_counter():
+    rng = np.random.default_rng(0)
+    n, m, k = 8, 32, 2
+    S = rng.normal(size=(n, m)) / np.sqrt(m)
+    S[:k] *= 1e3
+    state, ad, reg, mon = _adaptation(S, 1e-8)
+    rows = jnp.asarray(rng.normal(size=(k, m)) / np.sqrt(m), jnp.float32)
+    state = ad.fold(state, rows)
+    jax.block_until_ready(state.L)
+    state, _ = ad.maybe_refresh(state)
+    rep = mon.report()
+    assert rep["verdict"] == "critical"
+    assert "downdate_margin_invalid" in rep["active"]
+    snap = reg.snapshot()
+    assert snap["gauges"]["curvature.downdate_margin"] < 0
+    assert snap["counters"]["curvature.downdate_clamped"] >= 1
+
+
+def test_nonfinite_fold_rows_rejected_not_folded():
+    rng = np.random.default_rng(0)
+    n, m, k = 8, 32, 2
+    S = rng.normal(size=(n, m)) / np.sqrt(m)
+    state, ad, reg, mon = _adaptation(S, 1e-2)
+    L_before = np.asarray(state.L)
+    bad = np.asarray(rng.normal(size=(k, m)), np.float32)
+    bad[0, 3] = np.nan
+    state2 = ad.fold(state, jnp.asarray(bad))
+    # the poisoned rows never reach the factor or the window
+    assert np.array_equal(np.asarray(state2.L), L_before)
+    assert np.array_equal(np.asarray(state2.S), np.asarray(state.S))
+    snap = reg.snapshot()
+    assert snap["counters"]["serve.fold.rejected_nonfinite"] == 1
+    rep = mon.report()
+    assert rep["verdict"] == "degraded"
+    assert "nonfinite_folds" in rep["active"]
+    # an Inf is caught by the same guard
+    bad[0, 3] = np.inf
+    ad.fold(state2, jnp.asarray(bad))
+    assert reg.snapshot()[
+        "counters"]["serve.fold.rejected_nonfinite"] == 2
+
+
+def test_server_flush_evaluates_health():
+    from repro.serve import (OnlineAdaptation, SolveServer,
+                             TokenBudgetBatcher, init_serve_state)
+    rng = np.random.default_rng(0)
+    n, m = 8, 32
+    S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg)
+    server = SolveServer(
+        init_serve_state(S, 1e-2),
+        batcher=TokenBudgetBatcher(max_tokens=2 ** 20, max_requests=4),
+        adaptation=OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
+                                    drift_frac=None, audit_every=1),
+        registry=reg, health=mon)
+    # health propagates into the adaptation maintenance path
+    assert server.adaptation.health is mon
+    server.submit(jnp.asarray(rng.normal(size=(m,)), jnp.float32))
+    server.flush()
+    # the audit ran under flush and the rule pass saw it
+    g = reg.snapshot()["gauges"]
+    assert "curvature.condest" in g
+    assert "health.verdict" in g
+    assert mon.verdict() == "ok"
+
+
+# ---------------------------------------------------------------------------
+# tenants: delta-core conditioning gauge
+# ---------------------------------------------------------------------------
+
+def test_tenant_delta_core_condest_gauge():
+    from repro.serve import init_serve_state
+    from repro.tenants import TenantManager
+    rng = np.random.default_rng(0)
+    n, m, lam = 8, 32, 1e-2
+    S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    state = init_serve_state(S, lam)
+    reg = MetricsRegistry()
+    tm = TenantManager(2, registry=reg)
+    tm.fold(state, "a", jnp.asarray(rng.normal(size=(2, m)) / np.sqrt(m),
+                                    jnp.float32))
+    tm.factor(state, "a")
+    g = reg.snapshot()["gauges"]
+    assert g["tenants.delta_core_condest"] >= 1.0
+    assert np.isfinite(g["tenants.delta_core_condest"])
+
+
+# ---------------------------------------------------------------------------
+# fleet worker + dispatcher propagation
+# ---------------------------------------------------------------------------
+
+def _drive_worker_frames(meta, S0):
+    """Run a real FleetWorker over a socketpair and return its pong meta."""
+    from repro.fleet.wire import Channel, put_blocks
+    from repro.fleet.worker import FleetWorker
+
+    here, there = socket.socketpair()
+    worker_chan = Channel(here, name="w0")
+    disp_chan = Channel(there, name="d0")
+    worker = FleetWorker(worker_chan, worker_id=0)
+    t = threading.Thread(target=worker.run, daemon=True)
+    t.start()
+    try:
+        arrays, init_meta = {}, dict(meta)
+        put_blocks(arrays, init_meta, "S0", S0)
+        disp_chan.send("init", init_meta, arrays)
+        assert disp_chan.recv(timeout=120).kind == "init_ok"
+        disp_chan.send("ping", {})
+        pong = disp_chan.recv(timeout=60)
+        assert pong.kind == "pong"
+        return worker, pong.meta
+    finally:
+        try:
+            disp_chan.send("bye", {})
+        except Exception:
+            pass
+        t.join(timeout=30)
+        disp_chan.close()
+
+
+def test_worker_pong_carries_health_and_profile_threads(tmp_path):
+    rng = np.random.default_rng(0)
+    S0 = np.asarray(rng.normal(size=(8, 32)) / np.sqrt(32), np.float32)
+    worker, meta = _drive_worker_frames(
+        {"mode": "inline", "damping": 1e-2, "gossip": True,
+         "audit_every": 2, "profile_dir": str(tmp_path / "prof")},
+        S0)
+    assert meta["health"]["verdict"] == "ok"
+    assert "active" in meta["health"] and "events" in meta["health"]
+    # the worker's adaptation got the audit cadence from the init frame
+    assert worker.server.adaptation.audit_every == 2
+    assert worker.server.adaptation.health is worker.health
+    # --profile-dir threads through: each worker gets its own subdir
+    assert worker.profile is not None
+    assert worker.profile.log_dir.endswith("worker0")
+
+
+def test_dispatcher_merges_health_and_skips_critical_workers():
+    from repro.fleet.dispatcher import Dispatcher, WorkerHandle
+    from repro.fleet.wire import Channel, get_blocks, put_blocks
+    from repro.fleet import wire
+
+    class FakeWorker:
+        def __init__(self, worker_id, verdict):
+            self.worker_id = worker_id
+            self.verdict = verdict
+            self.received = []
+            here, there = socket.socketpair()
+            self.chan = Channel(here, name=f"fake{worker_id}")
+            self.peer = Channel(there, name=f"disp{worker_id}")
+            threading.Thread(target=self._run, daemon=True).start()
+
+        def _run(self):
+            try:
+                while True:
+                    msg = self.chan.recv()
+                    if msg.kind == "init":
+                        self.chan.send("init_ok",
+                                       {"worker_id": self.worker_id,
+                                        "n": 8})
+                    elif msg.kind == "solve":
+                        self.received.append(msg.meta["uid"])
+                        arrays, meta = {}, {"uid": msg.meta["uid"],
+                                            "damping": 0.1,
+                                            "latency_s": 0.0}
+                        put_blocks(arrays, meta, "x", get_blocks(msg, "v"))
+                        self.chan.send("result", meta, arrays)
+                    elif msg.kind == "ping":
+                        self.chan.send("pong", {
+                            "worker_id": self.worker_id, "queued": 0,
+                            "applied": 0, "served": len(self.received),
+                            "health": {
+                                "verdict": self.verdict,
+                                "active": {} if self.verdict == "ok" else {
+                                    "downdate_clamped": {
+                                        "severity": "critical",
+                                        "ts": 1.0}},
+                                "events": []}})
+                    elif msg.kind == "drain":
+                        self.chan.send("drained",
+                                       {"worker_id": self.worker_id})
+                    elif msg.kind == "bye":
+                        return
+            except wire.WireError:
+                return
+            finally:
+                self.chan.close()
+
+    fakes = [FakeWorker(0, "critical"), FakeWorker(1, "ok")]
+    disp = Dispatcher([WorkerHandle(f.worker_id, f.peer) for f in fakes],
+                      route="least_loaded", gossip=False)
+    disp.init_workers({"mode": "inline", "damping": 0.1})
+    try:
+        merged = disp.fleet_health()
+        assert merged["verdict"] == "critical"
+        assert merged["members"] == 2
+        assert "downdate_clamped" in merged["active"]
+        # heartbeat reports surface the per-worker verdict
+        hb = disp.heartbeat()
+        assert hb[0]["verdict"] == "critical"
+        assert hb[1]["verdict"] == "ok"
+        # least_loaded now avoids the critical worker entirely
+        for i in range(4):
+            disp.submit(np.full(4, i, np.float32))
+        assert len(disp.flush(timeout=30)) == 4
+        assert fakes[0].received == []
+        assert len(fakes[1].received) == 4
+    finally:
+        disp.shutdown(timeout=10)

@@ -109,10 +109,31 @@ def test_merge_rejects_mismatched_bounds():
 
 
 def test_quantile_edge_cases():
-    assert quantile({"bounds": default_buckets(),
-                     "counts": [0] * 28, "sum": 0.0, "count": 0}, 0.5) == 0.0
+    # an empty histogram has no quantiles — nan, not a fake 0.0
+    import math
+    assert math.isnan(quantile({"bounds": default_buckets(),
+                                "counts": [0] * 28, "sum": 0.0,
+                                "count": 0}, 0.5))
+    # all mass in overflow: the histogram only knows "above the top
+    # bound" — inf, not the top finite bound understating the tail
     h = {"bounds": [1.0, 2.0], "counts": [0, 0, 5], "sum": 50.0, "count": 5}
-    assert quantile(h, 0.99) == 2.0  # overflow reports the last bound
+    assert quantile(h, 0.5) == float("inf")
+    assert quantile(h, 0.99) == float("inf")
+    # mixed mass: finite quantiles stay finite, only the tail overflows
+    h2 = {"bounds": [1.0, 2.0], "counts": [0, 3, 1], "sum": 9.0, "count": 4}
+    assert quantile(h2, 0.5) == 2.0
+    assert quantile(h2, 0.99) == float("inf")
+
+
+def test_merge_min_gauges_and_condest():
+    s1 = {"gauges": {"curvature.downdate_margin": 0.5,
+                     "curvature.condest": 1e3, "health.verdict": 0.0}}
+    s2 = {"gauges": {"curvature.downdate_margin": 0.01,
+                     "curvature.condest": 1e6, "health.verdict": 1.0}}
+    m = merge([s1, s2])
+    assert m["gauges"]["curvature.downdate_margin"] == 0.01  # worst = min
+    assert m["gauges"]["curvature.condest"] == 1e6           # worst = max
+    assert m["gauges"]["health.verdict"] == 1.0              # worst = max
 
 
 # ---------------------------------------------------------------------------
