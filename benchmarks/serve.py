@@ -41,20 +41,23 @@ import numpy as np
 
 def _drive(S, vs, damping, *, policy, max_requests, adapt_every, adapt_rows,
            lams=None, window_dtype=None, fused=True, registry=None,
-           tracer=None, health=None, audit_every=0):
+           tracer=None, health=None, audit_every=0, journal=None,
+           recorder=None):
     """Stream ``vs`` through a fresh server; returns (server, {i: x})."""
     from repro.serve import (OnlineAdaptation, SolveServer,
                              TokenBudgetBatcher, init_serve_state)
 
     state = init_serve_state(S, damping, window_dtype=window_dtype)
     adaptation = OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
-                                  drift_frac=None, audit_every=audit_every)
+                                  drift_frac=None, audit_every=audit_every,
+                                  journal=journal)
     server = SolveServer(
         state,
         batcher=TokenBudgetBatcher(max_tokens=2 ** 30,
                                    max_requests=max_requests),
         adaptation=adaptation, policy=policy, monitor_drift=False,
-        fused=fused, registry=registry, tracer=tracer, health=health)
+        fused=fused, registry=registry, tracer=tracer, health=health,
+        recorder=recorder)
 
     # compile warmup (both bucket widths), then measure clean
     server.solve_one(vs[0])
@@ -406,6 +409,85 @@ def run_audit_overhead(emit=print, n=512, m=25_000, requests=48, k=8,
             "audit_gated": gated, "verdict": verdict}
 
 
+def run_recorder_overhead(emit=print, n=512, m=25_000, requests=48, k=8,
+                          damping=1e-2, adapt_every=6, adapt_k=4,
+                          audit_every=4, max_overhead=1.053,
+                          assert_overhead=True, seed=0):
+    """The flight recorder's cost ceiling: with the full observatory
+    already on (metrics + health + cadenced audit) in BOTH paths, adding
+    the recorder — per-request digests, journal, snapshot upkeep,
+    cadenced ``ServeState.fingerprint()`` — must keep ≥ 95% of the
+    recorder-off req/s on an identical coalesced trace (``max_overhead``
+    = 1/0.95). Gated at the real m ≫ n shape; report-only at tiny CI
+    shapes. Each path runs twice and keeps its best req/s."""
+    import tempfile
+
+    from repro.obs import FlightRecorder, HealthMonitor, MetricsRegistry
+    from repro.serve.journal import FoldJournal
+
+    rng = np.random.default_rng(seed)
+    S = jnp.asarray(rng.normal(size=(n, m)) / np.sqrt(m), jnp.float32)
+    vs = [jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+          for _ in range(requests)]
+    adapt_rows = [jnp.asarray(rng.normal(size=(adapt_k, m)) / np.sqrt(m),
+                              jnp.float32) for _ in range(4)]
+
+    def one(recorded):
+        reg = MetricsRegistry()
+        mon = HealthMonitor(reg)
+        rec = FlightRecorder(tempfile.mkdtemp(prefix="bench_rec_")) \
+            if recorded else None
+        srv, _ = _drive(S, vs, damping, policy="cached",
+                        max_requests=k, adapt_every=adapt_every,
+                        adapt_rows=adapt_rows, registry=reg, health=mon,
+                        audit_every=audit_every,
+                        journal=FoldJournal() if recorded else None,
+                        recorder=rec)
+        return srv.metrics.summary(), rec
+
+    # interleave the repetitions (off, on, off, on) and keep each path's
+    # best req/s — same protocol as run_audit_overhead
+    s_off = s_on = rec = None
+    for _ in range(2):
+        s, _ = one(False)
+        if s_off is None or s["rps"] > s_off["rps"]:
+            s_off = s
+        s, r = one(True)
+        if s_on is None or s["rps"] > s_on["rps"]:
+            s_on = s
+        rec = r
+    # fidelity: the recorder actually recorded — digests for every
+    # request (warmup included), at least one cadenced fingerprint, a
+    # last-good snapshot — and a healthy trace wrote no incident bundle
+    assert len(rec._requests) >= requests, len(rec._requests)
+    assert len(rec._fingerprints) >= 1
+    assert rec._snap is not None
+    assert rec.bundle_paths == [], rec.bundle_paths
+
+    overhead = s_off["rps"] / s_on["rps"]
+    ok = overhead <= max_overhead
+    gated = bool(assert_overhead)
+    why = "" if gated else "; report-only: tiny shape"
+    emit(f"serve/recorder_off_k{k}_n{n}_m{m},{s_off['p50_ms'] * 1e3:.0f},"
+         f"{s_off['rps']:.1f} req/s (p99={s_off['p99_ms'] * 1e3:.0f}us)")
+    emit(f"serve/recorder_on_k{k}_n{n}_m{m},{s_on['p50_ms'] * 1e3:.0f},"
+         f"{s_on['rps']:.1f} req/s (p99={s_on['p99_ms'] * 1e3:.0f}us)")
+    emit(f"serve/recorder_overhead,,{overhead:.3f}x req/s cost "
+         f"({'OK' if ok else 'NOT'} <= {max_overhead:g}{why}; "
+         f"{len(rec._fingerprints)} fingerprints, "
+         f"{len(rec._requests)} digests, 0 bundles)")
+    if gated:
+        assert ok, (
+            f"fully-on recording must keep >= {1 / max_overhead:.2f}x "
+            f"the recorder-off req/s: got {overhead:.3f}x "
+            f"({s_off['rps']:.1f} vs {s_on['rps']:.1f} req/s)")
+    return {"n": n, "m": m, "requests": requests, "k": k,
+            "recorder_off_rps": s_off["rps"],
+            "recorder_on_rps": s_on["rps"],
+            "recorder_overhead": overhead, "recorder_ok": bool(ok),
+            "recorder_gated": gated}
+
+
 def main(argv=None):
     import sys
     argv = sys.argv[1:] if argv is None else argv
@@ -450,6 +532,8 @@ def main(argv=None):
                                       **shapes)
     summary["audit"] = run_audit_overhead(emit=emit,
                                           assert_overhead=not tiny, **shapes)
+    summary["recorder"] = run_recorder_overhead(
+        emit=emit, assert_overhead=not tiny, **shapes)
     if as_json:
         import json
         with open("BENCH_serve.json", "w") as fh:

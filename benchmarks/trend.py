@@ -39,6 +39,19 @@ def load_rows(path) -> dict:
     return out
 
 
+def load_mem(path) -> dict:
+    """name -> peak_mem_bytes for rows that report it (null-safe: rows
+    predating the compiled-memory introspection carry None or nothing)."""
+    with open(path) as fh:
+        rows = json.load(fh)
+    out = {}
+    for row in rows:
+        name, nb = row.get("name"), row.get("peak_mem_bytes")
+        if name and isinstance(nb, (int, float)) and nb > 0:
+            out[name] = float(nb)
+    return out
+
+
 def compare(prev: dict, cur: dict, *, threshold: float = 1.5,
             min_us: float = 0.0):
     """Returns (regressions, improvements, compared): regressions are
@@ -67,11 +80,18 @@ def main(argv=None) -> int:
     ap.add_argument("--min-us", type=float, default=0.0,
                     help="skip rows where both timings are below this "
                          "(dispatch-floor noise)")
+    ap.add_argument("--mem-threshold", type=float, default=1.25,
+                    help="fail when peak_mem_bytes grew past this ratio "
+                         "(default 1.25; memory is deterministic, so the "
+                         "bound is tighter than the timing one)")
     args = ap.parse_args(argv)
 
     prev, cur = load_rows(args.prev), load_rows(args.cur)
     regressions, improvements, compared = compare(
         prev, cur, threshold=args.threshold, min_us=args.min_us)
+    mem_regressions, _, mem_compared = compare(
+        load_mem(args.prev), load_mem(args.cur),
+        threshold=args.mem_threshold)
 
     print(f"# trend: {compared} comparable rows "
           f"({len(prev)} prev / {len(cur)} cur, threshold "
@@ -84,8 +104,15 @@ def main(argv=None) -> int:
     for name, p, c, r in regressions:
         print(f"REGRESSION {name}: {p:.0f} -> {c:.0f} us ({r:.2f}x "
               f"> {args.threshold:g}x)")
-    if regressions:
-        print(f"# FAIL: {len(regressions)} row(s) regressed")
+    if mem_compared:
+        print(f"# mem trend: {mem_compared} comparable rows "
+              f"(threshold {args.mem_threshold:g}x)")
+    for name, p, c, r in mem_regressions:
+        print(f"MEM REGRESSION {name}: {p:.0f} -> {c:.0f} bytes "
+              f"({r:.2f}x > {args.mem_threshold:g}x)")
+    if regressions or mem_regressions:
+        print(f"# FAIL: {len(regressions)} timing / "
+              f"{len(mem_regressions)} memory row(s) regressed")
         return 1
     print("# OK: no regressions")
     return 0

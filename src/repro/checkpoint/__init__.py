@@ -2,9 +2,11 @@ from repro.checkpoint.checkpoint import all_steps, latest_step, restore, save
 from repro.checkpoint.fleet import (
     latest_fleet_step,
     load_fleet_manifest,
+    load_npz_bundle,
     save_fleet_manifest,
+    save_npz_bundle,
 )
 
 __all__ = ["all_steps", "latest_step", "restore", "save",
            "latest_fleet_step", "load_fleet_manifest",
-           "save_fleet_manifest"]
+           "save_fleet_manifest", "load_npz_bundle", "save_npz_bundle"]

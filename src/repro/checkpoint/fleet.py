@@ -27,7 +27,8 @@ from typing import Optional, Tuple
 import numpy as np
 
 __all__ = ["save_fleet_manifest", "load_fleet_manifest",
-           "latest_fleet_step", "save_tenant_spill", "load_tenant_spill"]
+           "latest_fleet_step", "save_npz_bundle", "load_npz_bundle",
+           "save_tenant_spill", "load_tenant_spill"]
 
 _NAME = "fleet_{step:09d}.json"
 
@@ -59,10 +60,11 @@ def latest_fleet_step(ckpt_dir) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def save_tenant_spill(path, arrays: dict, meta: dict) -> pathlib.Path:
-    """Spill one tenant's delta: named numpy arrays + a JSON meta blob in
-    one npz, written atomically (.tmp → fsync → rename). ``meta`` must be
-    JSON-serializable (tenant id, journal position, dtype tags...)."""
+def save_npz_bundle(path, arrays: dict, meta: dict) -> pathlib.Path:
+    """Named numpy arrays + a JSON meta blob in one npz, written
+    atomically (.tmp → fsync → rename). ``meta`` must be
+    JSON-serializable. The generic single-file sidecar format shared by
+    tenant spills and the flight recorder's incident bundles."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     payload = {k: np.asarray(v) for k, v in arrays.items()}
@@ -77,9 +79,20 @@ def save_tenant_spill(path, arrays: dict, meta: dict) -> pathlib.Path:
     return path
 
 
-def load_tenant_spill(path) -> Tuple[dict, dict]:
-    """Inverse of ``save_tenant_spill``: returns (arrays, meta)."""
+def load_npz_bundle(path) -> Tuple[dict, dict]:
+    """Inverse of ``save_npz_bundle``: returns (arrays, meta)."""
     with np.load(path) as z:
         meta = json.loads(bytes(z["__meta__"]).decode("utf-8"))
         arrays = {k: z[k] for k in z.files if k != "__meta__"}
     return arrays, meta
+
+
+def save_tenant_spill(path, arrays: dict, meta: dict) -> pathlib.Path:
+    """Spill one tenant's delta (tenant id, journal position, dtype tags
+    in ``meta``) — the npz-bundle format under its historical name."""
+    return save_npz_bundle(path, arrays, meta)
+
+
+def load_tenant_spill(path) -> Tuple[dict, dict]:
+    """Inverse of ``save_tenant_spill``: returns (arrays, meta)."""
+    return load_npz_bundle(path)

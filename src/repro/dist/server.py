@@ -52,7 +52,8 @@ from repro.core.shard_compat import shard_map_compat
 from repro.dist.state import DistSpec, ShardedServeState
 from repro.kernels import ops as kernel_ops
 from repro.serve.batcher import Microbatch, TokenBudgetBatcher
-from repro.serve.server import ServerMetrics, SolveResult, _coalesced_solve
+from repro.serve.server import ServerMetrics, SolveResult, \
+    _coalesced_solve, _rows_k
 from repro.serve.state import ServeState, as_factorization, serve_mode
 
 __all__ = ["AsyncSolveServer", "make_sharded_coalesced_solve"]
@@ -199,7 +200,7 @@ class AsyncSolveServer:
                  monitor_drift: bool = True, jitter: float = 0.0,
                  tenants=None, clock=time.perf_counter,
                  registry=None, tracer=None, profile=None, health=None,
-                 metrics_window: int = 4096):
+                 recorder=None, metrics_window: int = 4096):
         if policy not in ("cached", "refactorize"):
             raise ValueError(f"policy must be 'cached' or 'refactorize', "
                              f"got {policy!r}")
@@ -254,6 +255,11 @@ class AsyncSolveServer:
         if health is not None and self.adaptation is not None \
                 and getattr(self.adaptation, "health", None) is None:
             self.adaptation.health = health
+        # optional FlightRecorder: request digests land at the response
+        # boundary (_finalize — the worker's only block_until_ready) and
+        # the recorder observes at the maintenance boundary, mirroring
+        # where the eager server hooks it
+        self.recorder = recorder
         self.damping_state = None          # read by the worker's refresh
 
         self._solve_cache: Dict[tuple, Any] = {}
@@ -640,6 +646,7 @@ class AsyncSolveServer:
                 args={"k": mb.k, "uids": [r.uid for r in mb.requests],
                       "tenant": mb.tenant})
         results = []
+        mb_resid = float(resid) if self.recorder is not None else None
         for j, req in enumerate(mb.requests):
             xj = tuple(xb[:, j] for xb in x) \
                 if isinstance(x, (tuple, list)) else x[:, j]
@@ -647,6 +654,13 @@ class AsyncSolveServer:
                 if req.t_submit > 0.0 else None
             self.metrics.record(req.t_submit, t_done, req.tokens,
                                 queue_s=queue_s)
+            if self.recorder is not None:
+                self.recorder.record_request(
+                    req.uid, tenant=mb.tenant, damping=req.damping,
+                    tokens=req.tokens,
+                    k_rows=0 if req.rows is None else _rows_k(req.rows),
+                    latency_s=t_done - req.t_submit,
+                    residual=mb_resid if mb_resid >= 0 else None)
             if self.tracer is not None and queue_s is not None:
                 e2e_us = (t_done - req.t_submit) * 1e6
                 self.tracer.add(
@@ -689,3 +703,11 @@ class AsyncSolveServer:
         if refreshed and self.tracer is not None:
             self.tracer.add("refresh", cat="adapt",
                             ts_us=time.time() * 1e6, dur_us=0.0)
+        if self.recorder is not None:
+            # maintenance boundary == the eager server's flush end: the
+            # policy check just synchronized, so the recorder tick (and
+            # its cadenced fingerprint) adds no new device round trip
+            self.recorder.observe(self.state, adaptation=self.adaptation,
+                                  health=self.health,
+                                  registry=self.registry,
+                                  tracer=self.tracer)

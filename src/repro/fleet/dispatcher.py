@@ -109,6 +109,7 @@ class WorkerHandle:
         self.oldest_age_s = 0.0     # last reported oldest queued request
         self.metrics: dict = {}     # last obs registry snapshot (pong)
         self.health: dict = {}      # last health report (pong)
+        self.incidents: list = []   # flight-recorder bundle paths (pong)
         self.n = None
 
     def __repr__(self):
@@ -330,6 +331,7 @@ class Dispatcher:
             w.oldest_age_s = float(msg.meta.get("oldest_age_s", 0.0))
             w.metrics = msg.meta.get("metrics", w.metrics) or {}
             w.health = msg.meta.get("health", w.health) or {}
+            w.incidents = msg.meta.get("incidents", w.incidents) or []
             w.pongs += 1
         elif msg.kind == "drained":
             self._drained.add(w.worker_id)
@@ -473,6 +475,20 @@ class Dispatcher:
             self.heartbeat(timeout=timeout)
         return merge_health(w.health for w in self.workers if w.alive)
 
+    def collect_incidents(self, *, refresh: bool = True,
+                          timeout: float = 10.0) -> Dict[int, list]:
+        """Gather the fleet's flight-recorder incident bundles: a map
+        ``{worker_id: [bundle paths]}`` built from the paths workers ship
+        in heartbeat pongs. The bundles themselves stay on each worker's
+        disk (shared-filesystem deployments can feed them straight to
+        ``python -m repro.obs.forensics``). Dead workers keep their
+        last-reported list — exactly the bundles a postmortem wants.
+        ``refresh=False`` reads the last-seen pongs without pinging."""
+        if refresh:
+            self.heartbeat(timeout=timeout)
+        return {w.worker_id: list(w.incidents)
+                for w in self.workers if w.incidents}
+
     # -- checkpoint --------------------------------------------------------
     def checkpoint(self, ckpt_dir, step: int, *,
                    timeout: Optional[float] = 300.0) -> pathlib.Path:
@@ -504,6 +520,11 @@ class Dispatcher:
             else gossip_path.name,
             "workers": {str(w.worker_id): self._acks[w.worker_id]
                         for w in self._alive()},
+            # last-seen flight-recorder bundle paths ride the manifest so
+            # a postmortem starting from the checkpoint knows where the
+            # incident evidence lives without a live fleet to ask
+            "incidents": {str(w.worker_id): list(w.incidents)
+                          for w in self.workers if w.incidents},
         }
         path = save_fleet_manifest(ckpt_dir, step, manifest)
         if self.log is not None:

@@ -64,10 +64,12 @@ class FleetWorker:
         self.tracer = None                    # obs tracer (init "trace")
         self.health = None                    # HealthMonitor (with registry)
         self.profile = None                   # ProfileHooks ("profile_dir")
+        self.recorder = None                  # FlightRecorder ("record_dir")
         self._async = False
         self._uid_map: Dict[int, int] = {}    # inner uid -> dispatcher uid
         self._running = True
         self._draining = False
+        self._terminated = False              # SIGTERM seen (final bundle)
 
     # -- construction of the replica ---------------------------------------
     def _handle_init(self, msg: Message) -> None:
@@ -97,6 +99,16 @@ class FleetWorker:
             self.profile = ProfileHooks(os.path.join(
                 str(meta["profile_dir"]), f"worker{self.worker_id}"))
             self.profile.start()
+        if meta.get("record_dir"):
+            # per-worker incident capture: bundles land under the worker's
+            # own subdirectory; their paths ride heartbeat pongs so
+            # Dispatcher.collect_incidents() can gather the fleet's set
+            from repro.obs import FlightRecorder
+            self.recorder = FlightRecorder(
+                os.path.join(str(meta["record_dir"]),
+                             f"worker{self.worker_id}"),
+                fingerprint_every=int(meta.get("fingerprint_every", 4)),
+                debounce_s=float(meta.get("record_debounce_s", 30.0)))
         if meta.get("tenant_rank"):
             from repro.tenants import TenantManager
             budget_mb = meta.get("tenant_budget_mb")
@@ -138,7 +150,8 @@ class FleetWorker:
                 audit_every=adaptation.audit_every,
                 audit_probes=adaptation.audit_probes,
                 registry=self.registry, tracer=self.tracer,
-                profile=self.profile, health=self.health)
+                profile=self.profile, health=self.health,
+                recorder=self.recorder)
             # share the worker's journal so gossiped replays are recorded
             self.server.adaptation.journal = self.journal
             self.server.tenants = self.tenants
@@ -176,7 +189,7 @@ class FleetWorker:
                     policy=meta.get("policy", "cached"), jitter=jitter,
                     tenants=self.tenants, registry=self.registry,
                     tracer=self.tracer, profile=self.profile,
-                    health=self.health)
+                    health=self.health, recorder=self.recorder)
             else:
                 self.server = SolveServer(
                     init_serve_state(S0, damping, jitter=jitter,
@@ -185,7 +198,7 @@ class FleetWorker:
                     policy=meta.get("policy", "cached"), jitter=jitter,
                     tenants=self.tenants, registry=self.registry,
                     tracer=self.tracer, profile=self.profile,
-                    health=self.health)
+                    health=self.health, recorder=self.recorder)
             if meta.get("restore_dir"):
                 restored, _ = restore_serve_state(
                     meta["restore_dir"], int(meta["restore_step"]),
@@ -247,6 +260,11 @@ class FleetWorker:
             # verdict + active rules + recent events: the dispatcher's
             # fleet_health() merge and critical-skip routing feed on this
             meta["health"] = self.health.report()
+        if self.recorder is not None:
+            # bundle *paths*, not bundles: incident npz files stay on the
+            # worker's disk; the dispatcher only gathers where they are
+            # (Dispatcher.collect_incidents) for the postmortem run
+            meta["incidents"] = list(self.recorder.bundle_paths)
         self.chan.send("pong", meta)
 
     def _handle_ckpt(self, msg: Message) -> None:
@@ -348,6 +366,13 @@ class FleetWorker:
                     self.server.shutdown(drain=True)
         except BaseException:
             pass
+        if self.recorder is not None and self._terminated:
+            # SIGTERM exit: force a final bundle (debounce bypassed) so
+            # the recent past survives even a clean-looking teardown
+            try:
+                self.recorder.capture("sigterm", force=True)
+            except BaseException:
+                pass
         if self.profile is not None:
             self.profile.stop()
         self.chan.close()
@@ -356,6 +381,7 @@ class FleetWorker:
         # raising breaks the blocking recv; run() falls through to the
         # draining finally, so queued solves are still served + flushed
         self._running = False
+        self._terminated = True
         raise SystemExit(0)
 
 

@@ -216,7 +216,8 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                  layout=None, async_: bool = False, oversize: str = "split",
                  window_dtype=None, tenant_rank=None, tenant_budget_mb=None,
                  seed: int = 0, audit_every: int = 0, audit_probes: int = 2,
-                 registry=None, tracer=None, profile=None, health=None):
+                 registry=None, tracer=None, profile=None, health=None,
+                 recorder=None, record_dir=None):
     """Config → mesh → model → resident curvature window → server.
 
     The serving twin of ``build_trainer``: builds the jitted serve steps
@@ -249,12 +250,20 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
     ``health`` (``repro.obs.HealthMonitor``) attaches the numerical-health
     rule engine; ``audit_every`` runs the ``curvature.audit`` condest +
     residual probe every that many maintenance passes (0: off).
+
+    ``recorder`` (``repro.obs.FlightRecorder``) attaches the flight
+    recorder — per-request digests, cadenced state fingerprints, and
+    automatic incident bundles on health-verdict escalations;
+    ``record_dir`` is the shorthand that constructs one rooted there.
     """
     from repro.serve import (OnlineAdaptation, SolveServer,
                              TokenBudgetBatcher, init_serve_state)
 
     handles, S0 = _build_serve_front(cfg, mesh=mesh, window=window, seq=seq,
                                      score_chunk=score_chunk, seed=seed)
+    if recorder is None and record_dir is not None:
+        from repro.obs import FlightRecorder
+        recorder = FlightRecorder(str(record_dir))
     adaptation = OnlineAdaptation(refresh_every=refresh_every,
                                   drift_tol=drift_tol, drift_frac=drift_frac,
                                   jitter=jitter, audit_every=audit_every,
@@ -287,14 +296,16 @@ def build_server(cfg, *, mesh, window: int, seq: int, damping: float = 1e-3,
                                   adaptation=adaptation, policy=policy,
                                   jitter=jitter, tenants=tenants,
                                   registry=registry, tracer=tracer,
-                                  profile=profile, health=health)
+                                  profile=profile, health=health,
+                                  recorder=recorder)
     else:
         server = SolveServer(init_serve_state(S0, damping, jitter=jitter,
                                               window_dtype=window_dtype),
                              batcher=batcher, adaptation=adaptation,
                              policy=policy, jitter=jitter, tenants=tenants,
                              registry=registry, tracer=tracer,
-                             profile=profile, health=health)
+                             profile=profile, health=health,
+                             recorder=recorder)
     return server, handles
 
 
@@ -307,7 +318,7 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
                 async_workers: bool = False, worker_layout=None,
                 window_dtype=None, tenant_rank=None, tenant_budget_mb=None,
                 seed: int = 0, trace: bool = False, registry=None,
-                audit_every: int = 0, profile_dir=None):
+                audit_every: int = 0, profile_dir=None, record_dir=None):
     """Config → model → seeded window → N-process serving fleet.
 
     The fleet twin of ``build_server``: the model (score-grad pass,
@@ -345,7 +356,10 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
     residual probe every that many maintenance passes (0: off); per-
     worker health verdicts ride heartbeat pongs and merge via
     ``dispatcher.fleet_health()``. ``profile_dir``: each worker captures
-    a ``jax.profiler`` trace into ``<dir>/worker<i>/``.
+    a ``jax.profiler`` trace into ``<dir>/worker<i>/``. ``record_dir``:
+    each worker runs a flight recorder rooted at ``<dir>/worker<i>/`` —
+    incident bundle paths ride pongs and are gathered by
+    ``dispatcher.collect_incidents()``.
     """
     from repro.fleet import launch_fleet
     from repro.fleet.wire import put_blocks
@@ -364,7 +378,8 @@ def build_fleet(cfg, *, mesh, n_workers: int = 2, route: str = "round_robin",
             "tenant_budget_mb": tenant_budget_mb,
             "obs": True, "trace": bool(trace),
             "audit_every": int(audit_every),
-            "profile_dir": None if profile_dir is None else str(profile_dir)}
+            "profile_dir": None if profile_dir is None else str(profile_dir),
+            "record_dir": None if record_dir is None else str(record_dir)}
     arrays = {}
     from repro.core.operator import is_blocked
     put_blocks(arrays, meta, "S0",

@@ -10,9 +10,15 @@
   ``HealthEvent`` log + per-process ``ok``/``degraded``/``critical``
   verdicts that merge across a fleet.
 - ``profile``: optional ``jax.profiler`` hooks around the solve.
+- ``recorder``: bounded flight recorder — request digests, journal
+  tail, cadenced state fingerprints — flushed to atomic incident
+  bundles on health-verdict escalations.
+- ``forensics``: offline bundle replay, fingerprint verification and
+  first-bad-event bisection (``python -m repro.obs.forensics``).
 """
 
 from .export import prometheus_text, start_metrics_server, write_snapshot
+from .forensics import IncidentBundle, analyze, load_bundle
 from .health import (
     HealthEvent,
     HealthMonitor,
@@ -31,21 +37,26 @@ from .metrics import (
     registry,
 )
 from .profile import ProfileHooks
+from .recorder import FlightRecorder
 from .trace import Span, Tracer
 
 __all__ = [
     "Counter",
+    "FlightRecorder",
     "Gauge",
     "HealthEvent",
     "HealthMonitor",
     "HealthRule",
     "Histogram",
+    "IncidentBundle",
     "MetricsRegistry",
     "ProfileHooks",
     "Span",
     "Tracer",
+    "analyze",
     "default_buckets",
     "default_rules",
+    "load_bundle",
     "merge",
     "merge_health",
     "prometheus_text",

@@ -75,6 +75,11 @@ class _Handler(BaseHTTPRequestHandler):
         if self.extra_snapshots is not None:
             snap = merge([snap, *type(self).extra_snapshots()])
         if self.path.startswith("/metrics.json"):
+            if self.health is not None:
+                # the structured health report (verdict + active rules +
+                # recent HealthEvents) rides the JSON payload so scrapers
+                # see the events, not just the numeric verdict gauge
+                snap = {**snap, "health": type(self).health()}
             body = json.dumps(snap).encode()
             ctype = "application/json"
         elif self.path.startswith("/metrics"):
@@ -126,8 +131,17 @@ def start_metrics_server(
     return srv, srv.server_address[1]
 
 
-def write_snapshot(path: str, snapshot: dict) -> None:
-    """Atomically write a snapshot JSON (rides next to checkpoints)."""
+def write_snapshot(path: str, snapshot: dict, *, health=None) -> None:
+    """Atomically write a snapshot JSON (rides next to checkpoints).
+
+    ``health``: optional wire-safe health report dict (e.g.
+    ``HealthMonitor.report()`` or a fleet-merged view) embedded under a
+    ``"health"`` key — the structured event log would otherwise die with
+    the process. ``obs.merge`` ignores unknown keys, so an embedded
+    report never perturbs later snapshot merges.
+    """
+    if health is not None:
+        snapshot = {**snapshot, "health": health}
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)

@@ -143,6 +143,14 @@ def serve_main(argv=None):
                     help="bind an extra HTTP endpoint serving the "
                          "numerical-health report at /health (0: ephemeral "
                          "port). /health also rides --metrics-port.")
+    ap.add_argument("--record-dir", default=None, metavar="DIR",
+                    help="run the flight recorder: bounded in-memory "
+                         "request digests + journal tail + state "
+                         "fingerprints, flushed to atomic incident bundles "
+                         "under DIR on health-verdict escalations (replay "
+                         "offline with python -m repro.obs.forensics; "
+                         "--fleet: each worker records under "
+                         "DIR/worker<i>/)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -169,6 +177,13 @@ def serve_main(argv=None):
     profile = ProfileHooks(args.profile_dir) if args.profile_dir else None
     if profile is not None:
         profile.start()
+    recorder = None
+    if args.record_dir:
+        from repro.obs import FlightRecorder
+        recorder = FlightRecorder(args.record_dir)
+        # unclean-death coverage: a degraded/critical process that dies
+        # without flushing still leaves a final bundle behind
+        recorder.install_exit_capture()
 
     t0 = time.perf_counter()
     server, h = build_server(
@@ -180,7 +195,8 @@ def serve_main(argv=None):
         tenant_rank=args.tenant_rank if args.tenants else None,
         tenant_budget_mb=args.tenant_budget_mb, seed=args.seed,
         audit_every=args.audit_every,
-        registry=registry, tracer=tracer, profile=profile, health=health)
+        registry=registry, tracer=tracer, profile=profile, health=health,
+        recorder=recorder)
     endpoint_port = _start_endpoint(args, registry, health=health.report)
     kind = f"async {layout or 'replicated'}" if async_ else "eager"
     print(f"resident window factorized: n={args.window} "
@@ -247,7 +263,8 @@ def serve_main(argv=None):
                 if args.metrics_snapshot:
                     from repro.obs import write_snapshot
                     write_snapshot(args.metrics_snapshot,
-                                   registry.snapshot())
+                                   registry.snapshot(),
+                                   health=health.report())
 
     s = server.metrics.summary()
     st = server.stats
@@ -280,8 +297,14 @@ def serve_main(argv=None):
               f"-> {args.ckpt_dir}")
     if profile is not None:
         profile.stop()
+    if recorder is not None:
+        nb = len(recorder.bundle_paths)
+        print(f"flight recorder: {nb} incident bundle(s)"
+              + (f", last {recorder.bundle_paths[-1]}" if nb else "")
+              + f" ({recorder.debounced} debounced)")
     _finish_obs(args, registry.snapshot(), tracer=tracer,
-                port=endpoint_port, health=True)
+                port=endpoint_port, health=True,
+                health_report=health.report())
     if async_:
         server.shutdown()
     return server, losses
@@ -309,13 +332,16 @@ def _start_endpoint(args, registry, extra_snapshots=None, health=None):
     return port
 
 
-def _finish_obs(args, snapshot, *, tracer=None, port=None, health=False):
-    """Exit-time observability: final snapshot file, Chrome-trace export,
-    and a self-scrape of the live endpoint (proves the exposition path
-    end to end — CI asserts on the printed series count)."""
+def _finish_obs(args, snapshot, *, tracer=None, port=None, health=False,
+                health_report=None):
+    """Exit-time observability: final snapshot file (with the structured
+    health report embedded when given), Chrome-trace export, and a
+    self-scrape of the live endpoint (proves the exposition path end to
+    end — CI asserts on the printed series count)."""
     if args.metrics_snapshot:
         from repro.obs import write_snapshot
-        write_snapshot(args.metrics_snapshot, snapshot)
+        write_snapshot(args.metrics_snapshot, snapshot,
+                       health=health_report)
         print(f"metrics snapshot -> {args.metrics_snapshot}")
     if tracer is not None and args.trace_out:
         n = tracer.export(args.trace_out)
@@ -362,7 +388,8 @@ def _serve_fleet(args, cfg, mesh):
         tenant_rank=args.tenant_rank if args.tenants else None,
         tenant_budget_mb=args.tenant_budget_mb, seed=args.seed,
         trace=bool(args.trace_out), registry=registry,
-        audit_every=args.audit_every, profile_dir=args.profile_dir)
+        audit_every=args.audit_every, profile_dir=args.profile_dir,
+        record_dir=args.record_dir)
     # the endpoint folds the workers' last-pong snapshots into every
     # response — one scrape sees the whole fleet. /health merges the
     # last-seen pong verdicts (refresh=False: the HTTP thread must not
@@ -417,8 +444,10 @@ def _serve_fleet(args, cfg, mesh):
                     dispatcher.checkpoint(args.ckpt_dir, rounds)
                     if args.metrics_snapshot:
                         from repro.obs import write_snapshot
-                        write_snapshot(args.metrics_snapshot,
-                                       dispatcher.fleet_metrics())
+                        write_snapshot(
+                            args.metrics_snapshot,
+                            dispatcher.fleet_metrics(),
+                            health=dispatcher.fleet_health(refresh=False))
 
         dispatcher.reconcile()
         if not args.no_reconcile and len(dispatcher.workers) > 1:
@@ -447,13 +476,22 @@ def _serve_fleet(args, cfg, mesh):
                          f"{tp.get('spilled', 0)} spilled), "
                          f"hot {tp.get('hot', {})}")
             print(line)
+        if args.record_dir:
+            incidents = dispatcher.collect_incidents(refresh=False)
+            nb = sum(len(v) for v in incidents.values())
+            print(f"flight recorder: {nb} incident bundle(s) across "
+                  f"{len(incidents)} worker(s)")
+            for wid, paths in sorted(incidents.items()):
+                for p in paths:
+                    print(f"  worker {wid}: {p}")
         if args.ckpt_every and rounds:
             path = dispatcher.checkpoint(args.ckpt_dir, rounds)
             print(f"fleet checkpoint (per-worker ServeState + manifest) "
                   f"-> {path}")
         _finish_obs(args, dispatcher.fleet_metrics(),
                     tracer=dispatcher.tracer, port=endpoint_port,
-                    health=True)
+                    health=True,
+                    health_report=dispatcher.fleet_health(refresh=False))
     finally:
         dispatcher.shutdown()
     return dispatcher, losses

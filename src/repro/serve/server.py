@@ -61,6 +61,12 @@ class SolveResult(NamedTuple):
     latency_s: float
 
 
+def _rows_k(rows) -> int:
+    """Row count of one request's adaptation payload (digest shape tag)."""
+    first = rows[0] if isinstance(rows, (tuple, list)) else rows
+    return int(first.shape[0])
+
+
 @functools.partial(jax.jit,
                    static_argnames=("mode", "jitter", "uniform", "monitor",
                                     "refactorize", "fused"))
@@ -193,6 +199,11 @@ class SolveServer:
       health: optional ``repro.obs.HealthMonitor`` — propagated to the
         adaptation (margin/audit events) and re-evaluated per flush, so
         the verdict tracks the freshest numerical-health gauges.
+      recorder: optional ``repro.obs.FlightRecorder`` — per-request
+        digests land at the response boundary and the recorder observes
+        the state (snapshot/fingerprint cadence + verdict-transition
+        capture) once per flush, at the host sync the flush already
+        paid for.
     """
 
     def __init__(self, state: ServeState, *,
@@ -202,7 +213,7 @@ class SolveServer:
                  jitter: float = 0.0, fused: bool = True,
                  tenants=None, clock=time.perf_counter,
                  registry=None, tracer=None, profile=None, health=None,
-                 metrics_window: int = 4096):
+                 recorder=None, metrics_window: int = 4096):
         if policy not in ("cached", "refactorize"):
             raise ValueError(f"policy must be 'cached' or 'refactorize', "
                              f"got {policy!r}")
@@ -219,6 +230,7 @@ class SolveServer:
         self.tracer = tracer
         self.profile = profile
         self.health = health
+        self.recorder = recorder
         self.metrics = ServerMetrics(window=metrics_window,
                                      registry=registry, prefix="serve")
         # propagate the registry to attached components that predate it
@@ -306,6 +318,13 @@ class SolveServer:
                 self._health_gauges()
         if self.health is not None:
             self.health.evaluate()
+        if self.recorder is not None:
+            # the flush already synchronized on its solves; the recorder
+            # tick (snapshot upkeep, cadenced fingerprint, verdict-
+            # transition capture) rides the same boundary
+            self.recorder.observe(self.state, adaptation=self.adaptation,
+                                  health=self.health, registry=self.registry,
+                                  tracer=self.tracer)
         return out
 
     def _health_gauges(self) -> None:
@@ -403,6 +422,7 @@ class SolveServer:
                       "tenant": mb.tenant})
 
         results = []
+        mb_resid = float(resid) if self.recorder is not None else None
         for j, req in enumerate(mb.requests):
             xj = tuple(xb[:, j] for xb in x) if isinstance(x, (tuple, list)) \
                 else x[:, j]
@@ -410,6 +430,13 @@ class SolveServer:
                 if req.t_submit > 0.0 else None
             self.metrics.record(req.t_submit, t_done, req.tokens,
                                 queue_s=queue_s)
+            if self.recorder is not None:
+                self.recorder.record_request(
+                    req.uid, tenant=mb.tenant, damping=req.damping,
+                    tokens=req.tokens,
+                    k_rows=0 if req.rows is None else _rows_k(req.rows),
+                    latency_s=t_done - req.t_submit,
+                    residual=mb_resid if mb_resid >= 0 else None)
             if self.tracer is not None and queue_s is not None:
                 e2e_us = (t_done - req.t_submit) * 1e6
                 self.tracer.add(

@@ -15,16 +15,19 @@ on the request path ever rebuilds W from scratch.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+import hashlib
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.operator import is_blocked
+from repro.core.operator import BlockedScores, is_blocked
 from repro.core.solvers import CholFactorization, chol_factorize
 
 __all__ = ["ServeStats", "ServeState", "init_serve_state", "serve_mode",
-           "as_factorization", "save_serve_state", "restore_serve_state"]
+           "as_factorization", "save_serve_state", "restore_serve_state",
+           "serve_state_arrays", "serve_state_from_arrays"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -55,6 +58,41 @@ class ServeState(NamedTuple):
     slot: jax.Array
     age: jax.Array
     stats: ServeStats
+
+    def fingerprint(self, *, full: bool = True) -> str:
+        """blake2b digest of the window/W/L buffers (shape+dtype tagged).
+
+        The maintained-factor identity in hashable form: two states whose
+        journals diverged by even one fold hash differently, while a
+        checkpoint round-trip (or a bit-identical journal replay) hashes
+        the same. Pulls the buffers to host — call it only at sites that
+        already synchronized (flush end, maybe_refresh, checkpoint), the
+        same contract as the health gauges. ``age``/``stats`` are
+        deliberately excluded: they advance outside the fold journal, and
+        the fingerprint's job is to witness the *factor*, not traffic
+        accounting.
+
+        ``full=False`` hashes only W and L — O(n²) bytes instead of the
+        O(n·m) window, cheap enough for the flight recorder's cadenced
+        tick. Every fold and refresh rewrites L, so the light digest
+        still witnesses any factor divergence; the full one (the
+        incident bundle's bit-identity target) additionally pins the
+        window bytes. The two kinds hash into disjoint spaces (the
+        mode tag below), so a light digest never equals a full one.
+        """
+        h = hashlib.blake2b(digest_size=16)
+        h.update(b"full" if full else b"light")
+        if full:
+            arrs = (*(self.S.blocks if is_blocked(self.S) else (self.S,)),
+                    self.W, self.L)
+        else:
+            arrs = (self.W, self.L)
+        for arr in arrs:
+            a = np.ascontiguousarray(np.asarray(jax.device_get(arr)))
+            h.update(str(a.shape).encode())
+            h.update(str(a.dtype).encode())
+            h.update(a.view(np.uint8).reshape(-1))
+        return h.hexdigest()
 
 
 def _zero_stats() -> ServeStats:
@@ -145,3 +183,61 @@ def restore_serve_state(ckpt_dir, step: int, like: ServeState):
     state of the same shapes). Returns (state, metadata)."""
     from repro.checkpoint import checkpoint as ckpt
     return ckpt.restore(ckpt_dir, step, like)
+
+
+def _npz_safe(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    """numpy can't round-trip ml_dtypes through .npy — store bf16 as a
+    uint16 view and remember the logical dtype (same trick as
+    ``repro.checkpoint``)."""
+    dtype = str(arr.dtype)
+    if dtype == "bfloat16":
+        return arr.view(np.uint16), dtype
+    return arr, dtype
+
+
+def serve_state_arrays(state: ServeState) -> Tuple[dict, dict]:
+    """Flatten a ``ServeState`` to named host arrays + a JSON-safe meta
+    dict — the self-describing form the flight recorder's incident
+    bundles use (``repro.checkpoint.restore`` needs a ``like`` template;
+    an offline forensics run has none). Inverse:
+    ``serve_state_from_arrays``."""
+    blocks = state.S.blocks if is_blocked(state.S) else (state.S,)
+    names = list(state.S.names) if is_blocked(state.S) \
+        and state.S.names is not None else None
+    arrays: dict = {}
+    dtypes: dict = {}
+
+    def put(key, leaf):
+        a, dtypes[key] = _npz_safe(np.asarray(jax.device_get(leaf)))
+        arrays[key] = a
+
+    for i, b in enumerate(blocks):
+        put(f"S{i}", b)
+    put("W", state.W)
+    put("L", state.L)
+    put("lam0", state.lam0)
+    put("slot", state.slot)
+    put("age", state.age)
+    for f, v in zip(state.stats._fields, state.stats):
+        put(f"stats_{f}", v)
+    meta = {"blocked": bool(is_blocked(state.S)),
+            "n_blocks": len(blocks), "names": names, "dtypes": dtypes}
+    return arrays, meta
+
+
+def serve_state_from_arrays(arrays: dict, meta: dict) -> ServeState:
+    """Rebuild a ``ServeState`` from ``serve_state_arrays`` output."""
+    def get(key):
+        a = np.asarray(arrays[key])
+        if meta["dtypes"].get(key) == "bfloat16":
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        return jnp.asarray(a)
+
+    blocks = tuple(get(f"S{i}") for i in range(int(meta["n_blocks"])))
+    names = meta.get("names")
+    S = BlockedScores(blocks, names=tuple(names) if names else None) \
+        if meta["blocked"] else blocks[0]
+    stats = ServeStats(**{f: get(f"stats_{f}") for f in ServeStats._fields})
+    return ServeState(S=S, W=get("W"), L=get("L"), lam0=get("lam0"),
+                      slot=get("slot"), age=get("age"), stats=stats)

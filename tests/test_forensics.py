@@ -1,0 +1,458 @@
+"""Flight recorder + incident forensics.
+
+The acceptance chain this file asserts end to end: a near-rank-deficient
+burst flips the health verdict → the recorder auto-captures an incident
+bundle at the flip → offline replay of the bundle is bit-identical to
+the live state at capture → the bisection names the first offending fold
+event (seq + rule + value). Plus the satellites: ``ServeState.
+fingerprint()`` invariance/divergence properties, debounce semantics,
+and unclean-death capture (SIGTERM writes a final bundle; a SIGKILLed
+process leaves a bundle whose replay is verdict-consistent).
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.operator import BlockedScores
+from repro.obs import (
+    FlightRecorder,
+    HealthMonitor,
+    MetricsRegistry,
+    analyze,
+    load_bundle,
+)
+from repro.obs.forensics import format_postmortem
+from repro.obs.forensics import main as forensics_main
+from repro.serve import (
+    OnlineAdaptation,
+    init_serve_state,
+    restore_serve_state,
+    save_serve_state,
+)
+from repro.serve.journal import FoldJournal
+from repro.serve.state import serve_state_arrays, serve_state_from_arrays
+
+
+def _window(n=8, m=32, seed=0, poisoned=True):
+    """The CI fault-injection window: rows 4:6 dominate the Gram, so the
+    FIFO fold that retires them (fold seq 2 at k=2) removes almost all
+    factor mass and the pre-clamp downdate margin collapses."""
+    rng = np.random.default_rng(seed)
+    S = rng.normal(size=(n, m)).astype(np.float32)
+    if poisoned:
+        S[4:6] *= 100.0
+    return S
+
+
+def _drive_to_incident(record_dir, *, folds=5, damping=1e-2, seed=0,
+                       poisoned=True, **rec_kw):
+    """Fold a trace through OnlineAdaptation with health + recorder on;
+    returns (recorder, adaptation, monitor, final state, capture paths
+    by fold index)."""
+    rng = np.random.default_rng(seed + 1)
+    n, m, k = 8, 32, 2
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg)
+    ad = OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
+                          drift_frac=None, journal=FoldJournal(),
+                          registry=reg, health=mon, audit_every=1)
+    kw = dict(fingerprint_every=1, debounce_s=0.0)
+    kw.update(rec_kw)
+    rec = FlightRecorder(record_dir, **kw)
+    state = init_serve_state(jnp.asarray(_window(n, m, seed=seed,
+                                                 poisoned=poisoned)),
+                             damping)
+    captured = {}
+    for i in range(folds):
+        rows = rng.normal(size=(k, m)).astype(np.float32)
+        state = ad.fold(state, rows, record=True)
+        jax.block_until_ready(state.L)
+        state, _ = ad.maybe_refresh(state)        # one audit cadence
+        path = rec.observe(state, adaptation=ad, health=mon, registry=reg)
+        if path:
+            captured[i] = path
+    return rec, ad, mon, state, captured
+
+
+# -- ServeState.fingerprint() (satellite) ---------------------------------
+
+def test_fingerprint_checkpoint_invariant(tmp_path):
+    """A checkpoint round-trip (and the bundle array form) preserves the
+    fingerprint bit for bit; light and full digests never collide."""
+    S = jnp.asarray(_window(poisoned=False))
+    state = init_serve_state(S, 1e-2)
+    fp, fp_light = state.fingerprint(), state.fingerprint(full=False)
+    assert fp != fp_light                      # disjoint digest spaces
+
+    save_serve_state(tmp_path, 3, state)
+    restored, _ = restore_serve_state(tmp_path, 3, state)
+    assert restored.fingerprint() == fp
+    assert restored.fingerprint(full=False) == fp_light
+
+    rebuilt = serve_state_from_arrays(*serve_state_arrays(state))
+    assert rebuilt.fingerprint() == fp
+
+
+def test_fingerprint_differs_after_any_fold():
+    """Every fold (and a refresh, which rewrites L from the same window)
+    moves the digest — the light W+L digest included."""
+    rng = np.random.default_rng(7)
+    state = init_serve_state(jnp.asarray(_window(poisoned=False)), 1e-2)
+    ad = OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
+                          drift_frac=None)
+    seen_full, seen_light = {state.fingerprint()}, \
+        {state.fingerprint(full=False)}
+    for _ in range(4):
+        rows = rng.normal(size=(2, 32)).astype(np.float32)
+        state = ad.fold(state, rows)
+        fp, fpl = state.fingerprint(), state.fingerprint(full=False)
+        assert fp not in seen_full
+        assert fpl not in seen_light
+        seen_full.add(fp)
+        seen_light.add(fpl)
+
+
+@pytest.mark.parametrize("window_dtype", [None, "bfloat16"])
+def test_state_arrays_roundtrip(window_dtype, tmp_path):
+    """serve_state_arrays ⇄ serve_state_from_arrays is bit-exact for
+    fp32 and bf16 windows, dense and blocked — and survives the actual
+    npz bundle format on disk."""
+    from repro.checkpoint import load_npz_bundle, save_npz_bundle
+
+    rng = np.random.default_rng(3)
+    blocks = tuple(jnp.asarray(rng.normal(size=(8, mb)), jnp.float32)
+                   for mb in (24, 8))
+    for S in (jnp.asarray(_window(poisoned=False)),
+              BlockedScores(blocks, names=("a", "b"))):
+        state = init_serve_state(S, 1e-2, window_dtype=window_dtype)
+        arrays, meta = serve_state_arrays(state)
+        path = save_npz_bundle(tmp_path / "s.npz", arrays, {"state": meta})
+        arrs2, meta2 = load_npz_bundle(path)
+        rebuilt = serve_state_from_arrays(arrs2, meta2["state"])
+        assert rebuilt.fingerprint() == state.fingerprint()
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            state, rebuilt)
+
+
+# -- recorder capture semantics -------------------------------------------
+
+def test_recorder_captures_on_verdict_escalation(tmp_path):
+    """The poisoned burst flips the verdict at fold 2 (the FIFO fold that
+    retires the dominant seed rows); the recorder writes exactly one
+    bundle, at the flip, with the journal tail needed to replay it."""
+    rec, ad, mon, state, captured = _drive_to_incident(tmp_path)
+    assert list(captured) == [2], captured
+    assert rec.bundle_paths == [captured[2]]
+    assert os.path.exists(captured[2])
+
+    bundle = load_bundle(captured[2])
+    meta = bundle.meta
+    assert meta["reason"] == "verdict_degraded"
+    assert meta["verdict"] == "degraded"
+    assert meta["head_seq"] == 3                   # folds 0,1,2 applied
+    assert meta["snap_seq"] < meta["head_seq"]
+    assert len(bundle.journal.events) == \
+        meta["head_seq"] - meta["snap_seq"]
+    # continuous capture rode along: request digests may be empty (no
+    # server here) but fingerprints + health + metrics must be present
+    assert len(meta["fingerprints"]) >= 1
+    assert meta["health"]["verdict"] == "degraded"
+    assert meta["metrics"] is not None
+
+
+def test_recorder_healthy_trace_writes_nothing(tmp_path):
+    """A healthy trace records continuously (snapshot, fingerprints) but
+    never writes a bundle."""
+    rec, _, mon, _, captured = _drive_to_incident(tmp_path, poisoned=False)
+    assert mon.verdict() == "ok"
+    assert captured == {}
+    assert rec.bundle_paths == []
+    assert rec._snap is not None
+    assert len(rec._fingerprints) >= 5
+    assert os.listdir(tmp_path) == []          # dir never even populated
+
+
+def test_recorder_debounce_and_prune(tmp_path):
+    """Debounce: within the window only forced captures write; the keep
+    bound prunes the oldest bundle from disk."""
+    now = [1000.0]
+    rec, ad, mon, state, captured = _drive_to_incident(
+        tmp_path, debounce_s=60.0, keep=2, clock=lambda: now[0])
+    assert len(rec.bundle_paths) == 1              # the escalation capture
+
+    assert rec.capture("again") is None            # inside the window
+    assert rec.debounced == 1
+    p2 = rec.capture("forced", force=True)         # force bypasses
+    assert p2 is not None
+    now[0] += 61.0                                 # window expires
+    p3 = rec.capture("later")
+    assert p3 is not None
+    # keep=2: the first bundle was pruned, the two newest survive
+    assert rec.bundle_paths == [p2, p3]
+    assert os.path.exists(p2) and os.path.exists(p3)
+    assert not os.path.exists(captured[2])
+
+
+# -- offline forensics: replay + bisection --------------------------------
+
+def test_forensics_replay_bit_identical_and_bisects(tmp_path):
+    """The acceptance criterion: offline replay of the auto-captured
+    bundle is bit-identical to the live state at capture, every recorded
+    fingerprint verifies, and the bisection names the poisoned fold —
+    seq 2, the downdate-margin rule, value below bound."""
+    rec, ad, mon, live_state, captured = _drive_to_incident(tmp_path)
+    # fold seq 3+ advanced the live state past the capture; the bundle
+    # must reproduce the state *at* capture (head_seq 3), not the head
+    pm = analyze(load_bundle(captured[2]))
+    assert pm["bit_identical"], pm
+    assert pm["fingerprints_checked"] >= 2
+    assert pm["fingerprints_ok"] == pm["fingerprints_checked"]
+    assert pm["events_replayed"] == pm["head_seq"] - pm["snap_seq"]
+
+    fb = pm["first_bad"]
+    assert fb is not None
+    assert fb["seq"] == 2 and fb["kind"] == "fold"
+    assert fb["rule"] == "downdate_margin"
+    assert fb["series"] == "curvature.downdate_margin"
+    assert fb["value"] < fb["bound"] == 1e-3
+    assert fb["verdict"] == "degraded"
+    # the per-event timeline ends on the captured verdict
+    assert pm["timeline"][-1]["verdict"] == pm["captured_verdict"]
+
+    text = format_postmortem(pm)
+    assert "first bad event: seq=2 kind=fold rule=downdate_margin" in text
+    assert "bit_identical=True" in text
+
+
+def test_forensics_detects_tampered_tail(tmp_path):
+    """A tail that does not reproduce the live state (here: one event's
+    rows perturbed) must fail the bit-identity check — a replay that
+    diverges does not explain the incident."""
+    _, _, _, _, captured = _drive_to_incident(tmp_path)
+    bundle = load_bundle(captured[2])
+    ev = bundle.journal.events[0]
+    bundle.journal.events[0] = ev._replace(
+        rows=np.asarray(ev.rows) * (1 + 1e-3))
+    pm = analyze(bundle)
+    assert not pm["bit_identical"]
+    assert pm["fingerprints_ok"] < pm["fingerprints_checked"]
+
+
+def test_forensics_cli(tmp_path, capsys):
+    """python -m repro.obs.forensics: exit 0 on a faithful bundle, the
+    postmortem on stdout, --json writes the full timeline."""
+    _, _, _, _, captured = _drive_to_incident(tmp_path)
+    out_json = str(tmp_path / "pm.json")
+    rc = forensics_main([captured[2], "--json", out_json])
+    text = capsys.readouterr().out
+    assert rc == 0
+    assert "first bad event: seq=2 kind=fold rule=downdate_margin" in text
+    import json
+    pm = json.load(open(out_json))
+    assert pm["bit_identical"] and len(pm["timeline"]) == 2
+
+
+def test_server_flush_drives_recorder(tmp_path):
+    """Through the real server path: request digests land at the response
+    boundary and the flush-end observe keeps the snapshot fresh."""
+    from repro.serve import SolveServer, TokenBudgetBatcher
+
+    rng = np.random.default_rng(11)
+    S = jnp.asarray(_window(poisoned=False))
+    reg = MetricsRegistry()
+    mon = HealthMonitor(reg)
+    rec = FlightRecorder(tmp_path, fingerprint_every=1)
+    srv = SolveServer(
+        init_serve_state(S, 1e-2),
+        batcher=TokenBudgetBatcher(max_requests=2),
+        adaptation=OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
+                                    drift_frac=None, journal=FoldJournal()),
+        monitor_drift=False, registry=reg, health=mon, recorder=rec)
+    uids = [srv.submit(jnp.asarray(rng.normal(size=(32,)), jnp.float32))
+            for _ in range(4)]
+    results = {r.uid for r in srv.flush()}
+    assert results == set(uids)
+    assert len(rec._requests) == 4
+    assert {d["uid"] for d in rec._requests} == set(uids)
+    assert all(d["latency_s"] is not None for d in rec._requests)
+    assert rec._snap is not None and len(rec._fingerprints) >= 1
+    assert rec.bundle_paths == []                  # healthy
+
+
+def test_async_server_drives_recorder(tmp_path):
+    """The async front end mirrors the eager hookup: digests at the
+    response boundary, observe at the maintenance boundary."""
+    from repro.dist.server import AsyncSolveServer
+    from repro.serve import TokenBudgetBatcher
+
+    rng = np.random.default_rng(13)
+    S = jnp.asarray(_window(poisoned=False))
+    reg = MetricsRegistry()
+    rec = FlightRecorder(tmp_path, fingerprint_every=1)
+    srv = AsyncSolveServer(
+        init_serve_state(S, 1e-2),
+        batcher=TokenBudgetBatcher(max_requests=2),
+        adaptation=OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
+                                    drift_frac=None, journal=FoldJournal()),
+        monitor_drift=False, registry=reg,
+        health=HealthMonitor(reg), recorder=rec)
+    try:
+        rows = jnp.asarray(rng.normal(size=(2, 32)) / np.sqrt(32),
+                           jnp.float32)
+        uids = [srv.submit(jnp.asarray(rng.normal(size=(32,)), jnp.float32),
+                           rows=rows if i == 1 else None)
+                for i in range(4)]
+        assert {r.uid for r in srv.flush()} == set(uids)
+    finally:
+        srv.shutdown()
+    assert {d["uid"] for d in rec._requests} == set(uids)
+    assert rec._snap is not None
+    assert rec.bundle_paths == []                  # healthy
+
+
+# -- unclean-death capture (satellite) ------------------------------------
+
+_CHILD = textwrap.dedent("""\
+    import os, sys
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.obs import FlightRecorder, HealthMonitor, MetricsRegistry
+    from repro.serve import OnlineAdaptation, init_serve_state
+    from repro.serve.journal import FoldJournal
+
+    mode, record_dir = sys.argv[1], sys.argv[2]
+    rng = np.random.default_rng(1)
+    n, m, k = 8, 32, 2
+    S = rng.normal(size=(n, m)).astype(np.float32)
+    S[4:6] *= 100.0
+    reg = MetricsRegistry(); mon = HealthMonitor(reg)
+    ad = OnlineAdaptation(refresh_every=10 ** 9, drift_tol=None,
+                          drift_frac=None, journal=FoldJournal(),
+                          registry=reg, health=mon, audit_every=1)
+    rec = FlightRecorder(record_dir, fingerprint_every=1, debounce_s=0.0)
+    if mode == "sigterm":
+        import signal
+        def on_term(sig, frame):
+            rec.capture("sigterm", force=True)     # the worker drain path
+            os._exit(0)
+        signal.signal(signal.SIGTERM, on_term)
+    state = init_serve_state(jnp.asarray(S), 1e-2)
+    for i in range(3):                             # degrades at fold 2
+        rows = rng.normal(size=(k, m)).astype(np.float32)
+        state = ad.fold(state, rows)
+        jax.block_until_ready(state.L)
+        state, _ = ad.maybe_refresh(state)
+        rec.observe(state, adaptation=ad, health=mon, registry=reg)
+    print("LIVE", state.fingerprint(), flush=True)
+    while True:                                    # "mid-trace": parent kills
+        import time; time.sleep(0.1)
+""")
+
+
+def _spawn_child(mode, record_dir):
+    env = {**os.environ, "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": os.pathsep.join(
+               [p for p in (os.path.join(os.path.dirname(__file__), os.pardir,
+                                         "src"),
+                            os.environ.get("PYTHONPATH")) if p])}
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _CHILD, mode, str(record_dir)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
+    line = proc.stdout.readline().split()          # blocks until LIVE
+    assert line and line[0] == "LIVE", proc.stderr.read()
+    return proc, line[1]
+
+
+@pytest.mark.slow
+def test_sigkill_survivor_bundle_replays_verdict_consistent(tmp_path):
+    """SIGKILL mid-trace: no exit hook runs, but the bundle auto-captured
+    at the earlier verdict flip survives on disk — and its offline replay
+    is bit-identical to the (now dead) process's live state at capture,
+    ending on the captured verdict with the poisoned fold named."""
+    proc, live_fp = _spawn_child("sigkill", tmp_path)
+    try:
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(timeout=60)
+    finally:
+        proc.kill()
+    assert proc.returncode == -signal.SIGKILL
+
+    bundles = sorted(tmp_path.glob("incident_*.npz"))
+    assert len(bundles) == 1, bundles
+    pm = analyze(load_bundle(bundles[0]))
+    assert pm["bit_identical"]
+    # capture happened at the degradation head (seq 3 == the child's last
+    # fold), so the replayed state IS the dead process's final state
+    assert pm["replay_fingerprint"] == live_fp
+    assert pm["timeline"][-1]["verdict"] == pm["captured_verdict"] \
+        == "degraded"
+    assert pm["first_bad"]["seq"] == 2
+    assert pm["first_bad"]["rule"] == "downdate_margin"
+
+
+@pytest.mark.slow
+def test_sigterm_writes_final_bundle(tmp_path):
+    """SIGTERM: the drain path forces a final bundle past the debounce —
+    the capture carries the head at death, replayable like any other."""
+    proc, live_fp = _spawn_child("sigterm", tmp_path)
+    # absorb the escalation bundle's mtime before the final one lands
+    before = set(tmp_path.glob("incident_*.npz"))
+    try:
+        os.kill(proc.pid, signal.SIGTERM)
+        proc.wait(timeout=60)
+    finally:
+        proc.kill()
+    assert proc.returncode == 0
+    final = [p for p in tmp_path.glob("incident_*.npz")
+             if p not in before or "sigterm" in p.name]
+    assert any("sigterm" in p.name for p in final), \
+        sorted(p.name for p in tmp_path.glob("*"))
+    term = [p for p in final if "sigterm" in p.name][0]
+    pm = analyze(load_bundle(term))
+    assert pm["bit_identical"]
+    assert pm["replay_fingerprint"] == live_fp
+    assert pm["reason"] == "sigterm"
+
+
+@pytest.mark.slow
+def test_fleet_worker_sigterm_capture_and_collect_incidents(tmp_path):
+    """Through the real fleet path: workers run per-worker recorders
+    (record_dir init meta), bundle paths ride heartbeat pongs into
+    Dispatcher.collect_incidents(), and a SIGTERMed worker leaves a
+    final bundle under its own subdirectory."""
+    from repro.fleet import launch_fleet
+
+    rng = np.random.default_rng(5)
+    n, m, k = 8, 96, 2
+    S = (rng.normal(size=(n, m)) / np.sqrt(m)).astype(np.float32)
+    disp = launch_fleet(1, init_meta={"mode": "inline", "damping": 0.1,
+                                      "max_requests": k,
+                                      "refresh_every": 10 ** 6,
+                                      "drift_frac": None, "obs": True,
+                                      "record_dir": str(tmp_path)},
+                        init_arrays={"S0": S}, gossip=False)
+    try:
+        for _ in range(4):
+            disp.submit(rng.normal(size=(m,)).astype(np.float32))
+        assert len(disp.flush(timeout=300)) == 4
+        assert disp.collect_incidents() == {}      # healthy: no bundles
+        w = disp.workers[0]
+        os.kill(w.proc.pid, signal.SIGTERM)
+        w.proc.wait(timeout=120)
+        wdir = tmp_path / "worker0"
+        bundles = sorted(wdir.glob("incident_*sigterm*.npz"))
+        assert len(bundles) == 1, sorted(p.name for p in wdir.glob("*"))
+        pm = analyze(load_bundle(bundles[0]))
+        assert pm["bit_identical"]
+        assert pm["reason"] == "sigterm"
+    finally:
+        disp.shutdown(timeout=60)
